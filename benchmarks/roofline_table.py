@@ -1,0 +1,52 @@
+"""Render the §Roofline markdown table from dry-run JSON records.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline_table [--records results/dryrun]
+"""
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, SHAPES
+
+
+def fmt_ms(v: float) -> str:
+    if v >= 1000:
+        return f"{v/1000:.1f}s"
+    if v >= 1:
+        return f"{v:.0f}ms"
+    return f"{v:.2f}ms"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--records", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "step | useful | roofline% | GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            p = os.path.join(args.records, f"{arch}_{shape}_{args.mesh}.json")
+            if not os.path.exists(p):
+                continue
+            r = json.load(open(p))
+            if "skipped" in r:
+                print(f"| {arch} | {shape} | — | — | — | skipped | — | — | — | — |")
+                continue
+            if "error" in r:
+                print(f"| {arch} | {shape} | — | — | — | ERROR | — | — | — | — |")
+                continue
+            rr = r["roofline"]
+            print(f"| {arch} | {shape} | {fmt_ms(rr['compute_ms'])} "
+                  f"| {fmt_ms(rr['memory_ms'])} | {fmt_ms(rr['collective_ms'])} "
+                  f"| {rr['dominant']} | {fmt_ms(rr['step_ms'])} "
+                  f"| {rr['useful_flops_frac']:.2f} "
+                  f"| {100*rr['roofline_frac']:.2f}% "
+                  f"| {rr['bytes_per_device_gb']:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

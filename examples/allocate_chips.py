@@ -1,0 +1,48 @@
+"""TASQ-for-TPU: PCC-driven chip allocation from dry-run artifacts.
+
+This is the paper's contribution wired into the launcher: for each
+(architecture x input shape) job, the dry-run's roofline terms become a
+step-time-vs-chips performance characteristic curve; the §2.1 policy picks
+the optimal (not peak) chip count.
+
+Requires dry-run records (python -m repro.launch.dryrun --all --out
+results/dryrun). Run:
+
+  PYTHONPATH=src python examples/allocate_chips.py --records results/dryrun
+"""
+import argparse
+import glob
+import json
+import os
+
+from repro.core.chip_allocator import allocate_chips, load_dryrun_record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--records", default="results/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--min-gain", type=float, default=0.005,
+                    help="required relative step-time gain per chip-fraction")
+    args = ap.parse_args()
+
+    files = sorted(glob.glob(os.path.join(args.records,
+                                          f"*_{args.mesh}.json")))
+    if not files:
+        raise SystemExit(f"no dry-run records under {args.records} "
+                         f"(run python -m repro.launch.dryrun --all first)")
+
+    print(f"{'arch':22s} {'shape':12s} {'chips*':>7s} {'PCC a':>8s} "
+          f"{'step@opt':>10s} {'bound':>11s}")
+    for f in files:
+        rec = json.load(open(f))
+        if "error" in rec or "skipped" in rec:
+            continue
+        alloc = allocate_chips(rec, min_gain=args.min_gain)
+        print(f"{rec['arch']:22s} {rec['shape']:12s} {alloc.chips:>7d} "
+              f"{alloc.pcc_a:>8.3f} {alloc.predicted_step_s*1e3:>8.1f}ms "
+              f"{alloc.dominant_at_choice:>11s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""TASQ core — the paper's primary contribution as a composable library.
+
+  arepas     — Area-Preserving Allocation Simulator (Algorithm 1)
+  pcc        — performance characteristic curve: fit / predict / optimal point
+  featurize  — job-level, operator-level, and graph featurization
+  dataset    — observed runs -> AREPAS augmentation -> model-ready tensors
+  models     — from-scratch GBDT ("XGBoost"), NN, SimGNN-style GNN
+  losses     — LF1 / LF2 / LF3 constrained losses
+  curves     — XGBoost SS / PL curve assembly from point predictions
+  evaluate   — the three paper metrics (pattern / param MAE / runtime AE)
+  selection  — §5.1 stratified job-selection for ground-truth gathering
+  allocator  — optimal-token policies + Figure 2 reduction CDF
+  pipeline   — end-to-end orchestration (build -> train -> evaluate)
+"""
+from repro.core import arepas, curves, evaluate, featurize, losses, pcc, selection
+from repro.core.allocator import (
+    AllocationPolicy,
+    choose_tokens,
+    min_tokens_within_slowdown,
+    token_reduction_cdf,
+)
+from repro.core.dataset import TasqDataset, build_dataset
+from repro.core.pipeline import TasqConfig, TasqPipeline
+
+__all__ = [
+    "arepas", "curves", "evaluate", "featurize", "losses", "pcc", "selection",
+    "AllocationPolicy", "choose_tokens", "min_tokens_within_slowdown",
+    "token_reduction_cdf", "TasqDataset", "build_dataset",
+    "TasqConfig", "TasqPipeline",
+]

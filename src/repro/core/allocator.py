@@ -1,0 +1,88 @@
+"""Optimal token allocation from a PCC (paper §1-2, Figure 2/3).
+
+Two allocation policies:
+  * marginal-gain cut-off (§2.1): keep adding tokens while each additional
+    token still buys >= ``min_gain`` relative runtime improvement; for the
+    power law this closes to A* = |a| / min_gain;
+  * bounded-slowdown: the smallest allocation whose (predicted or simulated)
+    runtime stays within ``max_slowdown`` of the full-allocation runtime —
+    this is the policy behind Figure 2's "5% performance loss" curve.
+
+``token_reduction_cdf`` reproduces Figure 2 directly from AREPAS-simulated
+skylines (the "(estimated) impact" of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import arepas
+from repro.core.pcc import optimal_tokens, pcc_runtime
+
+__all__ = ["AllocationPolicy", "choose_tokens", "min_tokens_within_slowdown",
+           "token_reduction_cdf"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationPolicy:
+    min_gain: float = 0.01          # stop when +1 token gains < 1% runtime
+    max_slowdown: float = 0.0       # acceptable runtime increase vs full alloc
+    min_tokens: int = 1
+    max_tokens: int = 6287
+
+
+def choose_tokens(a: float, b: float, policy: AllocationPolicy,
+                  observed_tokens: Optional[int] = None) -> int:
+    """Pick the allocation for a job from its (predicted) PCC parameters."""
+    hi = policy.max_tokens if observed_tokens is None else observed_tokens
+    t_gain = optimal_tokens(a, b, gain_threshold=policy.min_gain,
+                            lo=policy.min_tokens, hi=hi)
+    if policy.max_slowdown <= 0:
+        return t_gain
+    # bounded slowdown relative to the full (observed/max) allocation
+    base = pcc_runtime(a, b, hi)
+    lo, hi_s = policy.min_tokens, hi
+    while lo < hi_s:                      # smallest A with rt <= (1+s) * base
+        mid = (lo + hi_s) // 2
+        if pcc_runtime(a, b, mid) <= (1.0 + policy.max_slowdown) * base:
+            hi_s = mid
+        else:
+            lo = mid + 1
+    return max(min(t_gain, policy.max_tokens), lo)
+
+
+def min_tokens_within_slowdown(skyline: np.ndarray, observed_tokens: int,
+                               max_slowdown: float) -> int:
+    """Smallest allocation whose AREPAS-simulated runtime stays within
+    (1 + max_slowdown) of the observed runtime. Exact bisection: AREPAS
+    runtime is non-increasing in the allocation."""
+    base = len(skyline)
+    limit = (1.0 + max_slowdown) * base
+    lo, hi = 1, max(observed_tokens, 1)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if arepas.simulate_runtime(skyline, mid) <= limit:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
+def token_reduction_cdf(skylines: Sequence[np.ndarray],
+                        observed_tokens: Sequence[int],
+                        max_slowdown: float = 0.0,
+                        grid: int = 101) -> Tuple[np.ndarray, np.ndarray]:
+    """Figure 2: CDF of potential token-request reduction.
+
+    Returns (reduction_grid in [0,1], fraction of jobs achieving >= r).
+    """
+    reductions = []
+    for sky, tok in zip(skylines, observed_tokens):
+        best = min_tokens_within_slowdown(sky, tok, max_slowdown)
+        reductions.append(1.0 - best / max(tok, 1))
+    reductions = np.asarray(reductions)
+    r = np.linspace(0, 1, grid)
+    frac = (reductions[None, :] >= r[:, None]).mean(1)
+    return r, frac

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention — causal+GQA online-softmax attention (train/prefill)
+  ssd             — Mamba-2 SSD chunk scan (ssm/hybrid archs)
+  skyline         — bulk AREPAS skyline simulation (TASQ data augmentation)
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+interpret=True executes the kernel body on CPU for correctness testing.
+"""
+from repro.kernels.ops import arepas_runtimes, flash_attention, ssd_scan
+
+__all__ = ["arepas_runtimes", "flash_attention", "ssd_scan"]

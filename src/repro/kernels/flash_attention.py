@@ -1,0 +1,130 @@
+"""Flash attention Pallas TPU kernel (causal + GQA).
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+  * tiling targets VMEM, not shared memory: one (block_q, d) query tile and a
+    streamed (block_k, d) K/V tile live in VMEM; the online-softmax
+    accumulator (acc, m, l) sits in VMEM scratch in f32;
+  * the k-block loop is the innermost *grid* dimension — TPU grids execute
+    sequentially per core, so scratch carries state across k blocks (the TPU
+    equivalent of a CUDA thread-block loop);
+  * matmul tiles are MXU-aligned: block_q/block_k default to 512 (multiples
+    of 128); head_dim should be 64/128 (the model zoo's head dims);
+  * GQA is expressed in the BlockSpec index_map (kv head = q head // group),
+    so grouped q heads re-stream the same K/V tile from HBM instead of
+    materializing repeated K/V (the XLA baseline broadcasts (B,S,Hq,D) K/V).
+
+Causal skipping is structural: k blocks entirely in the causal future are
+skipped with pl.when — ~2x FLOP saving over the dense-masked baseline, and
+the (S, S) score matrix never exists in HBM (the XLA baseline writes it).
+
+VMEM budget at defaults (block_q=block_k=512, d=128):
+  q/k/v tiles 3 * 512*128*2B = 384 KiB, acc 512*128*4B = 256 KiB,
+  m/l 2 * 512*4B = 4 KiB -> ~0.7 MiB of ~16 MiB VMEM. Double-buffered
+  streaming of k/v by the pipeline still fits comfortably.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+__all__ = ["flash_attention_bhsd", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K"]
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  causal: bool, scale: float, block_q: int, block_k: int,
+                  num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # skip k blocks entirely in the causal future of this q block
+    live = (k_start <= q_start + block_q - 1) if causal else True
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True,
+                         block_q: int = DEFAULT_BLOCK_Q,
+                         block_k: int = DEFAULT_BLOCK_K,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D). Returns (B, Hq, S, D).
+
+    Requires S % block sizes == 0 and Hq % Hkv == 0 (GQA groups).
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=scale, block_q=block_q,
+        block_k=block_k, num_k_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # m (row max)
+            pltpu.VMEM((block_q,), jnp.float32),     # l (row denom)
+        ],
+        interpret=interpret,
+    )(q, k, v)

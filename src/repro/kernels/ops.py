@@ -1,0 +1,115 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each wrapper handles layout (the model zoo uses (B, S, H, D); kernels take
+(B, H, S, D)), dtype promotion, and backend dispatch: on the CPU container
+kernels run in interpret mode (Python-level execution of the kernel body —
+the correctness contract); on TPU they compile via Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import skyline as _sky
+from repro.kernels import ssd as _ssd
+
+__all__ = ["flash_attention", "ssd_scan", "arepas_runtimes"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ------------------------------------------------------------- attention ---
+# Autodiff: Pallas kernels carry no JVP rule, so training wires through a
+# custom_vjp — forward is the kernel; backward recomputes through the
+# reference formulation under XLA (flash-style backward Pallas kernel is the
+# natural next step on real hardware; the roofline analysis accounts for the
+# forward kernel only).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention(q, k, v, causal, block_q, block_k, interpret):
+    qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    out = _fa.flash_attention_bhsd(qt, kt, vt, causal=causal,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _ref_attention_bshd(q, k, v, causal):
+    from repro.kernels.ref import attention_ref_bhsd
+    qt, kt, vt = (jnp.swapaxes(t, 1, 2) for t in (q, k, v))
+    return jnp.swapaxes(attention_ref_bhsd(qt, kt, vt, causal=causal), 1, 2)
+
+
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    return _flash_attention(q, k, v, causal, block_q, block_k, interpret), (q, k, v)
+
+
+def _flash_bwd(causal, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c: _ref_attention_bshd(a, b, c, causal),
+                     q, k, v)
+    return vjp(g)
+
+
+_flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, S, Hq, D); k/v: (B, S, Hkv, D). Returns (B, S, Hq, D)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _flash_attention(q, k, v, causal, block_q, block_k, interpret)
+
+
+# ------------------------------------------------------------------- SSD ---
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _ssd_scan(x, dt, A, Bm, Cm, chunk, interpret):
+    return _ssd.ssd_chunk_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                               interpret=interpret)
+
+
+def _ssd_ref(x, dt, A, Bm, Cm, chunk):
+    from repro.models.layers import ssd_chunked
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)[0]
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, chunk, interpret):
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk, interpret), (x, dt, A, Bm, Cm)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(lambda *a: _ssd_ref(*a, chunk), x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+_ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 128,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Mamba-2 SSD over (B, S, H, P) values; see kernels/ssd.py."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("time_block", "interpret"))
+def arepas_runtimes(skylines: jax.Array, valid_lens: jax.Array,
+                    allocs: jax.Array, *, time_block: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Bulk AREPAS: (J, Smax) x (J, K) -> (J, K) simulated runtimes."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _sky.skyline_runtimes(skylines, valid_lens, allocs,
+                                 time_block=time_block, interpret=interpret)

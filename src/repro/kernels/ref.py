@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These are deliberately simple, unfused, f32-accumulating implementations —
+no performance tricks — so kernel tests compare against unambiguous math.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref_bhsd", "ssd_ref", "skyline_runtime_ref"]
+
+
+def attention_ref_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool = True) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, S, D) — dense masked attention."""
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    kq = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq)
+    s = s / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array) -> jax.Array:
+    """Sequential SSD recurrence oracle (no chunking).
+
+    x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,N) -> y: (B,S,H,P).
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t B_t^T ; y_t = h_t C_t.
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                      # (B,H,P),(B,H),(B,N),(B,N)
+        da = jnp.exp(dtt.astype(jnp.float32) * A[None, :])   # (B,H)
+        contrib = jnp.einsum("bhp,bn->bhpn",
+                             (xt * dtt[..., None]).astype(jnp.float32),
+                             bt.astype(jnp.float32))
+        h = h * da[..., None, None] + contrib
+        y = jnp.einsum("bhpn,bn->bhp", h, ct.astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def skyline_runtime_ref(skyline, valid_len, new_alloc):
+    """Oracle for the skyline-simulation kernel = the AREPAS jnp reference."""
+    from repro.core.arepas import simulate_runtime_jax
+    return simulate_runtime_jax(skyline, valid_len, new_alloc)

@@ -1,0 +1,130 @@
+"""Bulk AREPAS skyline simulation as a Pallas TPU kernel.
+
+The paper's data-augmentation pass is the TASQ pipeline's data-path hot
+spot: every job x every allocation grid point needs an Algorithm-1 runtime
+(production: O(100k jobs/day) x K allocations x ~1e3-1e5-second skylines).
+Each (job, alloc) simulation is a *segmented reduction* over the skyline —
+embarrassingly parallel across (job, alloc) and streamable along time.
+
+TPU adaptation (vs the sequential CPU loop):
+  * grid (jobs, allocs, time-blocks), time innermost: the open-section
+    carry (running over-cap area, previous over-flag, runtime accumulator)
+    lives in SMEM-like VMEM scratch across time blocks;
+  * section detection inside a block is data-parallel VPU work (sign
+    changes -> cumsum section ids); section areas use a one-hot matmul
+    (T x T on the MXU) instead of a scatter — TPUs hate scatters;
+  * completed over-cap sections contribute floor(area/alloc) seconds;
+    under-cap seconds contribute their count; a section still open at the
+    block edge is carried, and flushed at the final block.
+
+Exactness: integer skylines keep every quantity < 2^24 exactly in f32; the
+floor(. + 1e-6) nudge makes the f32 division agree with the f64 oracle
+(see core/arepas.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["skyline_runtimes"]
+
+DEFAULT_TIME_BLOCK = 512
+
+
+def _skyline_kernel(sky_ref, len_ref, alloc_ref, out_ref, carry_ref, *,
+                    tblock: int, n_tblocks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    s = sky_ref[0].astype(jnp.float32)                    # (T,)
+    nt = alloc_ref[0, 0].astype(jnp.float32)              # ()
+    vlen = len_ref[0].astype(jnp.int32)                   # ()
+
+    t0 = it * tblock
+    idx = t0 + jax.lax.iota(jnp.int32, tblock)
+    valid = idx < vlen
+    over = (s > nt) & valid
+
+    prev_over = carry_ref[0] > 0.5
+    open_area = carry_ref[1]
+    acc = carry_ref[2]
+
+    # Carried over-section: if it ends exactly at the block boundary, flush
+    # it now; if it continues into element 0, merge its area into segment 0.
+    closes_at_edge = prev_over & ~over[0]
+    continues = prev_over & over[0]
+    acc = acc + jnp.where(closes_at_edge,
+                          jnp.floor(open_area / nt + 1e-6), 0.0)
+
+    # section ids within the block (change[0] := 0, so ids are in [0, T-1])
+    prev = jnp.concatenate([over[:1], over[:-1]])
+    change = (over != prev).astype(jnp.int32)
+    seg_id = jnp.cumsum(change)                           # (T,)
+
+    # per-segment over-area via one-hot matmul (MXU, no scatter)
+    seg_ids = jax.lax.iota(jnp.int32, tblock)
+    onehot = (seg_id[None, :] == seg_ids[:, None])
+    areas = jax.lax.dot_general(
+        onehot.astype(jnp.float32), jnp.where(over, s, 0.0),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)  # (T,)
+    seg_over = jax.lax.dot_general(
+        onehot.astype(jnp.float32), over.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32) > 0.5
+
+    # merge the continuing carried area into segment 0
+    areas = areas + jnp.where((seg_ids == 0) & continues, open_area, 0.0)
+
+    last_seg = seg_id[-1]
+    is_open = (seg_ids == last_seg) & over[-1]            # still-running over
+    closed_over = seg_over & ~is_open
+
+    acc = acc + jnp.sum(jnp.where(closed_over,
+                                  jnp.floor(areas / nt + 1e-6), 0.0))
+    acc = acc + jnp.sum((~over & valid).astype(jnp.float32))
+
+    new_open = jnp.sum(jnp.where(is_open, areas, 0.0))
+    carry_ref[0] = over[-1].astype(jnp.float32)
+    carry_ref[1] = new_open
+    carry_ref[2] = acc
+
+    @pl.when(it == n_tblocks - 1)
+    def _finalize():
+        final = carry_ref[2] + jnp.where(
+            carry_ref[0] > 0.5,
+            jnp.floor(carry_ref[1] / nt + 1e-6), 0.0)
+        out_ref[0, 0] = final.astype(jnp.int32)
+
+
+def skyline_runtimes(skylines: jax.Array, valid_lens: jax.Array,
+                     allocs: jax.Array, *, time_block: int = DEFAULT_TIME_BLOCK,
+                     interpret: bool = False) -> jax.Array:
+    """(J, Smax) skylines x (J, K) allocations -> (J, K) int32 runtimes."""
+    J, Smax = skylines.shape
+    K = allocs.shape[1]
+    tb = min(time_block, Smax)
+    assert Smax % tb == 0, (Smax, tb)
+    ntb = Smax // tb
+
+    kernel = functools.partial(_skyline_kernel, tblock=tb, n_tblocks=ntb)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(J, K, ntb),
+        in_specs=[
+            pl.BlockSpec((1, tb), lambda j, k, t: (j, t)),
+            pl.BlockSpec((1,), lambda j, k, t: (j,)),
+            pl.BlockSpec((1, 1), lambda j, k, t: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda j, k, t: (j, k)),
+        out_shape=jax.ShapeDtypeStruct((J, K), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((3,), jnp.float32)],
+        interpret=interpret,
+    )(skylines.astype(jnp.float32), valid_lens.astype(jnp.int32),
+      allocs.astype(jnp.float32))

@@ -1,0 +1,10 @@
+from repro.launch.elastic import ElasticController, MeshPlan
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh, mesh_chips
+
+__all__ = [
+    "ElasticController",
+    "MeshPlan",
+    "make_production_mesh",
+    "make_smoke_mesh",
+    "mesh_chips",
+]

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   512 placeholder host devices back both the 16x16 single-pod mesh and the
+#   2x16x16 multi-pod mesh. Never set this outside the dry-run.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input-shape x mesh) cell:
+  1. build the production mesh (launch/mesh.py),
+  2. lower the train/prefill/decode step against ShapeDtypeStruct inputs
+     with explicit in_shardings (zero allocation),
+  3. ``.compile()`` — GSPMD partitioning must succeed: sharding mismatches,
+     compile-time OOM, or unsupported collectives are bugs in our system,
+  4. record memory_analysis / cost_analysis / the collective schedule parsed
+     from the optimized HLO into a JSON report for §Roofline.
+
+Calibrated roofline costs: XLA's cost_analysis counts a ``lax.scan`` body
+ONCE, not x trip-count, so the scanned production graph under-reports
+FLOPs/bytes/collectives by ~num_layers. The gate compile (scan, full depth)
+stays authoritative for sharding + memory fit; roofline terms come from
+small UNROLLED probe compiles at 1 and 2 layer-units extrapolated linearly:
+cost(L) = cost(1u) + (L/u - 1) * (cost(2u) - cost(1u)). Hybrid archs use
+u = attn_period (the repeating unit); enc-dec probes encoder and decoder
+depth independently.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all --multi-pod both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.configs import ARCH_IDS, ModelConfig, SHAPES, cell_is_runnable, get_config, get_shape
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models import model_api
+from repro.roofline import model_flops, parse_hlo_collectives, roofline_terms
+from repro.train.steps import (
+    batch_shardings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_state_specs,
+    make_train_step,
+    state_shardings,
+)
+
+
+def _cost_get(cost: Dict[str, float], key: str) -> float:
+    return float(cost.get(key, 0.0)) if cost else 0.0
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+def _compile_cell(cfg: ModelConfig, shape, mesh) -> Tuple[Any, float, float]:
+    """Lower + compile one step function; returns (compiled, t_lower, t_compile)."""
+    if shape.kind == "train":
+        step = make_train_step(cfg, mesh)
+        args = (make_train_state_specs(cfg), model_api.input_specs(cfg, shape))
+        in_sh = (state_shardings(cfg, mesh), batch_shardings(cfg, shape, mesh))
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh)
+        args = (model_api.specs(cfg), model_api.input_specs(cfg, shape))
+        in_sh = (model_api.shardings(cfg, mesh), batch_shardings(cfg, shape, mesh))
+    else:  # decode
+        step = make_decode_step(cfg, mesh)
+        args = (model_api.specs(cfg), model_api.input_specs(cfg, shape))
+        in_sh = (model_api.shardings(cfg, mesh), batch_shardings(cfg, shape, mesh))
+    t0 = time.time()
+    lowered = jax.jit(step, in_shardings=in_sh).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    return compiled, t_lower, time.time() - t0
+
+
+def _costs_of(compiled) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_hlo_collectives(hlo)
+    return {
+        "flops": _cost_get(cost, "flops"),
+        "bytes": _cost_get(cost, "bytes accessed"),
+        "coll": coll,
+        "coll_bytes": float(sum(v["bytes"] for v in coll.values())),
+    }
+
+
+def _extrapolate(base: Dict, *deltas: Tuple[Dict, float]) -> Dict:
+    """cost(full) = cost(base probe) + sum_i n_extra_i * (probe_i - base)."""
+    out = {"flops": base["flops"], "bytes": base["bytes"],
+           "coll_bytes": base["coll_bytes"], "coll": {}}
+    for k in ("flops", "bytes", "coll_bytes"):
+        for d, n in deltas:
+            out[k] += n * max(d[k] - base[k], 0.0)
+    for kind in base["coll"]:
+        b = base["coll"][kind]["bytes"]
+        c = base["coll"][kind]["count"]
+        for d, n in deltas:
+            b += n * max(d["coll"][kind]["bytes"] - base["coll"][kind]["bytes"], 0.0)
+            c += n * max(d["coll"][kind]["count"] - base["coll"][kind]["count"], 0)
+        out["coll"][kind] = {"bytes": b, "count": c}
+    return out
+
+
+def calibrated_costs(cfg: ModelConfig, shape, mesh) -> Dict[str, Any]:
+    """Unrolled 1-unit/2-unit probe compiles -> full-depth roofline costs.
+
+    Probes also force grad_accum=1: the microbatch scan is one more loop
+    cost_analysis would count once, and N microbatches of B/N tokens do the
+    same total work per step as one full-batch step. The gate compile keeps
+    the real grad_accum (memory fit is where microbatching matters).
+    """
+    cfg = dataclasses.replace(cfg, grad_accum=1)
+    if cfg.family == "encdec":
+        mk = lambda e, d: dataclasses.replace(
+            cfg, encoder_layers=e, num_layers=d, scan_layers=False)
+        c11 = _costs_of(_compile_cell(mk(1, 1), shape, mesh)[0])
+        c21 = _costs_of(_compile_cell(mk(2, 1), shape, mesh)[0])
+        c12 = _costs_of(_compile_cell(mk(1, 2), shape, mesh)[0])
+        return _extrapolate(c11,
+                            (c21, cfg.encoder_layers - 1),
+                            (c12, cfg.num_layers - 1))
+    unit = cfg.attn_period if cfg.family == "hybrid" else 1
+    mk = lambda L: dataclasses.replace(cfg, num_layers=L, scan_layers=False)
+    c1 = _costs_of(_compile_cell(mk(unit), shape, mesh)[0])
+    c2 = _costs_of(_compile_cell(mk(2 * unit), shape, mesh)[0])
+    return _extrapolate(c1, (c2, cfg.num_layers / unit - 1))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               cfg_override: Optional[ModelConfig] = None,
+               dump_hlo: Optional[str] = None,
+               calibrate: bool = True,
+               optimized: bool = False) -> Dict[str, Any]:
+    """Lower+compile one cell; return the §Dry-run/§Roofline record."""
+    cfg = (cfg_override if cfg_override is not None
+           else get_config(arch, optimized=optimized, multi_pod=multi_pod))
+    shape = get_shape(shape_name)
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why,
+                "mesh": "2x16x16" if multi_pod else "16x16"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    mesh_name = "x".join(str(v) for v in mesh.shape.values())
+
+    # gate compile: full depth, scanned — sharding correctness + memory fit
+    compiled, t_lower, t_compile = _compile_cell(cfg, shape, mesh)
+    gate_costs = _costs_of(compiled)
+    if dump_hlo:
+        with open(dump_hlo, "w") as f:
+            f.write(compiled.as_text())
+    mem = _memory_analysis_dict(compiled)
+
+    # calibrated roofline costs (scan bodies counted once otherwise)
+    costs = calibrated_costs(cfg, shape, mesh) if calibrate else gate_costs
+
+    rep = roofline_terms(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=costs["flops"], hlo_bytes=costs["bytes"],
+        coll_bytes=costs["coll_bytes"],
+        model_flops=model_flops(cfg, shape),
+        bytes_per_device=float(mem.get("argument_size_in_bytes", 0.0))
+        + float(mem.get("temp_size_in_bytes", 0.0)),
+    )
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {"flops": costs["flops"], "bytes_accessed": costs["bytes"]},
+        "gate_cost_analysis": {"flops": gate_costs["flops"],
+                               "bytes_accessed": gate_costs["bytes"]},
+        "memory_analysis": mem,
+        "collectives": costs["coll"],
+        "collective_bytes": costs["coll_bytes"],
+        "model_flops": model_flops(cfg, shape),
+        "calibrated": calibrate,
+        "roofline": rep.row(),
+        "remat": cfg.remat_policy,
+        "attention_impl": cfg.attention_impl,
+        "overrides": dict(cfg.sharding_overrides),
+    }
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true", help="every runnable cell")
+    ap.add_argument("--multi-pod", choices=("on", "off", "both"), default="off")
+    ap.add_argument("--out", default="", help="directory for JSON records")
+    ap.add_argument("--dump-hlo", default="", help="write optimized HLO here")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the per-arch OPT_PACKS (EXPERIMENTS.md §Perf)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    pods = {"on": (True,), "off": (False,), "both": (False, True)}[args.multi_pod]
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch, shape in cells:
+        for mp in pods:
+            tag = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+            try:
+                rec = lower_cell(arch, shape, multi_pod=mp,
+                                 dump_hlo=args.dump_hlo or None,
+                                 optimized=args.optimized)
+            except Exception as e:
+                failures += 1
+                rec = {"arch": arch, "shape": shape,
+                       "mesh": "2x16x16" if mp else "16x16",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()}
+                print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:300]}")
+            else:
+                if "skipped" in rec:
+                    print(f"[skip] {tag}: {rec['skipped']}")
+                else:
+                    r = rec["roofline"]
+                    print(f"[ ok ] {tag}: compile {rec['compile_s']}s "
+                          f"step {r['step_ms']}ms dominant={r['dominant']} "
+                          f"useful={r['useful_flops_frac']}")
+            if args.out:
+                mesh_name = rec.get("mesh", "NA")
+                fn = f"{arch}_{shape}_{mesh_name}.json".replace("/", "-")
+                with open(os.path.join(args.out, fn), "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        raise SystemExit(f"{failures} dry-run cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Training driver: crash-only loop with async checkpointing and TASQ hooks.
+
+Every step is resumable from (checkpoint, data cursor): the pipeline is
+skip-ahead deterministic, checkpoints commit atomically, and restore
+re-shards onto whatever mesh the job restarts with (elastic.py picks it).
+
+Runs for real on CPU (smoke/example configs, mesh=None or a 1x1 mesh) and
+lowers unchanged against the production mesh (launch/dryrun.py path).
+
+CLI:
+  python -m repro.launch.train --arch qwen2-72b-smoke --steps 50
+  python -m repro.launch.train --arch <id> --steps N --ckpt-dir /tmp/ckpt \
+      --mesh 2x2 --resume
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.ckpt import CheckpointManager
+from repro.data import DataConfig, TokenPipeline
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import (
+    TrainState,
+    batch_shardings,
+    init_train_state,
+    make_train_step,
+    state_shardings,
+)
+
+__all__ = ["TrainLoopConfig", "run_training"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoopConfig:
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    resume: bool = False
+    opt: AdamWConfig = AdamWConfig(warmup_steps=20)
+
+
+def run_training(cfg: ModelConfig, loop: TrainLoopConfig, mesh=None,
+                 log_fn=print) -> Dict[str, Any]:
+    """Returns {'final_loss', 'steps_run', 'losses', 'resumed_from'}."""
+    pipe = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=loop.seq_len,
+        global_batch=loop.global_batch, seed=loop.seed)).start()
+
+    ckpt = CheckpointManager(loop.ckpt_dir) if loop.ckpt_dir else None
+    chash = CheckpointManager.config_hash(cfg)
+
+    state = init_train_state(cfg, jax.random.PRNGKey(loop.seed))
+    start_step = 0
+    if ckpt is not None and loop.resume and ckpt.latest_step() is not None:
+        shardings = state_shardings(cfg, mesh) if mesh is not None else None
+        state, start_step = ckpt.restore(state, shardings=shardings,
+                                         expect_config_hash=chash)
+        pipe.seek(start_step)
+        pipe.stop()
+        pipe = TokenPipeline(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=loop.seq_len,
+            global_batch=loop.global_batch, seed=loop.seed)).start()
+        pipe.seek(start_step)
+        log_fn(f"[train] resumed from step {start_step}")
+
+    step_fn = make_train_step(cfg, mesh, loop.opt)
+    if mesh is not None:
+        jit_kwargs = dict(
+            in_shardings=(state_shardings(cfg, mesh), None),
+            donate_argnums=(0,))
+    else:
+        jit_kwargs = dict(donate_argnums=(0,))
+    step_fn = jax.jit(step_fn, **jit_kwargs)
+
+    losses = []
+    t0 = time.time()
+    final_step = start_step
+    try:
+        for step in range(start_step, loop.steps):
+            batch = next(pipe)
+            state, metrics = step_fn(state, batch)
+            final_step = step + 1
+            if (step + 1) % loop.log_every == 0 or step + 1 == loop.steps:
+                loss = float(metrics["loss"])
+                losses.append(loss)
+                rate = (step + 1 - start_step) / max(time.time() - t0, 1e-9)
+                log_fn(f"[train] step {step+1}/{loop.steps} "
+                       f"loss {loss:.4f} ({rate:.2f} it/s)")
+            if ckpt is not None and (step + 1) % loop.ckpt_every == 0:
+                ckpt.save(step + 1, state, config_hash=chash,
+                          mesh_shape=dict(mesh.shape) if mesh else {})
+    finally:
+        pipe.stop()
+        if ckpt is not None:
+            if final_step % loop.ckpt_every != 0:
+                ckpt.save(final_step, state, config_hash=chash,
+                          mesh_shape=dict(mesh.shape) if mesh else {})
+            ckpt.wait()
+
+    return {"final_loss": losses[-1] if losses else float("nan"),
+            "steps_run": final_step - start_step,
+            "losses": losses, "resumed_from": start_step}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default="", help="e.g. 1x1 or 2x2 (data x model)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+    out = run_training(cfg, TrainLoopConfig(
+        steps=args.steps, seq_len=args.seq_len,
+        global_batch=args.global_batch, ckpt_dir=args.ckpt_dir,
+        resume=args.resume), mesh)
+    print(f"[train] done: {out['steps_run']} steps, "
+          f"final loss {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,278 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, d_model). Decoder length is capped at
+DEC_LEN (whisper's 448 max target positions).
+
+Cache reuse: lm.Cache.k/v hold the decoder SELF-attention cache,
+lm.Cache.shared_k/shared_v hold the CROSS-attention cache (encoder k/v).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.lm import Cache, _dtype, _remat
+from repro.models.params import NULL_SHARDER, ParamSpec
+
+DEC_LEN = 448
+
+Params = Dict[str, Any]
+
+
+def _attn_schema(cfg: ModelConfig, lead) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    la = ("layers",) * len(lead)
+    return {
+        "wq": ParamSpec(lead + (d, cfg.num_heads * hd), la + ("embed_param", "qkv")),
+        "wk": ParamSpec(lead + (d, cfg.num_kv_heads * hd), la + ("embed_param", "kv_heads")),
+        "wv": ParamSpec(lead + (d, cfg.num_kv_heads * hd), la + ("embed_param", "kv_heads")),
+        "wo": ParamSpec(lead + (cfg.num_heads * hd, d), la + ("qkv", "embed_param")),
+        "bq": ParamSpec(lead + (cfg.num_heads * hd,), la + ("qkv",), init="zeros"),
+        "bv": ParamSpec(lead + (cfg.num_kv_heads * hd,), la + ("kv_heads",), init="zeros"),
+    }
+
+
+def _ln_schema(cfg, lead, name) -> Params:
+    la = ("layers",) * len(lead)
+    return {
+        f"{name}_w": ParamSpec(lead + (cfg.d_model,), la + ("embed",), init="ones"),
+        f"{name}_b": ParamSpec(lead + (cfg.d_model,), la + ("embed",), init="zeros"),
+    }
+
+
+def _mlp_schema(cfg, lead) -> Params:
+    la = ("layers",) * len(lead)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ParamSpec(lead + (d, f), la + ("embed_param", "mlp")),
+        "bi": ParamSpec(lead + (f,), la + ("mlp",), init="zeros"),
+        "wo": ParamSpec(lead + (f, d), la + ("mlp", "embed_param")),
+        "bo": ParamSpec(lead + (d,), la + ("embed",), init="zeros"),
+    }
+
+
+def schema(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    enc_lead, dec_lead = (cfg.encoder_layers,), (cfg.num_layers,)
+    return {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed_param")),
+        "pos_embed": ParamSpec((DEC_LEN, d), (None, "embed_param")),
+        "enc_blocks": {
+            **_ln_schema(cfg, enc_lead, "ln1"),
+            **_ln_schema(cfg, enc_lead, "ln2"),
+            "attn": _attn_schema(cfg, enc_lead),
+            "mlp": _mlp_schema(cfg, enc_lead),
+        },
+        "enc_final": {**_ln_schema(cfg, (), "ln")},
+        "dec_blocks": {
+            **_ln_schema(cfg, dec_lead, "ln1"),
+            **_ln_schema(cfg, dec_lead, "ln2"),
+            **_ln_schema(cfg, dec_lead, "ln3"),
+            "self_attn": _attn_schema(cfg, dec_lead),
+            "cross_attn": _attn_schema(cfg, dec_lead),
+            "mlp": _mlp_schema(cfg, dec_lead),
+        },
+        "dec_final": {**_ln_schema(cfg, (), "ln")},
+    }
+
+
+def _sinusoid(S: int, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    t = jnp.arange(S)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=-1)
+
+
+def _qkv(x, p, cfg, shard, kv_from=None):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    src = x if kv_from is None else kv_from
+    q = (jnp.einsum("bsd,dq->bsq", x, p["wq"]) + p["bq"]).reshape(
+        B, S, cfg.num_heads, hd)
+    k = jnp.einsum("bsd,dq->bsq", src, p["wk"]).reshape(
+        B, src.shape[1], cfg.num_kv_heads, hd)
+    v = (jnp.einsum("bsd,dq->bsq", src, p["wv"]) + p["bv"]).reshape(
+        B, src.shape[1], cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _proj_out(out, p, cfg):
+    B, S = out.shape[:2]
+    return jnp.einsum("bsq,qd->bsd", out.reshape(B, S, -1), p["wo"])
+
+
+def _encoder(params, frames, cfg: ModelConfig, shard):
+    x = frames.astype(_dtype(cfg.compute_dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq_sp", "embed")
+
+    def body(xc, bp):
+        h = L.layer_norm(xc, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps)
+        q, k, v = _qkv(h, bp["attn"], cfg, shard)
+        xc = xc + _proj_out(L.bidirectional_attention(q, k, v), bp["attn"], cfg)
+        h = L.layer_norm(xc, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps)
+        xc = xc + L.gelu_mlp(h, bp["mlp"]["wi"], bp["mlp"]["bi"],
+                             bp["mlp"]["wo"], bp["mlp"]["bo"])
+        return shard(xc, "batch", "seq_sp", "embed"), None
+
+    body = _remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    else:  # unrolled (calibration probes)
+        for i in range(cfg.encoder_layers):
+            bp = jax.tree.map(lambda a: a[i], params["enc_blocks"])
+            x, _ = body(x, bp)
+    return L.layer_norm(x, params["enc_final"]["ln_w"], params["enc_final"]["ln_b"],
+                        cfg.norm_eps)
+
+
+def _cross_kv(params, enc_out, cfg, shard):
+    """Precompute per-decoder-layer cross-attention K/V (stacked on layers)."""
+    def one(bp):
+        hd = cfg.resolved_head_dim
+        B, S, _ = enc_out.shape
+        k = jnp.einsum("bsd,dq->bsq", enc_out, bp["cross_attn"]["wk"]).reshape(
+            B, S, cfg.num_kv_heads, hd)
+        v = (jnp.einsum("bsd,dq->bsq", enc_out, bp["cross_attn"]["wv"])
+             + bp["cross_attn"]["bv"]).reshape(B, S, cfg.num_kv_heads, hd)
+        return k, v
+
+    if cfg.scan_layers:
+        return jax.lax.map(one, params["dec_blocks"])
+    outs = [one(jax.tree.map(lambda a: a[i], params["dec_blocks"]))
+            for i in range(cfg.num_layers)]
+    return (jnp.stack([k for k, _ in outs]), jnp.stack([v for _, v in outs]))
+
+
+def _decoder(params, tokens, cfg, shard, mode, cross_kv, cache: Cache = None):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg.compute_dtype))
+    if mode == "decode":
+        pos = cache.length
+        pe = jax.vmap(lambda i: jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], i, 1, 0))(jnp.minimum(pos, DEC_LEN - 1))
+        x = x + pe.astype(x.dtype)
+    else:
+        x = x + params["pos_embed"][:S].astype(x.dtype)
+    x = shard(x, "batch", None, "embed")
+
+    def body(carry, inp):
+        xc = carry
+        bp, ckv, kvc = inp
+        h = L.layer_norm(xc, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps)
+        q, k, v = _qkv(h, bp["self_attn"], cfg, shard)
+        if mode == "decode":
+            kc, vc = kvc[0], kvc[1]
+            pos = jnp.minimum(cache.length, kc.shape[1] - 1)
+            kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice_in_dim(
+                c, kk, i, 0))(kc, k, pos)
+            vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice_in_dim(
+                c, vv, i, 0))(vc, v, pos)
+            att = L.decode_attention(q, kc, vc, pos + 1)
+            new_kv = jnp.stack([kc, vc])
+        else:
+            att = L.causal_attention_ref(q, k, v, chunk_q=min(512, S))
+            new_kv = jnp.stack([k, v]) if mode == "prefill" else 0
+        xc = xc + _proj_out(att, bp["self_attn"], cfg)
+        # cross attention
+        h = L.layer_norm(xc, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps)
+        hd = cfg.resolved_head_dim
+        qx = (jnp.einsum("bsd,dq->bsq", h, bp["cross_attn"]["wq"])
+              + bp["cross_attn"]["bq"]).reshape(B, S, cfg.num_heads, hd)
+        ck, cv = ckv
+        att = L.bidirectional_attention(qx, ck, cv)
+        xc = xc + _proj_out(att, bp["cross_attn"], cfg)
+        h = L.layer_norm(xc, bp["ln3_w"], bp["ln3_b"], cfg.norm_eps)
+        xc = xc + L.gelu_mlp(h, bp["mlp"]["wi"], bp["mlp"]["bi"],
+                             bp["mlp"]["wo"], bp["mlp"]["bo"])
+        return shard(xc, "batch", None, "embed"), new_kv
+
+    body = _remat(body, cfg)
+    kv_in = (jnp.stack([cache.k, cache.v], axis=1) if mode == "decode"
+             else None)
+    if cfg.scan_layers:
+        if kv_in is not None:
+            x, kv_out = jax.lax.scan(
+                body, x, (params["dec_blocks"], cross_kv, kv_in))
+        else:
+            x, kv_out = jax.lax.scan(
+                lambda c, i: body(c, (i[0], i[1], None)), x,
+                (params["dec_blocks"], cross_kv))
+    else:  # unrolled (calibration probes)
+        kvs = []
+        for i in range(cfg.num_layers):
+            bp = jax.tree.map(lambda a: a[i], params["dec_blocks"])
+            ckv = jax.tree.map(lambda a: a[i], cross_kv)
+            kvc = None if kv_in is None else kv_in[i]
+            x, kv = body(x, (bp, ckv, kvc))
+            kvs.append(kv)
+        kv_out = jnp.stack(kvs) if mode in ("prefill", "decode") else 0
+    x = L.layer_norm(x, params["dec_final"]["ln_w"], params["dec_final"]["ln_b"],
+                     cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["embed"].T)
+    return shard(logits, "batch", None, "vocab"), kv_out
+
+
+def forward_train(params, batch, cfg: ModelConfig, shard=NULL_SHARDER):
+    """batch: frames (B,S_enc,D), tokens (B,DEC), labels (B,DEC)."""
+    enc_out = _encoder(params, batch["frames"], cfg, shard)
+    cross_kv = _cross_kv(params, enc_out, cfg, shard)
+    logits, _ = _decoder(params, batch["tokens"], cfg, shard, "train", cross_kv)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    loss = jnp.sum((lse - picked) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "aux_loss": jnp.float32(0)}
+
+
+def prefill(params, batch, cfg: ModelConfig, shard=NULL_SHARDER):
+    """Encode frames, precompute cross K/V, decode the BOS prompt (B,1)."""
+    enc_out = _encoder(params, batch["frames"], cfg, shard)
+    cross_kv = _cross_kv(params, enc_out, cfg, shard)
+    B = batch["tokens"].shape[0]
+    dt = _dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    cache = Cache(
+        k=jnp.zeros((cfg.num_layers, B, DEC_LEN, cfg.num_kv_heads, hd), dt),
+        v=jnp.zeros((cfg.num_layers, B, DEC_LEN, cfg.num_kv_heads, hd), dt),
+        shared_k=cross_kv[0], shared_v=cross_kv[1],
+        length=jnp.zeros((B,), jnp.int32),
+    )
+    logits, cache = _decode_one(params, batch["tokens"], cfg, shard, cache)
+    return logits, cache
+
+
+def _decode_one(params, tokens, cfg, shard, cache: Cache):
+    cross_kv = (cache.shared_k, cache.shared_v)
+    logits, kv_out = _decoder(params, tokens, cfg, shard, "decode", cross_kv, cache)
+    new_cache = Cache(k=kv_out[:, 0], v=kv_out[:, 1],
+                      shared_k=cache.shared_k, shared_v=cache.shared_v,
+                      length=cache.length + 1)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, batch, cache: Cache, cfg: ModelConfig, shard=NULL_SHARDER):
+    return _decode_one(params, batch["tokens"], cfg, shard, cache)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, enc_len: int) -> Cache:
+    dt = _dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    return Cache(
+        k=jax.ShapeDtypeStruct((cfg.num_layers, batch, DEC_LEN, cfg.num_kv_heads, hd), dt),
+        v=jax.ShapeDtypeStruct((cfg.num_layers, batch, DEC_LEN, cfg.num_kv_heads, hd), dt),
+        shared_k=jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, enc_len, cfg.num_kv_heads, hd), dt),
+        shared_v=jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, enc_len, cfg.num_kv_heads, hd), dt),
+        length=jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )

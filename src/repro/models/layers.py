@@ -1,0 +1,355 @@
+"""Model-zoo building blocks (pure functions over param dicts).
+
+Conventions:
+  * activations: (batch, seq, ...) with compute dtype from the config;
+    softmax / norms / RoPE accumulate in float32.
+  * every block takes a ``shard`` callable (repro.models.params.Sharder) that
+    applies logical-axis sharding constraints; NULL_SHARDER makes it a no-op.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dtype) * weight
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dtype) * weight + bias
+
+
+# ----------------------------------------------------------------- RoPE ----
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32. Rotate-half convention."""
+    freqs = rope_freqs(x.shape[-1], theta)                      # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (B, S, D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: Tuple[int, int, int]
+) -> jax.Array:
+    """M-RoPE (qwen2-vl): positions (3, B, S) = (temporal, height, width) ids.
+
+    The D/2 frequency slots are split into three contiguous sections, each
+    rotated by its own position component.
+    """
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(x.shape[-1], theta)                      # (D/2,)
+    # angles per component: (3, B, S, D/2)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=d_half)
+    angle = jnp.take_along_axis(
+        jnp.moveaxis(angles, 0, -1),                            # (B, S, D/2, 3)
+        sec_id[None, None, :, None].astype(jnp.int32),
+        axis=-1,
+    )[..., 0]                                                   # (B, S, D/2)
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+def _gqa_scores_softmax_out(q, k, v, mask, scale):
+    """Dense masked attention core. q:(B,Sq,Hq,D) k/v:(B,Sk,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def causal_attention_ref(q, k, v, chunk_q: int = 512) -> jax.Array:
+    """Masked-dense causal attention, scanned over query chunks.
+
+    Baseline XLA path: computes the full S^2 score matrix chunk-by-chunk
+    (working set O(chunk_q * S)); masked blocks are computed then discarded
+    (2x the causal-optimal FLOPs — see causal_attention_tri for the
+    triangle-decomposed optimal version, and kernels/flash_attention.py for
+    the TPU kernel that skips them structurally).
+    """
+    B, S, Hq, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    if S <= chunk_q:
+        mask = jnp.tril(jnp.ones((S, S), jnp.bool_))[None, None, None]
+        return _gqa_scores_softmax_out(q, k, v, mask, scale)
+    assert S % chunk_q == 0, (S, chunk_q)
+    nq = S // chunk_q
+    qs = q.reshape(B, nq, chunk_q, Hq, D).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, args):
+        i, qc = args
+        rows = i * chunk_q + jnp.arange(chunk_q)
+        mask = rows[:, None] >= jnp.arange(S)[None, :]
+        out = _gqa_scores_softmax_out(qc, k, v, mask[None, None, None], scale)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, S, Hq, D)
+
+
+def _attn_block_stats(q, k, v, mask, scale):
+    """Flash-style block attention: returns UNNORMALIZED (num, m, l).
+
+    num: (B,Sq,Hq,D) = sum_k exp(s - m) * v;  m/l: (B,Sq,Hq) row max / denom.
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    num = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v).reshape(B, Sq, Hq, D)
+    to_bshq = lambda t: t.transpose(0, 3, 1, 2).reshape(B, Sq, Hq)
+    return num.astype(jnp.float32), to_bshq(m), to_bshq(l)
+
+
+def _merge_stats(a, b):
+    (na, ma, la), (nb, mb, lb) = a, b
+    m = jnp.maximum(ma, mb)
+    wa = jnp.exp(ma - m)
+    wb = jnp.exp(mb - m)
+    return (na * wa[..., None] + nb * wb[..., None], m, la * wa + lb * wb)
+
+
+def causal_attention_tri(q, k, v, depth: int = 3, leaf_chunk: int = 512) -> jax.Array:
+    """Triangle-decomposed causal attention (FLOP-optimal up to 2^-depth waste).
+
+    T(S) = two half-triangles + one UNMASKED dense (S/2 x S/2) block. Each
+    recursion level halves the masked-block waste of the dense baseline; at
+    depth d the waste is 2^-d. Results are combined with exact flash-style
+    log-sum-exp merging (bitwise-equivalent math, not an approximation).
+    """
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    def tri(qc, kc, vc, d):
+        Sc = qc.shape[1]
+        if d == 0 or Sc <= leaf_chunk:
+            mask = jnp.arange(Sc)[:, None] >= jnp.arange(Sc)[None, :]
+            return _attn_block_stats(qc, kc, vc, mask[None, None, None], scale)
+        h = Sc // 2
+        n1, m1, l1 = tri(qc[:, :h], kc[:, :h], vc[:, :h], d - 1)
+        lower = tri(qc[:, h:], kc[:, h:], vc[:, h:], d - 1)
+        cross = _attn_block_stats(qc[:, h:], kc[:, :h], vc[:, :h], None, scale)
+        n2, m2, l2 = _merge_stats(lower, cross)
+        return (jnp.concatenate([n1, n2], axis=1),
+                jnp.concatenate([m1, m2], axis=1),
+                jnp.concatenate([l1, l2], axis=1))
+
+    num, _, l = tri(q, k, v, depth)
+    return (num / l[..., None]).astype(q.dtype)
+
+
+def bidirectional_attention(q, k, v) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    return _gqa_scores_softmax_out(q, k, v, None, scale)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len) -> jax.Array:
+    """One-token attention against a cache. q:(B,1,Hq,D) cache:(B,Smax,Hkv,D).
+
+    cache_len: (B,) valid lengths (positions >= cache_len are masked out).
+    """
+    B, Smax = k_cache.shape[0], k_cache.shape[1]
+    mask = jnp.arange(Smax)[None, :] < cache_len[:, None]     # (B, Smax)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    return _gqa_scores_softmax_out(q, k_cache, v_cache, mask[:, None, None, None], scale)
+
+
+# ------------------------------------------------------------------ MLP ----
+def swiglu_mlp(x, wi_gate, wi_up, wo, shard):
+    h = shard(jnp.einsum("bsd,df->bsf", x, wi_gate), "batch", "seq", "mlp")
+    u = jnp.einsum("bsd,df->bsf", x, wi_up)
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, wo)
+
+
+def gelu_mlp(x, wi, bi, wo, bo):
+    h = jnp.einsum("bsd,df->bsf", x, wi) + bi
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, wo) + bo
+
+
+# ------------------------------------------------------------------ MoE ----
+def moe_block(x, p, cfg: ModelConfig, shard) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based top-k MoE with per-sequence capacity (Megablocks-lite).
+
+    x: (B, S, D). Returns (out, aux_load_balance_loss).
+    Memory is O(B*(E*C + S*K)*D); the (T x E x C) one-hot dispatch tensor of
+    the classic MeshTF formulation is never materialized.
+
+    Sharding discipline (see EXPERIMENTS.md §Perf, hillclimb #1): every
+    dispatch intermediate is pinned to batch-only sharding. The gathers and
+    scatters index along the *sequence* axis; if the residual stream enters
+    sequence-sharded (seq_sp), GSPMD cannot partition them and falls back to
+    full f32 rematerialization — an ~8 GB all-gather per op per layer at
+    qwen3-moe scale. Pinning x to ("batch", None, None) makes the whole
+    dispatch local to the batch shard; only the expert einsums communicate.
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = max(1, math.ceil(K * S * cfg.capacity_factor / E))
+    # un-shard the sequence locally: dispatch is batch-parallel
+    x = shard(x, "batch", None, None)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                      # (B,S,K)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # aux load-balance loss (Switch-style)
+    frac_tokens = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=2), axis=(0, 1)) / K
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    flat_e = shard(eidx.reshape(B, S * K), "batch", None)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)          # (B, S*K)
+    order = shard(order, "batch", None)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # rank of each slot within its expert group
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    rank = jnp.arange(S * K)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=-1)
+    keep = rank < C
+    slot = shard(jnp.where(keep, sorted_e * C + rank, E * C), "batch", None)
+
+    tok = order // K                                            # source token
+    xg = jnp.take_along_axis(x, tok[..., None], axis=1)         # (B, S*K, D)
+    xg = shard(xg, "batch", None, None)
+
+    def scatter_one(buf, slot_b, xg_b):
+        return buf.at[slot_b].set(xg_b, mode="drop")
+
+    buf = jax.vmap(scatter_one)(
+        jnp.zeros((B, E * C + 1, D), x.dtype), slot, xg
+    )[:, : E * C].reshape(B, E, C, D)
+    buf = shard(buf, "batch", "expert", None, None)
+
+    # expert SwiGLU
+    h = jnp.einsum("becd,edf->becf", buf, p["wi_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["wi_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    yb = jnp.einsum("becf,efd->becd", h, p["wo"])
+    yb = shard(yb, "batch", "expert", None, None)
+
+    yb_flat = shard(yb.reshape(B, E * C, D), "batch", None, None)
+    y_sorted = jax.vmap(lambda b, s: b.at[jnp.minimum(s, E * C - 1)].get())(yb_flat, slot)
+    y_sorted = jnp.where(keep[..., None], y_sorted,
+                         jnp.zeros((), x.dtype))                # stay bf16
+    # unsort back to (B, S*K, D)
+    inv = jnp.argsort(order, axis=-1)
+    y_flat = jnp.take_along_axis(y_sorted, inv[..., None], axis=1)
+    y_flat = shard(y_flat, "batch", None, None)
+    y = (y_flat.reshape(B, S, K, D) * gates[..., None].astype(x.dtype)).sum(axis=2)
+    return y, aux
+
+
+# ---------------------------------------------------------- SSD (Mamba2) ---
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} log_a[..., k], -inf for j>i."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]                  # i, j
+    mask = jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Mamba-2 SSD (state-space dual) forward, chunked (ref for kernels/ssd).
+
+    x:  (B, S, H, P)   values
+    dt: (B, S, H)      post-softplus step sizes
+    A:  (H,)           negative decay rates
+    Bm: (B, S, N)      input projections (shared across heads)
+    Cm: (B, S, N)      output projections
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    xr = x.reshape(Bb, nc, chunk, H, P)
+    dtr = dt.reshape(Bb, nc, chunk, H)
+    Br = Bm.reshape(Bb, nc, chunk, N)
+    Cr = Cm.reshape(Bb, nc, chunk, N)
+
+    log_a = (dtr * A[None, None, None, :]).astype(jnp.float32)   # (B,nc,Q,H) <= 0
+    log_a = jnp.moveaxis(log_a, -1, 2)                           # (B,nc,H,Q)
+    L = jnp.exp(_segsum(log_a))                                  # (B,nc,H,Q,Q)
+
+    xdt = xr * dtr[..., None]                                    # (B,nc,Q,H,P)
+
+    # intra-chunk (quadratic within chunk)
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cr, Br).astype(jnp.float32)
+    y_intra = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", cb, L, xdt.astype(jnp.float32))
+
+    # per-chunk outgoing state: sum_i decay(i->end) * dt_i x_i B_i
+    decay_out = jnp.exp(jnp.cumsum(log_a[..., ::-1], axis=-1)[..., ::-1] - log_a)
+    states = jnp.einsum("bchq,bcqn,bcqhp->bchpn", decay_out, Br.astype(jnp.float32),
+                        xdt.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(log_a, axis=-1))               # (B,nc,H)
+
+    def step(h, args):
+        st, dec = args
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                          # emit state *before* chunk
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    hT, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                          # (B,nc,H,P,N)
+
+    # inter-chunk contribution: C_t · decay(start->t) · h_prev
+    decay_in = jnp.exp(jnp.cumsum(log_a, axis=-1))               # (B,nc,H,Q)
+    y_inter = jnp.einsum("bcqn,bchq,bchpn->bcqhp", Cr.astype(jnp.float32),
+                         decay_in, h_prev)
+
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y.astype(x.dtype), hT
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """O(1) SSD decode. h:(B,H,P,N) x:(B,H,P) dt:(B,H) Bm/Cm:(B,N)."""
+    da = jnp.exp((dt * A[None, :]).astype(jnp.float32))          # (B,H)
+    contrib = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None]).astype(jnp.float32),
+                         Bm.astype(jnp.float32))
+    h_new = h * da[..., None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), h_new

@@ -1,0 +1,533 @@
+"""Unified decoder-only LM covering dense / moe / ssm / hybrid / vlm families.
+
+All families share one stacked-layer scan (`jax.lax.scan` over a leading
+"layers" axis) so the lowered HLO stays small regardless of depth — the
+production pattern for 80-layer+ models.
+
+Public surface (all pure functions):
+  schema(cfg)                                -> ParamSpec pytree
+  forward_train(params, batch, cfg, shard)   -> (loss, metrics)
+  prefill(params, batch, cfg, shard)         -> (last_logits, Cache)
+  decode_step(params, batch, cache, cfg, shard) -> (logits, Cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import NULL_SHARDER, ParamSpec
+
+Params = Dict[str, Any]
+
+MOE_AUX_WEIGHT = 0.01
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+# ================================================================ schema ====
+def _attn_schema(cfg: ModelConfig, stacked: bool, prefix_dims=()) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    lead = prefix_dims
+    la = ("layers",) * len(prefix_dims)
+    s: Params = {
+        "wq": ParamSpec(lead + (d, cfg.num_heads * hd), la + ("embed_param", "qkv")),
+        "wk": ParamSpec(lead + (d, cfg.num_kv_heads * hd), la + ("embed_param", "kv_heads")),
+        "wv": ParamSpec(lead + (d, cfg.num_kv_heads * hd), la + ("embed_param", "kv_heads")),
+        "wo": ParamSpec(lead + (cfg.num_heads * hd, d), la + ("qkv", "embed_param")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec(lead + (cfg.num_heads * hd,), la + ("qkv",), init="zeros")
+        s["bk"] = ParamSpec(lead + (cfg.num_kv_heads * hd,), la + ("kv_heads",), init="zeros")
+        s["bv"] = ParamSpec(lead + (cfg.num_kv_heads * hd,), la + ("kv_heads",), init="zeros")
+    return s
+
+
+def _ffn_schema(cfg: ModelConfig, prefix_dims=()) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    lead, la = prefix_dims, ("layers",) * len(prefix_dims)
+    if cfg.family == "moe":
+        e = cfg.num_experts
+        return {
+            "router": ParamSpec(lead + (d, e), la + ("embed_param", None)),
+            "wi_gate": ParamSpec(lead + (e, d, f), la + ("expert", "embed_param", "mlp")),
+            "wi_up": ParamSpec(lead + (e, d, f), la + ("expert", "embed_param", "mlp")),
+            "wo": ParamSpec(lead + (e, f, d), la + ("expert", "mlp", "embed_param")),
+        }
+    if cfg.mlp_style == "mlp2":    # up/down only (granite/minitron style)
+        return {
+            "wi_up": ParamSpec(lead + (d, f), la + ("embed_param", "mlp")),
+            "wo": ParamSpec(lead + (f, d), la + ("mlp", "embed_param")),
+        }
+    return {
+        "wi_gate": ParamSpec(lead + (d, f), la + ("embed_param", "mlp")),
+        "wi_up": ParamSpec(lead + (d, f), la + ("embed_param", "mlp")),
+        "wo": ParamSpec(lead + (f, d), la + ("mlp", "embed_param")),
+    }
+
+
+def _ssd_schema(cfg: ModelConfig, prefix_dims=()) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = di // cfg.ssm_head_dim
+    lead, la = prefix_dims, ("layers",) * len(prefix_dims)
+    return {
+        "wz": ParamSpec(lead + (d, di), la + ("embed_param", "mlp")),
+        "wx": ParamSpec(lead + (d, di), la + ("embed_param", "mlp")),
+        "wB": ParamSpec(lead + (d, n), la + ("embed_param", "state")),
+        "wC": ParamSpec(lead + (d, n), la + ("embed_param", "state")),
+        "wdt": ParamSpec(lead + (d, h), la + ("embed_param", "heads")),
+        "A_log": ParamSpec(lead + (h,), la + ("heads",), init="zeros"),
+        "dt_bias": ParamSpec(lead + (h,), la + ("heads",), init="zeros"),
+        "D_skip": ParamSpec(lead + (h,), la + ("heads",), init="ones"),
+        "norm_w": ParamSpec(lead + (di,), la + ("mlp",), init="ones"),
+        "out": ParamSpec(lead + (di, d), la + ("mlp", "embed_param")),
+    }
+
+
+def schema(cfg: ModelConfig) -> Params:
+    """Parameter schema for decoder-only families (see encdec.py for whisper)."""
+    d, nl = cfg.d_model, cfg.num_layers
+    s: Params = {
+        "embed": ParamSpec((cfg.vocab_size, d), ("vocab", "embed_param")),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((d, cfg.vocab_size), ("embed_param", "vocab"))
+    s["final_norm"] = ParamSpec((d,), ("embed",), init="ones")
+
+    lead = (nl,)
+    if cfg.family in ("dense", "vlm", "moe"):
+        s["blocks"] = {
+            "ln1": ParamSpec(lead + (d,), ("layers", "embed"), init="ones"),
+            "ln2": ParamSpec(lead + (d,), ("layers", "embed"), init="ones"),
+            **_attn_schema(cfg, True, lead),
+            "ffn": _ffn_schema(cfg, lead),
+        }
+    elif cfg.family == "ssm":
+        s["blocks"] = {
+            "ln1": ParamSpec(lead + (d,), ("layers", "embed"), init="ones"),
+            **_ssd_schema(cfg, lead),
+        }
+    elif cfg.family == "hybrid":
+        s["blocks"] = {
+            "ln1": ParamSpec(lead + (d,), ("layers", "embed"), init="ones"),
+            **_ssd_schema(cfg, lead),
+        }
+        s["shared_attn"] = {
+            "ln1": ParamSpec((d,), ("embed",), init="ones"),
+            "ln2": ParamSpec((d,), ("embed",), init="ones"),
+            **_attn_schema(cfg, False),
+            "ffn": {
+                "wi_gate": ParamSpec((d, cfg.d_ff), ("embed_param", "mlp")),
+                "wi_up": ParamSpec((d, cfg.d_ff), ("embed_param", "mlp")),
+                "wo": ParamSpec((cfg.d_ff, d), ("mlp", "embed_param")),
+            },
+        }
+    else:
+        raise ValueError(cfg.family)
+    return s
+
+
+# ================================================================ caches ====
+@dataclasses.dataclass
+class Cache:
+    """Decode-time state. Attention caches are (L, B, Smax, Hkv, hd)."""
+    k: Optional[jax.Array] = None
+    v: Optional[jax.Array] = None
+    ssm: Optional[jax.Array] = None          # (L, B, H, P, N)
+    shared_k: Optional[jax.Array] = None     # (napps, B, Smax, Hkv, hd)
+    shared_v: Optional[jax.Array] = None
+    length: Optional[jax.Array] = None       # (B,) valid entries
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return [getattr(self, f.name) for f in fields], None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(Cache, Cache.tree_flatten, Cache.tree_unflatten)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    """ShapeDtypeStructs for the decode cache (dry-run stand-ins)."""
+    dt = _dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    c = Cache(length=jax.ShapeDtypeStruct((batch,), jnp.int32))
+    if cfg.family in ("dense", "vlm", "moe"):
+        shp = (cfg.num_layers, batch, max_len, cfg.effective_kv_heads, hd)
+        c.k = jax.ShapeDtypeStruct(shp, dt)
+        c.v = jax.ShapeDtypeStruct(shp, dt)
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm_expand * cfg.d_model
+        h = di // cfg.ssm_head_dim
+        c.ssm = jax.ShapeDtypeStruct(
+            (cfg.num_layers, batch, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    if cfg.family == "hybrid":
+        napps = cfg.num_layers // cfg.attn_period
+        shp = (napps, batch, max_len, cfg.num_kv_heads, hd)
+        c.shared_k = jax.ShapeDtypeStruct(shp, dt)
+        c.shared_v = jax.ShapeDtypeStruct(shp, dt)
+    return c
+
+
+def cache_axes(cfg: ModelConfig) -> Cache:
+    """Logical axes matching cache_specs (for shardings)."""
+    c = Cache(length=("batch",))
+    attn_axes = ("layers", "batch", "cache_seq", "kv_heads", None)
+    if cfg.family in ("dense", "vlm", "moe"):
+        c.k = attn_axes
+        c.v = attn_axes
+    if cfg.family in ("ssm", "hybrid"):
+        c.ssm = ("layers", "batch", "heads", None, "state")
+    if cfg.family == "hybrid":
+        c.shared_k = attn_axes
+        c.shared_v = attn_axes
+    return c
+
+
+# ============================================================== forward =====
+def _attention(x, p, cfg: ModelConfig, shard, positions, mode,
+               kv_cache=None, cache_len=None):
+    """Self-attention for one block. Returns (out, new_kv) where new_kv is
+    (k, v) for prefill, updated (k_cache, v_cache) for decode, None for train.
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dq->bsq", x, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", x, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard(q.reshape(B, S, cfg.num_heads, hd), "batch", None, "heads", None)
+    k = shard(k.reshape(B, S, cfg.num_kv_heads, hd), "batch", None, "kv_heads", None)
+    v = shard(v.reshape(B, S, cfg.num_kv_heads, hd), "batch", None, "kv_heads", None)
+
+    if cfg.mrope:
+        q = L.apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    if cfg.kv_head_replication > 1 and mode in ("prefill", "decode"):
+        # duplicate kv heads so the cache shards over the model axis
+        # (identical math: each q group maps to a copy of its kv head)
+        r = cfg.kv_head_replication
+        k = shard(jnp.repeat(k, r, axis=2), "batch", None, "kv_heads", None)
+        v = shard(jnp.repeat(v, r, axis=2), "batch", None, "kv_heads", None)
+
+    if mode in ("train", "prefill"):
+        if cfg.attention_impl == "pallas":
+            from repro.kernels import flash_attention
+            out = flash_attention(q, k, v, causal=True)
+        elif cfg.attention_impl == "tri":
+            out = L.causal_attention_tri(q, k, v)
+        else:
+            out = L.causal_attention_ref(q, k, v)
+        new_kv = (k, v) if mode == "prefill" else None
+    else:  # decode: S == 1
+        kc, vc = kv_cache
+        pos = cache_len  # (B,)
+        kc = jax.vmap(lambda c, kk, i: jax.lax.dynamic_update_slice_in_dim(c, kk, i, 0)
+                      )(kc, k, pos)
+        vc = jax.vmap(lambda c, vv, i: jax.lax.dynamic_update_slice_in_dim(c, vv, i, 0)
+                      )(vc, v, pos)
+        out = L.decode_attention(q, kc, vc, pos + 1)
+        new_kv = (kc, vc)
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    return jnp.einsum("bsq,qd->bsd", out, p["wo"]), new_kv
+
+
+def _ffn(x, p, cfg: ModelConfig, shard):
+    """Returns (out, aux_loss)."""
+    if cfg.family == "moe":
+        return L.moe_block(x, p, cfg, shard)
+    if cfg.mlp_style == "mlp2":
+        h = shard(jnp.einsum("bsd,df->bsf", x, p["wi_up"]),
+                  "batch", "seq", "mlp")
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+        return jnp.einsum("bsf,fd->bsd", h, p["wo"]), jnp.float32(0)
+    return L.swiglu_mlp(x, p["wi_gate"], p["wi_up"], p["wo"], shard), jnp.float32(0)
+
+
+def _transformer_block(x, p, cfg, shard, positions, mode, kv_cache=None, cache_len=None):
+    h, new_kv = _attention(
+        L.rms_norm(x, p["ln1"], cfg.norm_eps), p, cfg, shard, positions, mode,
+        kv_cache, cache_len)
+    x = x + h
+    x = shard(x, "batch", "seq_sp", "embed")
+    h, aux = _ffn(L.rms_norm(x, p["ln2"], cfg.norm_eps), p.get("ffn", p), cfg, shard)
+    x = x + h
+    return shard(x, "batch", "seq_sp", "embed"), new_kv, aux
+
+
+def _ssd_block(x, p, cfg: ModelConfig, shard, mode, ssm_state=None):
+    """Mamba-2 block. Returns (out, new_state)."""
+    B, S, D = x.shape
+    di = cfg.ssm_expand * D
+    nh = di // cfg.ssm_head_dim
+    xin = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    z = jnp.einsum("bsd,de->bse", xin, p["wz"])
+    xv = jnp.einsum("bsd,de->bse", xin, p["wx"])
+    xv = shard(xv, "batch", None, "mlp")
+    Bm = jnp.einsum("bsd,dn->bsn", xin, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", xin, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xin, p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xv.reshape(B, S, nh, cfg.ssm_head_dim)
+
+    if mode in ("train", "prefill"):
+        if cfg.ssd_impl == "pallas" and mode == "train":
+            from repro.kernels import ssd_scan
+            y = ssd_scan(xh, dt, A, Bm, Cm, chunk=min(cfg.ssm_chunk, S))
+            new_state = None
+        else:
+            y, h_final = L.ssd_chunked(xh, dt, A, Bm, Cm, min(cfg.ssm_chunk, S))
+            new_state = h_final if mode == "prefill" else None
+    else:
+        y, new_state = L.ssd_decode_step(
+            ssm_state, xh[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0])
+        y = y[:, None]
+    y = y + xh * p["D_skip"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = L.rms_norm(y, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    return shard(x + out, "batch", "seq_sp", "embed"), new_state
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def _embed(params, batch, cfg: ModelConfig, shard):
+    """Token (+patch for vlm) embedding. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_dtype(cfg.compute_dtype))
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+    x = shard(x, "batch", "seq_sp", "embed")
+    if cfg.mrope:
+        positions = batch["positions"]        # (3, B, S)
+    else:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def _unembed(x, params, cfg: ModelConfig, shard):
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", None, "vocab")
+
+
+def _run_layers(x, params, cfg: ModelConfig, shard, positions, mode,
+                cache: Optional[Cache] = None):
+    """Scan over stacked layers; handles every decoder-only family."""
+    blocks = params["blocks"]
+    nl = cfg.num_layers
+    aux_total = jnp.float32(0)
+    new_cache = Cache(length=None) if cache is None else Cache(length=cache.length)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, inp):
+            xc = carry
+            bp, kvc = inp
+            kv = None if kvc is None else (kvc[0], kvc[1])
+            xc, new_kv, aux = _transformer_block(
+                xc, bp, cfg, shard, positions, mode, kv,
+                cache.length if cache else None)
+            out = (jnp.stack(new_kv), aux) if new_kv is not None else (0, aux)
+            return xc, out
+
+        body = _remat(body, cfg)
+        kv_in = None
+        if mode == "decode":
+            kv_in = jnp.stack([cache.k, cache.v], axis=1)   # (L, 2, B, S, K, hd)
+        elif mode == "prefill":
+            kv_in = None
+        if cfg.scan_layers:
+            if kv_in is None:
+                x, (kv_out, auxs) = jax.lax.scan(
+                    lambda c, bp: body(c, (bp, None)), x, blocks)
+            else:
+                x, (kv_out, auxs) = jax.lax.scan(body, x, (blocks, kv_in))
+            aux_total = jnp.sum(auxs)
+            if mode == "prefill":
+                new_cache.k, new_cache.v = kv_out[:, 0], kv_out[:, 1]
+            elif mode == "decode":
+                new_cache.k, new_cache.v = kv_out[:, 0], kv_out[:, 1]
+        else:
+            ks, vs = [], []
+            for i in range(nl):
+                bp = jax.tree.map(lambda a: a[i], blocks)
+                kvc = None if kv_in is None else kv_in[i]
+                x, out = body(x, (bp, kvc))
+                if mode in ("prefill", "decode"):
+                    ks.append(out[0][0]); vs.append(out[0][1])
+                aux_total = aux_total + out[1]
+            if ks:
+                new_cache.k, new_cache.v = jnp.stack(ks), jnp.stack(vs)
+        return x, new_cache, aux_total
+
+    if cfg.family == "ssm":
+        def body(carry, inp):
+            xc = carry
+            bp, st = inp
+            xc, new_st = _ssd_block(xc, bp, cfg, shard, mode, st)
+            return xc, (new_st if new_st is not None else 0)
+
+        body = _remat(body, cfg)
+        st_in = cache.ssm if (cache is not None and mode == "decode") else None
+        if cfg.scan_layers:
+            if st_in is not None:
+                x, st_out = jax.lax.scan(body, x, (blocks, st_in))
+            else:
+                x, st_out = jax.lax.scan(lambda c, bp: body(c, (bp, None)),
+                                         x, blocks)
+        else:  # unrolled (calibration probes / small models)
+            sts = []
+            for i in range(nl):
+                bp = jax.tree.map(lambda a: a[i], blocks)
+                st = None if st_in is None else st_in[i]
+                x, st_o = body(x, (bp, st))
+                sts.append(st_o)
+            st_out = jnp.stack(sts) if mode in ("prefill", "decode") else 0
+        if mode in ("prefill", "decode"):
+            new_cache.ssm = st_out
+        return x, new_cache, aux_total
+
+    if cfg.family == "hybrid":
+        period = cfg.attn_period
+        napps = nl // period
+        shared = params["shared_attn"]
+
+        # carry = (x, shared_k, shared_v); scanned = (blocks, ssm_state, idx)
+        def body(carry, inp):
+            xc, sk, sv = carry
+            bp, st, idx = inp
+            xc, new_st = _ssd_block(xc, bp, cfg, shard, mode, st)
+
+            def with_attn(args):
+                xc, sk, sv = args
+                app = idx // period
+                if mode == "decode":
+                    kvc = (jax.lax.dynamic_index_in_dim(sk, app, 0, keepdims=False),
+                           jax.lax.dynamic_index_in_dim(sv, app, 0, keepdims=False))
+                    xa, nkv, _ = _transformer_block(
+                        xc, shared, cfg, shard, positions, mode, kvc, cache.length)
+                    sk = jax.lax.dynamic_update_index_in_dim(sk, nkv[0], app, 0)
+                    sv = jax.lax.dynamic_update_index_in_dim(sv, nkv[1], app, 0)
+                else:
+                    xa, nkv, _ = _transformer_block(
+                        xc, shared, cfg, shard, positions, mode, None, None)
+                    if mode == "prefill":
+                        sk = jax.lax.dynamic_update_index_in_dim(sk, nkv[0], app, 0)
+                        sv = jax.lax.dynamic_update_index_in_dim(sv, nkv[1], app, 0)
+                return xa, sk, sv
+
+            is_attn = (idx % period) == (period - 1)
+            xc, sk, sv = jax.lax.cond(is_attn, with_attn, lambda a: a, (xc, sk, sv))
+            return (xc, sk, sv), (new_st if new_st is not None else 0)
+
+        body = _remat(body, cfg)
+        hd = cfg.resolved_head_dim
+        B = x.shape[0]
+        if mode == "decode":
+            sk, sv = cache.shared_k, cache.shared_v
+            st_in = cache.ssm
+        elif mode == "prefill":
+            Smax = x.shape[1]
+            sk = jnp.zeros((napps, B, Smax, cfg.num_kv_heads, hd), x.dtype)
+            sv = jnp.zeros((napps, B, Smax, cfg.num_kv_heads, hd), x.dtype)
+            st_in = None
+        else:  # train: with_attn never touches sk/sv -> zero-size dummies
+            sk = sv = jnp.zeros((0,), x.dtype)
+            st_in = None
+        idxs = jnp.arange(nl)
+        if cfg.scan_layers:
+            if st_in is not None:
+                (x, sk, sv), st_out = jax.lax.scan(
+                    body, (x, sk, sv), (blocks, st_in, idxs))
+            else:
+                (x, sk, sv), st_out = jax.lax.scan(
+                    lambda c, i: body(c, (i[0], None, i[1])),
+                    (x, sk, sv), (blocks, idxs))
+        else:  # unrolled (calibration probes / small models)
+            sts = []
+            carry = (x, sk, sv)
+            for i in range(nl):
+                bp = jax.tree.map(lambda a: a[i], blocks)
+                st = None if st_in is None else st_in[i]
+                carry, st_o = body(carry, (bp, st, idxs[i]))
+                sts.append(st_o)
+            x, sk, sv = carry
+            st_out = jnp.stack(sts) if mode in ("prefill", "decode") else 0
+        if mode in ("prefill", "decode"):
+            new_cache.ssm = st_out
+            new_cache.shared_k, new_cache.shared_v = sk, sv
+        return x, new_cache, aux_total
+
+    raise ValueError(cfg.family)
+
+
+# ================================================================= entry ====
+def forward_train(params, batch, cfg: ModelConfig, shard=NULL_SHARDER):
+    """Next-token CE loss. batch: tokens (B,S) int32, labels (B,S) int32
+    (-1 = masked), plus family extras (patch_embeds / positions)."""
+    x, positions = _embed(params, batch, cfg, shard)
+    x, _, aux = _run_layers(x, params, cfg, shard, positions, "train")
+    logits = _unembed(x, params, cfg, shard).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + MOE_AUX_WEIGHT * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def prefill(params, batch, cfg: ModelConfig, shard=NULL_SHARDER):
+    """Process a full prompt; returns (last_token_logits, Cache)."""
+    x, positions = _embed(params, batch, cfg, shard)
+    B, S = batch["tokens"].shape
+    cache = Cache(length=jnp.full((B,), S, jnp.int32))
+    x, new_cache, _ = _run_layers(x, params, cfg, shard, positions, "prefill",
+                                  cache)
+    new_cache.length = cache.length
+    logits = _unembed(x[:, -1:], params, cfg, shard)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, batch, cache: Cache, cfg: ModelConfig, shard=NULL_SHARDER):
+    """One decode step. batch: tokens (B,1). Returns (logits (B,V), Cache)."""
+    x, positions = _embed(params, batch, cfg, shard)
+    if not cfg.mrope and batch.get("positions") is None:
+        positions = cache.length[:, None]
+    x, new_cache, _ = _run_layers(x, params, cfg, shard, positions, "decode", cache)
+    new_cache.length = cache.length + 1
+    logits = _unembed(x, params, cfg, shard)
+    return logits[:, 0], new_cache

@@ -1,0 +1,153 @@
+"""Public model API: family dispatch + input specs for every (arch x shape).
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, zero allocation) — the dry-run contract.
+``input_axes`` returns the matching logical-axes pytree for shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, lm
+from repro.models.lm import Cache
+from repro.models.params import (
+    NULL_SHARDER,
+    Sharder,
+    init_params,
+    param_axes,
+    param_shapes,
+    param_shardings,
+)
+
+
+def get_module(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else lm
+
+
+def schema(cfg: ModelConfig):
+    return get_module(cfg).schema(cfg)
+
+
+def init(cfg: ModelConfig, rng: jax.Array):
+    return init_params(schema(cfg), rng, jnp.dtype(cfg.param_dtype))
+
+
+def specs(cfg: ModelConfig):
+    """Param ShapeDtypeStructs — dry-run stand-in for real weights."""
+    return param_shapes(schema(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def axes(cfg: ModelConfig):
+    return param_axes(schema(cfg))
+
+
+def shardings(cfg: ModelConfig, mesh):
+    return param_shardings(schema(cfg), mesh, cfg.rules())
+
+
+# ------------------------------------------------------------ input specs --
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Model inputs for one cell. For decode kinds this includes the cache."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.compute_dtype)
+    tok = lambda *s: jax.ShapeDtypeStruct(s, i32)
+
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), act),
+                "tokens": tok(B, encdec.DEC_LEN),
+                "labels": tok(B, encdec.DEC_LEN),
+            }
+        if shape.kind == "prefill":
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), act),
+                "tokens": tok(B, 1),
+            }
+        return {"tokens": tok(B, 1), "cache": encdec.cache_specs(cfg, B, S)}
+
+    batch: Dict[str, Any] = {}
+    if shape.kind == "train":
+        batch["tokens"] = tok(B, S)
+        batch["labels"] = tok(B, S)
+    elif shape.kind == "prefill":
+        batch["tokens"] = tok(B, S)
+    else:  # decode: one new token against a cache of S
+        batch["tokens"] = tok(B, 1)
+        batch["cache"] = lm.cache_specs(cfg, B, S)
+
+    if cfg.family == "vlm":
+        if shape.kind in ("train", "prefill"):
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, min(cfg.num_patches, S), cfg.d_model), act)
+            batch["positions"] = tok(3, B, S)
+        else:
+            batch["positions"] = tok(3, B, 1)
+    return batch
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    ax: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            return {"frames": ("batch", None, None),
+                    "tokens": ("batch", None), "labels": ("batch", None)}
+        if shape.kind == "prefill":
+            return {"frames": ("batch", None, None), "tokens": ("batch", None)}
+        return {"tokens": ("batch", None), "cache": _encdec_cache_axes()}
+
+    if shape.kind == "train":
+        ax = {"tokens": ("batch", None), "labels": ("batch", None)}
+    elif shape.kind == "prefill":
+        ax = {"tokens": ("batch", None)}
+    else:
+        ax = {"tokens": ("batch", None), "cache": lm.cache_axes(cfg)}
+    if cfg.family == "vlm":
+        if shape.kind in ("train", "prefill"):
+            ax["patch_embeds"] = ("batch", None, None)
+            ax["positions"] = (None, "batch", None)
+        else:
+            ax["positions"] = (None, "batch", None)
+    return ax
+
+
+def _encdec_cache_axes() -> Cache:
+    attn = ("layers", "batch", "cache_seq", "kv_heads", None)
+    return Cache(k=attn, v=attn, shared_k=attn, shared_v=attn, length=("batch",))
+
+
+# ------------------------------------------------------------- smoke data --
+def smoke_batch(cfg: ModelConfig, shape_kind: str, rng: jax.Array,
+                batch: int = 2, seq: int = 64) -> Dict[str, Any]:
+    """Small concrete batch for CPU smoke tests (matches input_specs layout)."""
+    k1, k2 = jax.random.split(rng)
+    act = jnp.dtype(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        dec = 16
+        if shape_kind == "train":
+            return {
+                "frames": jax.random.normal(k1, (batch, seq, cfg.d_model), act),
+                "tokens": jax.random.randint(k2, (batch, dec), 0, cfg.vocab_size),
+                "labels": jax.random.randint(k2, (batch, dec), 0, cfg.vocab_size),
+            }
+        return {
+            "frames": jax.random.normal(k1, (batch, seq, cfg.d_model), act),
+            "tokens": jax.random.randint(k2, (batch, 1), 0, cfg.vocab_size),
+        }
+    out = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k2, (batch, seq), 0, cfg.vocab_size),
+    }
+    if shape_kind != "train":
+        del out["labels"]
+    if cfg.family == "vlm":
+        np_ = min(cfg.num_patches, seq)
+        out["patch_embeds"] = jax.random.normal(k1, (batch, np_, cfg.d_model), act)
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (batch, seq))
+        out["positions"] = jnp.stack([pos, pos, pos])
+    return out

@@ -1,0 +1,155 @@
+"""Parameter schema: single source of truth for shapes, logical axes, and init.
+
+A schema is a pytree (nested dicts) of ``ParamSpec``. From it we derive:
+  * ``init_params``   — materialized arrays (tests, real training),
+  * ``param_shapes``  — ShapeDtypeStructs (dry-run: no allocation),
+  * ``param_axes``    — logical-axes pytree (sharding rule application),
+  * ``param_shardings`` — NamedShardings for a mesh + rule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(schema, rng: jax.Array, dtype) -> Any:
+    """Materialize a schema into actual arrays (fan-in scaled normal init)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for spec, k in zip(leaves, rngs):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+            std = spec.scale / math.sqrt(fan_in)
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_shapes(schema, dtype) -> Any:
+    """ShapeDtypeStruct pytree — dry-run stand-in, no device allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), schema, is_leaf=_is_spec
+    )
+
+
+def param_axes(schema) -> Any:
+    return jax.tree.map(lambda s: s.axes, schema, is_leaf=_is_spec)
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: Mapping[str, Any]) -> P:
+    """Map logical axis names to a PartitionSpec via the rule table.
+
+    Duplicate mesh axes (illegal in a PartitionSpec) keep the first occurrence;
+    later dims fall back to replication.
+    """
+    used: set = set()
+    out = []
+    for name in axes:
+        mesh_axes = rules.get(name) if name else None
+        if mesh_axes is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        picked = tuple(a for a in mesh_axes if a not in used)
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    return P(*out)
+
+
+def filter_rules_for_mesh(rules: Mapping[str, Any], mesh: Mesh) -> dict:
+    """Drop mesh axes that don't exist on this mesh (e.g. 'pod' on single-pod)."""
+    ok = set(mesh.axis_names)
+
+    def fix(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in ok else None
+        if not isinstance(v, (tuple, list)):
+            return v        # non-axis option (e.g. pad_kv_cache flag)
+        kept = tuple(a for a in v if a in ok)
+        return kept if kept else None
+
+    return {k: fix(v) for k, v in rules.items()}
+
+
+def param_shardings(schema, mesh: Mesh, rules: Mapping[str, Any]) -> Any:
+    rules = filter_rules_for_mesh(rules, mesh)
+
+    def one(spec: ParamSpec):
+        pspec = logical_to_spec(spec.axes, rules)
+        # Refuse shardings that don't divide the dim: fall back to replication
+        # for that dim (keeps whisper's 12 heads off the 16-way axis, etc.).
+        fixed = []
+        for dim, axis in zip(spec.shape, pspec):
+            if axis is None:
+                fixed.append(None)
+                continue
+            names = (axis,) if isinstance(axis, str) else axis
+            total = 1
+            for n in names:
+                total *= mesh.shape[n]
+            fixed.append(axis if dim % total == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(one, schema, is_leaf=_is_spec)
+
+
+class Sharder:
+    """Applies with_sharding_constraint from logical axes; no-op without mesh."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Mapping[str, Any]):
+        self.mesh = mesh
+        self.rules = filter_rules_for_mesh(rules, mesh) if mesh is not None else dict(rules)
+
+    def __call__(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        assert len(axes) == x.ndim, (axes, x.shape)
+        pspec = logical_to_spec(axes, self.rules)
+        fixed = []
+        for dim, axis in zip(x.shape, pspec):
+            if axis is None:
+                fixed.append(None)
+                continue
+            names = (axis,) if isinstance(axis, str) else axis
+            total = 1
+            for n in names:
+                total *= self.mesh.shape[n]
+            fixed.append(axis if dim % total == 0 else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*fixed))
+        )
+
+
+NULL_SHARDER = Sharder(None, {})

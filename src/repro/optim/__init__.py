@@ -1,0 +1,16 @@
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import (
+    compress_int8,
+    decompress_int8,
+    compressed_psum,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "compress_int8",
+    "decompress_int8",
+    "compressed_psum",
+]

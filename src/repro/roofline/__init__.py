@@ -1,0 +1,19 @@
+from repro.roofline.analysis import (
+    HW,
+    Hardware,
+    RooflineReport,
+    collective_bytes,
+    parse_hlo_collectives,
+    roofline_terms,
+)
+from repro.roofline.model_flops import model_flops
+
+__all__ = [
+    "HW",
+    "Hardware",
+    "RooflineReport",
+    "collective_bytes",
+    "parse_hlo_collectives",
+    "roofline_terms",
+    "model_flops",
+]

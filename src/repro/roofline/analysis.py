@@ -1,0 +1,203 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+This container has no TPU, so instead of wall-clock MFU we derive, per
+(arch x shape x mesh):
+
+  compute term    = HLO_FLOPs        / (chips * peak_FLOPs)
+  memory term     = HLO_bytes        / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: we parse the optimized HLO text and sum the
+shaped payload of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Note on totals: XLA's cost_analysis on an SPMD-partitioned module reports
+the *per-partition* program, so terms divide by per-chip peaks directly;
+``normalize="global"`` multiplies by chip count first when an unpartitioned
+(single-device-program) module is analyzed. The dry-run driver verifies
+which convention holds by comparing against the analytic 6ND model and
+records the ratio (MODEL_FLOPS / HLO_FLOPs) in every report row.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, Optional, Tuple
+
+__all__ = ["HW", "Hardware", "collective_bytes", "roofline_terms",
+           "RooflineReport", "parse_hlo_collectives"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    link_bw: float = 50e9             # bytes/s per ICI link
+    hbm_per_chip: float = 16e9        # capacity (fit check)
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g. "bf16[16,4096,1024]{2,1,0}" or "f32[]"; tuple shapes handled by findall
+_SHAPE_RE = re.compile(r"\b([a-z]\w*?)\[([\d,]*)\]")
+_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+# "%all-gather.7 = bf16[...] all-gather(" — capture result shapes + kind
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[a-z][^=]*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+# replica_groups={{0,1,..},{..}} or iota form replica_groups=[8,32]<=[256]...
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shapes(shape_str: str):
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dtype])
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))   # [num_groups, group_size]
+    return 2  # unknown: conservative minimum
+
+
+def _wire_bytes(kind: str, shapes, n: int) -> float:
+    """Per-chip ICI wire traffic for a ring implementation of the op.
+
+    R = result bytes (for -start tuples the result is the last/largest
+    component). all-gather: (n-1)/n * R; all-reduce: 2(n-1)/n * R (reduce-
+    scatter + all-gather phases); reduce-scatter: (n-1) * R (operand is
+    n*R); all-to-all: (n-1)/n * R; collective-permute: R.
+    """
+    if not shapes:
+        return 0.0
+    if kind == "all-gather":
+        r = max(shapes)
+        return (n - 1) / n * r
+    r = shapes[-1]
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * r
+    if kind == "reduce-scatter":
+        return float(n - 1) * r
+    if kind == "all-to-all":
+        return (n - 1) / n * r
+    return float(max(shapes))      # collective-permute
+
+
+def parse_hlo_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-chip collective wire bytes per kind, parsed from optimized HLO.
+
+    Async ``-start``/``-done`` pairs are counted once (on the -start).
+    """
+    out: Dict[str, Dict[str, float]] = {
+        k: {"bytes": 0.0, "count": 0} for k in _COLLECTIVE_KINDS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        result_shapes, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        b = _wire_bytes(kind, _shapes(result_shapes), _group_size(line))
+        out[kind]["bytes"] += b
+        out[kind]["count"] += 1
+    return out
+
+
+def collective_bytes(hlo_text: str) -> float:
+    per = parse_hlo_collectives(hlo_text)
+    return float(sum(v["bytes"] for v in per.values()))
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                 # per-chip program FLOPs
+    hlo_bytes: float                 # per-chip HBM traffic
+    coll_bytes: float                # per-chip collective payload
+    model_flops: float               # analytic 6*N*D (global, per step)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bytes_per_device: float = 0.0    # from memory_analysis (fit check)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (global HLO FLOPs) — remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total > 0 else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        max-term time: useful compute time / roofline step time."""
+        t_useful = self.model_flops / (self.chips * HW.peak_flops)
+        return t_useful / self.step_time_s if self.step_time_s > 0 else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "dominant": self.dominant,
+            "step_ms": round(self.step_time_s * 1e3, 3),
+            "useful_flops_frac": round(self.useful_flops_fraction, 4),
+            "roofline_frac": round(self.roofline_fraction, 4),
+            "bytes_per_device_gb": round(self.bytes_per_device / 1e9, 3),
+        }
+
+
+def roofline_terms(*, arch: str, shape: str, mesh: str, chips: int,
+                   hlo_flops: float, hlo_bytes: float, coll_bytes: float,
+                   model_flops: float, bytes_per_device: float = 0.0,
+                   hw: Hardware = HW) -> RooflineReport:
+    """All inputs are per-chip program quantities (XLA SPMD convention)."""
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, coll_bytes=coll_bytes,
+        model_flops=model_flops,
+        compute_s=hlo_flops / hw.peak_flops,
+        memory_s=hlo_bytes / hw.hbm_bw,
+        collective_s=coll_bytes / hw.link_bw,
+        bytes_per_device=bytes_per_device,
+    )

@@ -1,0 +1,21 @@
+from repro.train.steps import (
+    TrainState,
+    init_train_state,
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    make_train_state_specs,
+    state_shardings,
+    batch_shardings,
+)
+
+__all__ = [
+    "TrainState",
+    "init_train_state",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "make_train_state_specs",
+    "state_shardings",
+    "batch_shardings",
+]

@@ -1,0 +1,159 @@
+"""Step builders: train_step / prefill / decode as pure jit-able functions.
+
+These are the functions the dry-run lowers against the production mesh and the
+drivers execute for real. Gradient accumulation (cfg.grad_accum microbatches)
+is a lax.scan so the HLO stays one-microbatch-sized.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_api
+from repro.models.params import Sharder, logical_to_spec, filter_rules_for_mesh
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+    def tree_flatten(self):
+        return [self.params, self.opt, self.step], None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def make_train_state_specs(cfg: ModelConfig) -> TrainState:
+    pspecs = model_api.specs(cfg)
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return TrainState(
+        params=pspecs,
+        opt={"m": jax.tree.map(f32, pspecs), "v": jax.tree.map(f32, pspecs),
+             "count": jax.ShapeDtypeStruct((), jnp.int32)},
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def init_train_state(cfg: ModelConfig, rng: jax.Array) -> TrainState:
+    params = model_api.init(cfg, rng)
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def state_shardings(cfg: ModelConfig, mesh) -> TrainState:
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ps = model_api.shardings(cfg, mesh)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=ps,
+        opt={"m": ps, "v": ps, "count": rep},
+        step=rep,
+    )
+
+
+def batch_shardings(cfg: ModelConfig, shape, mesh):
+    """NamedShardings for the input batch, with per-dim divisibility
+    fallback (e.g. global_batch=1 long-context decode can't shard on data).
+
+    GQA caches whose kv-head count doesn't divide the model axis use
+    cfg.kv_head_replication (see configs/base.py) rather than uneven
+    sharding — jit rejects non-divisible shardings on inputs.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rules = filter_rules_for_mesh(cfg.rules(), mesh)
+    ax = model_api.input_axes(cfg, shape)
+    specs = model_api.input_specs(cfg, shape)
+
+    def to_sharding(a, spec):
+        pspec = logical_to_spec(a, rules)
+        fixed = []
+        for dim, axis in zip(spec.shape, pspec):
+            if axis is None:
+                fixed.append(None)
+                continue
+            names = (axis,) if isinstance(axis, str) else axis
+            total = 1
+            for n in names:
+                total *= mesh.shape[n]
+            fixed.append(axis if dim % total == 0 else None)
+        return NamedSharding(mesh, P(*fixed))
+
+    is_axes = lambda x: (isinstance(x, tuple)
+                         and all(isinstance(e, (str, type(None))) for e in x))
+    flat_ax, treedef = jax.tree.flatten(ax, is_leaf=is_axes)
+    flat_specs = jax.tree.leaves(specs)
+    assert len(flat_ax) == len(flat_specs), (len(flat_ax), len(flat_specs))
+    return jax.tree.unflatten(
+        treedef, [to_sharding(a, s) for a, s in zip(flat_ax, flat_specs)])
+
+
+def make_train_step(cfg: ModelConfig, mesh=None, opt_cfg: Optional[AdamWConfig] = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    mod = model_api.get_module(cfg)
+    shard = Sharder(mesh, cfg.rules())
+
+    def loss_fn(params, batch):
+        return mod.forward_train(params, batch, cfg, shard)
+
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, Any]]:
+        if cfg.grad_accum > 1:
+            k = cfg.grad_accum
+
+            def micro(carry, mb):
+                acc = carry
+                g, m = grad_fn(state.params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return acc, m
+
+            split = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, ms = jax.lax.scan(micro, zero, split)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        else:
+            grads, metrics = grad_fn(state.params, batch)
+        params, opt, opt_metrics = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None):
+    mod = model_api.get_module(cfg)
+    shard = Sharder(mesh, cfg.rules())
+
+    def prefill_step(params, batch):
+        return mod.prefill(params, batch, cfg, shard)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None):
+    mod = model_api.get_module(cfg)
+    shard = Sharder(mesh, cfg.rules())
+
+    def decode_step(params, batch):
+        cache = batch["cache"]
+        rest = {k: v for k, v in batch.items() if k != "cache"}
+        return mod.decode_step(params, rest, cache, cfg, shard)
+
+    return decode_step

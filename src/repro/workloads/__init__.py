@@ -1,0 +1,29 @@
+from repro.workloads.generator import (
+    MAX_TOKENS,
+    NUM_OP_TYPES,
+    NUM_PARTITION_TYPES,
+    OPERATOR_FEATURE_DIM,
+    Job,
+    Operator,
+    Stage,
+    build_corpus,
+    population_stats,
+    sample_job,
+)
+from repro.workloads.executor import execute, observed_skyline, reexecute_fractions
+
+__all__ = [
+    "MAX_TOKENS",
+    "NUM_OP_TYPES",
+    "NUM_PARTITION_TYPES",
+    "OPERATOR_FEATURE_DIM",
+    "Job",
+    "Operator",
+    "Stage",
+    "build_corpus",
+    "population_stats",
+    "sample_job",
+    "execute",
+    "observed_skyline",
+    "reexecute_fractions",
+]

@@ -1,0 +1,250 @@
+"""SCOPE-like synthetic workload generator.
+
+No public SCOPE telemetry exists (the paper's 85k production jobs are
+Microsoft-internal), so — per the repro plan in DESIGN.md — we synthesize a
+population of analytical jobs whose *published* statistics match §5 of the
+paper: right-skewed runtimes and token counts (tokens 1..6287, median ≈ 54,
+mean ≈ 154), DAGs of operators grouped into stages, and Table-2 operator
+features (cardinalities, costs, partitioning) that are *noisy estimates* of
+the quantities that actually drive execution — so learned models can predict
+runtime from compile-time features, but imperfectly, as in production.
+
+A Job is:
+  operators: feature rows (Table 2) forming a DAG (the "query plan");
+  stages:    execution units — ``num_tasks`` parallel tasks of
+             ``task_duration`` seconds each, gated on upstream stages.
+
+The executor (executor.py) runs stages under a token cap to produce the
+resource-consumption skyline; the generator alone fixes all ground truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+NUM_OP_TYPES = 35       # paper Table 2: 35 physical operator types
+NUM_PARTITION_TYPES = 4  # paper Table 2: 4 partition types
+MAX_TOKENS = 6287        # paper §5: peak tokens observed in the population
+
+# Per-op-type cost coefficient and selectivity (fixed "engine" truth table —
+# the module-level RNG makes it deterministic across processes).
+_rng = np.random.RandomState(20210415)
+OP_COST_COEFF = np.exp(_rng.uniform(-1.5, 1.5, NUM_OP_TYPES))
+OP_SELECTIVITY = np.clip(_rng.lognormal(-0.3, 0.6, NUM_OP_TYPES), 0.05, 2.0)
+del _rng
+
+
+@dataclasses.dataclass
+class Operator:
+    """One physical operator — a node of the query plan DAG (Table 2 features)."""
+    op_type: int
+    partition_type: int
+    est_cardinality: float          # optimizer estimate (noisy)
+    input_cardinality: float
+    input_children_cardinality: float
+    avg_row_length: float
+    est_cost: float
+    est_exclusive_cost: float
+    est_total_cost: float
+    num_partitions: int
+    num_partitioning_columns: int
+    num_sort_columns: int
+
+    def feature_row(self) -> np.ndarray:
+        """Continuous+count features (log1p-compressed), then one-hots."""
+        cont = np.log1p([
+            self.est_cardinality, self.input_cardinality,
+            self.input_children_cardinality, self.avg_row_length,
+            self.est_cost, self.est_exclusive_cost, self.est_total_cost,
+        ])
+        cnt = [np.log2(1.0 + self.num_partitions), self.num_partitioning_columns,
+               self.num_sort_columns]
+        op_1h = np.zeros(NUM_OP_TYPES)
+        op_1h[self.op_type] = 1.0
+        pt_1h = np.zeros(NUM_PARTITION_TYPES)
+        pt_1h[self.partition_type] = 1.0
+        return np.concatenate([cont, cnt, op_1h, pt_1h]).astype(np.float32)
+
+
+OPERATOR_FEATURE_DIM = 7 + 3 + NUM_OP_TYPES + NUM_PARTITION_TYPES  # = 49
+
+
+@dataclasses.dataclass
+class Stage:
+    """Execution stage: ``num_tasks`` independent tasks, each one token for
+    ``task_duration`` seconds, runnable once every stage in ``deps`` finished."""
+    op_ids: List[int]
+    num_tasks: int
+    task_duration: int
+    deps: List[int]
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    operators: List[Operator]
+    edges: List[Tuple[int, int]]     # operator DAG (src -> dst)
+    stages: List[Stage]
+    default_tokens: int              # what the "user" asked for
+
+    @property
+    def peak_parallelism(self) -> int:
+        return max(s.num_tasks for s in self.stages)
+
+    @property
+    def total_work(self) -> int:
+        """Token-seconds of actual work (area lower bound of any skyline)."""
+        return int(sum(s.num_tasks * s.task_duration for s in self.stages))
+
+    def num_operators(self) -> int:
+        return len(self.operators)
+
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+
+# ----------------------------------------------------------------- sampling --
+def _sample_stage_chain(trng: np.random.RandomState,
+                        irng: np.random.RandomState, n_ops: int,
+                        input_card: float, nparts: int
+                        ) -> Tuple[List[Operator], float]:
+    """Chain of operators inside one stage; returns (ops, output cardinality).
+
+    Structural draws (operator types, row lengths, partitioning) come from
+    the *template* rng; optimizer-estimate noise from the *instance* rng.
+    """
+    ops: List[Operator] = []
+    card = input_card
+    child_card = input_card
+    total_cost_acc = 0.0
+    for _ in range(n_ops):
+        ot = int(trng.randint(NUM_OP_TYPES))
+        out_card = max(1.0, card * OP_SELECTIVITY[ot])
+        row_len = float(np.clip(trng.lognormal(4.2, 0.7), 8, 4096))
+        true_cost = card * OP_COST_COEFF[ot] * row_len * 1e-6
+        noisy = lambda x: float(x * irng.lognormal(0.0, 0.35))
+        exc = noisy(true_cost)
+        total_cost_acc += exc
+        ops.append(Operator(
+            op_type=ot,
+            partition_type=int(trng.randint(NUM_PARTITION_TYPES)),
+            est_cardinality=noisy(out_card),
+            input_cardinality=noisy(card),
+            input_children_cardinality=noisy(child_card),
+            avg_row_length=row_len,
+            est_cost=noisy(true_cost),
+            est_exclusive_cost=exc,
+            est_total_cost=total_cost_acc,
+            num_partitions=nparts,
+            num_partitioning_columns=int(trng.randint(0, 4)),
+            num_sort_columns=int(trng.randint(0, 5)),
+        ))
+        child_card = card
+        card = out_card
+    return ops, card
+
+
+def sample_job(job_id: int, rng: np.random.RandomState,
+               template_seed: Optional[int] = None) -> Job:
+    """One SCOPE-like job. Widths/durations give the §5 population shape.
+
+    Recurrence: production SCOPE workloads are dominated by *recurring*
+    pipelines — the same script re-submitted over fresh data. Passing a
+    ``template_seed`` fixes every structural draw (DAG shape, operator
+    types, row lengths, partition jitter) while the instance ``rng`` still
+    varies the data volume, estimate noise, execution noise, and the user's
+    token request. Ad-hoc jobs simply use a fresh template per job.
+    """
+    trng = np.random.RandomState(template_seed if template_seed is not None
+                                 else rng.randint(2**31 - 1))
+    n_stages = 1 + min(int(trng.geometric(0.30)), 11)
+    operators: List[Operator] = []
+    edges: List[Tuple[int, int]] = []
+    stages: List[Stage] = []
+    stage_out_card: List[float] = []
+    stage_last_op: List[int] = []
+    # instance-level data volume scale (the "fresh day of data")
+    base_card = float(np.clip(trng.lognormal(15.2, 1.2), 1e3, 3e10))
+    inst_scale = float(rng.lognormal(0.0, 0.5))
+
+    for sid in range(n_stages):
+        if sid == 0:
+            deps: List[int] = []
+            input_card = base_card * inst_scale
+        else:
+            k = 1 + int(trng.rand() < 0.3)
+            deps = sorted(trng.choice(sid, size=min(k, sid), replace=False).tolist())
+            input_card = float(sum(stage_out_card[d] for d in deps))
+
+        # SCOPE semantics: the partition count is a compile-time quantity
+        # that fixes the stage's task count (width); per-task work follows
+        # from rows-per-partition. Both are *observable* through Table-2
+        # features (num_partitions exactly, costs noisily) — the learnable
+        # signal. Partitioning roughly tracks data volume with 2x jitter.
+        nparts = int(2 ** np.clip(
+            np.round(np.log2(max(input_card, 1.0) / 5e4)
+                     + trng.uniform(-1.0, 1.0)), 0, 13))
+        n_ops = 1 + int(trng.geometric(0.45))
+        ops, out_card = _sample_stage_chain(trng, rng, min(n_ops, 6),
+                                            input_card, nparts)
+        base = len(operators)
+        operators.extend(ops)
+        # chain ops within the stage
+        for i in range(len(ops) - 1):
+            edges.append((base + i, base + i + 1))
+        # connect from the last op of each dependency stage
+        for d in deps:
+            edges.append((stage_last_op[d], base))
+
+        width = int(np.clip(nparts, 1, MAX_TOKENS))
+        rows_per_task = input_card / nparts
+        coeff = float(np.mean([OP_COST_COEFF[o.op_type] for o in ops]))
+        dur = int(np.clip(round(rows_per_task * coeff * 8e-4
+                                * rng.lognormal(0.0, 0.25)), 1, 1200))
+        stages.append(Stage(op_ids=list(range(base, base + len(ops))),
+                            num_tasks=width, task_duration=dur, deps=deps))
+        stage_out_card.append(out_card)
+        stage_last_op.append(base + len(ops) - 1)
+
+    peak = max(s.num_tasks for s in stages)
+    # users rarely allocate thoughtfully: mostly defaults / round numbers
+    if rng.rand() < 0.5:
+        default = int(rng.choice([20, 50, 100, 200, 500],
+                                 p=[0.15, 0.35, 0.30, 0.15, 0.05]))
+    else:
+        default = int(np.clip(round(peak * rng.lognormal(0.0, 0.6)),
+                              1, MAX_TOKENS))
+    return Job(job_id=job_id, operators=operators, edges=edges, stages=stages,
+               default_tokens=max(1, default))
+
+
+def build_corpus(n_jobs: int, seed: int = 0, *, recurring_frac: float = 0.8,
+                 jobs_per_template: int = 20) -> List[Job]:
+    """Corpus with SCOPE-like recurrence: ``recurring_frac`` of jobs are
+    instances of a shared template pool; the rest are ad-hoc one-offs."""
+    rng = np.random.RandomState(seed)
+    n_templates = max(1, int(n_jobs * recurring_frac / jobs_per_template))
+    template_seeds = rng.randint(2**31 - 1, size=n_templates)
+    jobs = []
+    for i in range(n_jobs):
+        if rng.rand() < recurring_frac:
+            ts = int(template_seeds[rng.randint(n_templates)])
+            jobs.append(sample_job(i, rng, template_seed=ts))
+        else:
+            jobs.append(sample_job(i, rng))
+    return jobs
+
+
+def population_stats(jobs: Sequence[Job]) -> dict:
+    toks = np.array([j.default_tokens for j in jobs])
+    peaks = np.array([j.peak_parallelism for j in jobs])
+    return {
+        "n_jobs": len(jobs),
+        "tokens_median": float(np.median(toks)),
+        "tokens_mean": float(np.mean(toks)),
+        "tokens_max": int(np.max(toks)),
+        "peak_median": float(np.median(peaks)),
+        "peak_max": int(np.max(peaks)),
+    }

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see the real
+1-device CPU topology; mesh-shape tests spawn subprocesses that set
+xla_force_host_platform_device_count themselves."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def small_corpus():
+    from repro.workloads import build_corpus
+    return build_corpus(60, seed=7)

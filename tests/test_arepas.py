@@ -1,0 +1,122 @@
+"""AREPAS (paper §3, Algorithm 1): oracle semantics, jnp equivalence,
+area-conservation and monotonicity properties, kernel parity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import arepas
+from repro.core.arepas import (
+    augment_job,
+    simulate_runtime,
+    simulate_runtime_jax,
+    simulate_skyline,
+    skyline_area,
+)
+
+
+# ------------------------------------------------------------ known cases --
+def test_flat_skyline_stretches_exactly():
+    # 10 seconds at 10 tokens == 100 token-seconds; at 5 tokens -> 20 seconds
+    sky = np.full(10, 10)
+    sim = simulate_skyline(sky, 5)
+    assert sim.size == 20
+    assert np.all(sim == 5)
+    assert skyline_area(sim) == skyline_area(sky)
+
+
+def test_under_cap_sections_copied_verbatim():
+    sky = np.array([2, 2, 8, 8, 3, 3])
+    sim = simulate_skyline(sky, 4)
+    # [2,2] copied, [8,8]=16 area -> 4 seconds at 4, [3,3] copied
+    assert list(sim) == [2, 2, 4, 4, 4, 4, 3, 3]
+
+
+def test_allocation_at_peak_is_identity():
+    sky = np.array([1, 5, 3, 5, 2])
+    sim = simulate_skyline(sky, 5)
+    assert np.array_equal(sim, sky)
+
+
+def test_integer_truncation_matches_algorithm1():
+    # area 7 at cap 2 -> int(7/2) = 3 seconds (Algorithm 1 truncates)
+    sky = np.array([7])
+    assert simulate_runtime(sky, 2) == 3
+
+
+# ------------------------------------------------------------- properties --
+@st.composite
+def skylines(draw):
+    n = draw(st.integers(1, 120))
+    vals = draw(st.lists(st.integers(1, 300), min_size=n, max_size=n))
+    return np.asarray(vals, np.int64)
+
+
+@given(skylines(), st.integers(1, 320))
+@settings(max_examples=200, deadline=None)
+def test_jax_equals_numpy_oracle(sky, alloc):
+    smax = 128
+    padded = np.zeros(smax, np.float32)
+    padded[:sky.size] = sky
+    got = int(simulate_runtime_jax(jnp.asarray(padded),
+                                   jnp.asarray(sky.size),
+                                   jnp.asarray(float(alloc))))
+    want = simulate_runtime(sky, alloc)
+    assert got == want, (got, want, sky.tolist(), alloc)
+
+
+@given(skylines(), st.integers(1, 300))
+@settings(max_examples=100, deadline=None)
+def test_area_preserved_within_truncation(sky, alloc):
+    sim = simulate_skyline(sky, alloc)
+    # each over-cap section loses < alloc token-seconds to int truncation
+    n_sections = 1 + int(np.sum(np.diff(np.sign(sky - alloc)) != 0))
+    assert skyline_area(sky) - skyline_area(sim) < alloc * (n_sections + 1)
+    assert skyline_area(sim) <= skyline_area(sky) + 1e-9
+
+
+@given(skylines())
+@settings(max_examples=60, deadline=None)
+def test_runtime_monotone_non_increasing_in_allocation(sky):
+    peak = int(sky.max())
+    allocs = sorted({1, max(1, peak // 4), max(1, peak // 2), peak})
+    rts = [simulate_runtime(sky, a) for a in allocs]
+    assert all(a >= b for a, b in zip(rts, rts[1:])), (allocs, rts)
+
+
+@given(skylines())
+@settings(max_examples=60, deadline=None)
+def test_simulated_skyline_respects_cap(sky):
+    alloc = max(1, int(sky.max()) // 2)
+    sim = simulate_skyline(sky, alloc)
+    assert sim.size == 0 or sim.max() <= max(alloc, sky.min())
+
+
+# ------------------------------------------------------------ augment API --
+def test_augment_job_monotone_and_floored():
+    sky = np.array([1, 9, 9, 9, 2, 2])
+    allocs, rts = augment_job(sky, observed_tokens=9)
+    assert np.all(np.diff(allocs) > 0)
+    assert np.all(np.diff(rts) <= 0)              # more tokens, never slower
+    # over-allocated points floored at the observed runtime
+    assert rts[allocs > 9][0] == len(sky)
+
+
+# ------------------------------------------------------- pallas kernel op --
+def test_kernel_matches_oracle_random():
+    from repro.kernels import arepas_runtimes
+    rng = np.random.RandomState(3)
+    J, Smax, K = 12, 512, 3
+    skylines = np.zeros((J, Smax), np.float32)
+    vlens = rng.randint(5, Smax, size=J).astype(np.int32)
+    allocs = np.zeros((J, K), np.float32)
+    for j in range(J):
+        sky = np.repeat(rng.randint(1, 99, size=vlens[j] // 4 + 1), 4)[:vlens[j]]
+        skylines[j, :vlens[j]] = sky
+        allocs[j] = np.maximum(1, (np.array([0.9, 0.5, 0.2]) * sky.max()).astype(int))
+    out = np.asarray(arepas_runtimes(jnp.asarray(skylines), jnp.asarray(vlens),
+                                     jnp.asarray(allocs)))
+    for j in range(J):
+        for k in range(K):
+            want = simulate_runtime(skylines[j, :vlens[j]], int(allocs[j, k]))
+            assert out[j, k] == want, (j, k)

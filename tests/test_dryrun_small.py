@@ -1,0 +1,80 @@
+"""Dry-run machinery on a small subprocess mesh (8 fake host devices).
+
+The production dry-run needs 512 devices and full configs (slow); these
+tests prove the same code path — mesh build, explicit in_shardings, lower,
+compile, cost/collective extraction — on smoke configs in a subprocess so
+the main test process keeps its 1-device view.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax
+    from repro.configs import get_config, get_shape
+    from repro.models import model_api
+    from repro.roofline import parse_hlo_collectives
+    from repro.train.steps import (batch_shardings, make_decode_step,
+                                   make_prefill_step, make_train_state_specs,
+                                   make_train_step, state_shardings)
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    out = {}
+    for arch in %r:
+        cfg = get_config(arch, smoke=True)
+        for kind in ("train", "prefill", "decode"):
+            shape = dataclasses.replace(get_shape("train_4k"),
+                                        seq_len=64, global_batch=4, kind=kind)
+            if kind == "train":
+                step = make_train_step(cfg, mesh)
+                args = (make_train_state_specs(cfg),
+                        model_api.input_specs(cfg, shape))
+                in_sh = (state_shardings(cfg, mesh),
+                         batch_shardings(cfg, shape, mesh))
+            elif kind == "prefill":
+                step = make_prefill_step(cfg, mesh)
+                args = (model_api.specs(cfg), model_api.input_specs(cfg, shape))
+                in_sh = (model_api.shardings(cfg, mesh),
+                         batch_shardings(cfg, shape, mesh))
+            else:
+                step = make_decode_step(cfg, mesh)
+                args = (model_api.specs(cfg), model_api.input_specs(cfg, shape))
+                in_sh = (model_api.shardings(cfg, mesh),
+                         batch_shardings(cfg, shape, mesh))
+            compiled = jax.jit(step, in_shardings=in_sh).lower(*args).compile()
+            cost = compiled.cost_analysis()
+            coll = parse_hlo_collectives(compiled.as_text())
+            out[f"{arch}:{kind}"] = {
+                "flops": float(cost.get("flops", 0)),
+                "coll_bytes": sum(v["bytes"] for v in coll.values()),
+            }
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.parametrize("archs", [("qwen2-72b", "qwen3-moe-235b-a22b"),
+                                   ("mamba2-1.3b", "zamba2-2.7b"),
+                                   ("whisper-small", "qwen2-vl-7b")])
+def test_smoke_configs_compile_on_8dev_mesh(archs):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT % (list(archs),)],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    for arch in archs:
+        for kind in ("train", "prefill", "decode"):
+            rec = out[f"{arch}:{kind}"]
+            assert rec["flops"] > 0, (arch, kind, rec)
+    # sharded train steps must communicate
+    assert any(v["coll_bytes"] > 0 for k, v in out.items()
+               if k.endswith(":train"))

@@ -1,0 +1,38 @@
+"""Examples must stay runnable — they are the public API contract."""
+import subprocess
+import sys
+import os
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+EX = os.path.join(os.path.dirname(__file__), "..", "examples")
+
+
+def _run(script, *args, timeout=900):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    p = subprocess.run([sys.executable, os.path.join(EX, script), *args],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert p.returncode == 0, p.stderr[-2000:]
+    return p.stdout
+
+
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "PCC fit" in out and "optimal allocation" in out
+
+
+def test_elastic_restart():
+    out = _run("elastic_restart.py")
+    assert "full failure/resize/recovery cycle OK" in out
+
+
+def test_serve_lm():
+    out = _run("serve_lm.py", "--requests", "2", "--new-tokens", "4")
+    assert "req 0" in out
+
+
+def test_train_lm_short():
+    out = _run("train_lm.py", "--steps", "6", "--seq-len", "32",
+               "--global-batch", "2", "--ckpt-dir", "/tmp/tlm_test_ckpt")
+    assert "done: 6 steps" in out

@@ -1,0 +1,159 @@
+"""TASQ prediction models: GBDT, NN, GNN + LF1-3 losses (paper §4.4-4.5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import LossWeights, make_loss
+from repro.core.models.gbdt import GBDT, GBDTConfig
+from repro.core.models.gnn import GNNConfig, make_gnn
+from repro.core.models.nn import NNConfig, fit_model, make_nn, param_count
+from repro.core.pcc import PCCScaler, is_non_increasing
+
+
+# ------------------------------------------------------------------ GBDT ---
+def test_gbdt_fits_gamma_target():
+    rng = np.random.RandomState(0)
+    X = rng.randn(2000, 8)
+    y = np.exp(1.0 + 0.8 * X[:, 0] - 0.5 * X[:, 1] + 0.1 * rng.randn(2000))
+    m = GBDT(GBDTConfig(n_trees=60, max_depth=4)).fit(X[:1600], y[:1600])
+    ape = np.abs(m.predict(X[1600:]) - y[1600:]) / y[1600:]
+    assert np.median(ape) < 0.2, np.median(ape)
+
+
+def test_gbdt_l2_objective():
+    rng = np.random.RandomState(1)
+    X = rng.randn(1200, 5)
+    y = 3.0 * X[:, 0] - X[:, 2] + 0.05 * rng.randn(1200)
+    m = GBDT(GBDTConfig(n_trees=80, max_depth=4, objective="l2")).fit(
+        X[:1000], y[:1000])
+    err = np.abs(m.predict(X[1000:]) - y[1000:])
+    assert np.median(err) < 0.3
+
+
+def test_gbdt_deterministic():
+    rng = np.random.RandomState(2)
+    X, y = rng.randn(500, 4), np.exp(rng.randn(500))
+    p1 = GBDT(GBDTConfig(n_trees=20, seed=7)).fit(X, y).predict(X[:10])
+    p2 = GBDT(GBDTConfig(n_trees=20, seed=7)).fit(X, y).predict(X[:10])
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_gbdt_monotone_not_guaranteed():
+    """The paper's point: tree point-predictions don't guarantee a
+    monotone runtime-vs-tokens trend."""
+    rng = np.random.RandomState(3)
+    n = 800
+    tokens = rng.randint(1, 100, n).astype(np.float64)
+    y = 1000.0 / tokens * np.exp(0.5 * rng.randn(n))
+    X = np.stack([tokens, rng.randn(n)], 1)
+    m = GBDT(GBDTConfig(n_trees=40, max_depth=5)).fit(X, y)
+    grid = np.stack([np.arange(1, 100, 1.0), np.zeros(99)], 1)
+    pred = m.predict(grid)
+    assert np.any(np.diff(pred) > 1e-9)        # at least one local increase
+
+
+# ---------------------------------------------------------------- NN/GNN ---
+def _toy_problem(n=256, seed=0):
+    rng = np.random.RandomState(seed)
+    feats = rng.randn(n, 6).astype(np.float32)
+    a = -(0.3 + 0.5 * (feats[:, 0] > 0))       # two regimes
+    b = np.exp(5.0 + 0.3 * feats[:, 1])
+    scaler = PCCScaler.fit(a, b)
+    alloc = rng.randint(10, 200, n).astype(np.float32)
+    runtime = (b * alloc ** a).astype(np.float32)
+    extras = {"target_z": scaler.encode(a, b),
+              "observed_alloc": alloc,
+              "observed_runtime": runtime,
+              "xgb_runtime": runtime * 1.05}
+    return feats, extras, scaler
+
+
+@pytest.mark.parametrize("loss", ["lf1", "lf2", "lf3"])
+def test_nn_trains_and_guarantees_monotone(loss):
+    feats, extras, scaler = _toy_problem()
+    cfg = NNConfig(epochs=30, batch_size=64, loss=loss, lr=3e-3)
+    params, apply = make_nn(feats.shape[1], cfg)
+    params, hist = fit_model(apply, params, {"features": feats}, extras,
+                             scaler, cfg)
+    assert hist["loss"][-1] < hist["loss"][0]          # learning happened
+    z = apply(params, {"features": jnp.asarray(feats)})
+    a, b = scaler.decode(z)
+    assert np.all(np.asarray(a) < 0) and np.all(np.asarray(b) > 0)
+    assert all(is_non_increasing(float(ai), float(bi))
+               for ai, bi in zip(np.asarray(a)[:20], np.asarray(b)[:20]))
+
+
+def test_gnn_forward_and_training():
+    rng = np.random.RandomState(0)
+    n, N, P = 128, 12, 10
+    gf = rng.randn(n, N, P).astype(np.float32)
+    adj = np.tile(np.eye(N, dtype=np.float32), (n, 1, 1))
+    mask = np.ones((n, N), np.float32)
+    mask[:, 8:] = 0.0                                   # padded nodes
+    feats, extras, scaler = _toy_problem(n)
+    gf[:, 0, 0] = feats[:, 0]                           # plant the signal
+    gf[:, 1, 1] = feats[:, 1]
+
+    params, apply = make_gnn(P, GNNConfig(gcn_dims=(16, 8)))
+    z0 = apply(params, {"features": jnp.asarray(gf), "adj": jnp.asarray(adj),
+                        "mask": jnp.asarray(mask)})
+    assert z0.shape == (n, 2)
+
+    cfg = NNConfig(epochs=20, batch_size=32, loss="lf2", lr=3e-3)
+    params, hist = fit_model(apply, params,
+                             {"features": gf, "adj": adj, "mask": mask},
+                             extras, scaler, cfg)
+    assert hist["loss"][-1] < hist["loss"][0]
+
+
+def test_gnn_padding_invariance():
+    """Padded nodes must not affect the prediction."""
+    rng = np.random.RandomState(1)
+    P = 8
+    params, apply = make_gnn(P, GNNConfig(gcn_dims=(16, 8)))
+
+    def embed(n_pad):
+        N = 4 + n_pad
+        feats = np.zeros((1, N, P), np.float32)
+        feats[0, :4] = rng.RandomState if False else 1.0
+        adj = np.zeros((1, N, N), np.float32)
+        adj[0, :4, :4] = np.eye(4) * 0.5 + 0.125
+        mask = np.zeros((1, N), np.float32)
+        mask[0, :4] = 1.0
+        # garbage in padded region must be ignored
+        feats[0, 4:] = 777.0
+        return apply(params, {"features": jnp.asarray(feats),
+                              "adj": jnp.asarray(adj),
+                              "mask": jnp.asarray(mask)})
+
+    np.testing.assert_allclose(np.asarray(embed(0)), np.asarray(embed(6)),
+                               atol=1e-5)
+
+
+def test_param_counts_order():
+    """GNN should be the heavier model (paper Table 7: 2.2k vs 19.2k)."""
+    nn_params, _ = make_nn(51, NNConfig())
+    gnn_params, _ = make_gnn(49, GNNConfig())
+    assert param_count(gnn_params) > param_count(nn_params)
+
+
+# ---------------------------------------------------------------- losses ---
+def test_loss_composition():
+    _, extras, scaler = _toy_problem(32)
+    z = jnp.asarray(extras["target_z"]) + 0.1
+    batch = {k: jnp.asarray(v) for k, v in extras.items()}
+    l1, m1 = make_loss("lf1", scaler)(z, batch)
+    l2, m2 = make_loss("lf2", scaler)(z, batch)
+    l3, m3 = make_loss("lf3", scaler)(z, batch)
+    assert float(l1) <= float(l2) <= float(l3) + 1e-9
+    assert m1["param_mae"] == m2["param_mae"]
+    assert "runtime_mae_pct" in m2 and "distill_mae_pct" in m3
+
+
+def test_loss_perfect_prediction_only_runtime_noise():
+    _, extras, scaler = _toy_problem(32)
+    z = jnp.asarray(extras["target_z"])
+    batch = {k: jnp.asarray(v) for k, v in extras.items()}
+    l1, _ = make_loss("lf1", scaler)(z, batch)
+    assert float(l1) < 1e-6

@@ -1,0 +1,88 @@
+"""PCC (paper §2.1/§4.1): power-law fit, scaler bijection + sign guarantee,
+optimal-allocation policy."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pcc import (
+    PCCScaler,
+    fit_pcc,
+    fit_pcc_batch,
+    is_non_increasing,
+    optimal_tokens,
+    pcc_runtime,
+)
+
+
+def test_fit_recovers_exact_power_law():
+    a, b = -0.7, 900.0
+    allocs = np.array([10, 20, 50, 100, 200])
+    rts = b * allocs ** a
+    af, bf = fit_pcc(allocs, rts)
+    assert abs(af - a) < 1e-9
+    assert abs(bf - b) / b < 1e-9
+
+
+def test_fit_batch_matches_scalar():
+    rng = np.random.RandomState(0)
+    allocs = np.array([[10, 25, 60, 120]] * 5, np.float64)
+    rts = np.exp(rng.randn(5, 4) * 0.1 + 5.0)
+    a_b, b_b = fit_pcc_batch(jnp.asarray(allocs), jnp.asarray(rts))
+    for i in range(5):
+        a, b = fit_pcc(allocs[i], rts[i])
+        assert abs(float(a_b[i]) - a) < 1e-4
+        assert abs(float(b_b[i]) - b) / b < 1e-3
+
+
+def test_single_allocation_degenerates_to_flat():
+    a, b = fit_pcc(np.array([50, 50, 50]), np.array([100.0, 110.0, 90.0]))
+    assert a == 0.0
+    assert abs(b - np.exp(np.mean(np.log([100, 110, 90])))) < 1e-6
+
+
+def test_amdahl_special_case():
+    allocs = np.array([1, 2, 4, 8, 16])
+    rts = 1000.0 / allocs                       # fully parallel: a = -1
+    a, b = fit_pcc(allocs, rts)
+    assert abs(a + 1.0) < 1e-9
+
+
+@given(st.floats(-3.0, -0.01), st.floats(1.0, 1e4))
+@settings(max_examples=100, deadline=None)
+def test_scaler_roundtrip_and_sign_guarantee(a, b):
+    sc = PCCScaler.fit(np.array([a, a * 0.5]), np.array([b, b * 2]))
+    z = sc.encode(np.array([a]), np.array([b]))
+    ad, bd = sc.decode_np(z)
+    assert abs(ad[0] - a) < 1e-4 * max(1, abs(a))
+    assert abs(bd[0] - b) / b < 1e-4
+    # ANY z decodes to a monotone non-increasing curve
+    wild = np.array([[37.0, -12.0]])
+    aw, bw = sc.decode_np(wild)
+    assert aw[0] < 0 < bw[0]
+    assert is_non_increasing(float(aw[0]), float(bw[0]))
+
+
+def test_decode_jnp_matches_np():
+    sc = PCCScaler.fit(np.array([-0.5, -1.0]), np.array([100.0, 300.0]))
+    z = np.array([[0.3, -0.7], [1.5, 2.0]])
+    aj, bj = sc.decode(jnp.asarray(z))
+    an, bn = sc.decode_np(z)
+    np.testing.assert_allclose(np.asarray(aj), an, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(bj), bn, rtol=1e-5)
+
+
+def test_optimal_tokens_policy():
+    # |a| / threshold, clipped
+    assert optimal_tokens(-0.5, 100.0, gain_threshold=0.01) == 50
+    assert optimal_tokens(-0.5, 100.0, gain_threshold=0.001, hi=100) == 100
+    assert optimal_tokens(0.0, 100.0) == 1      # degenerate: flat curve
+    # finer threshold -> never fewer tokens
+    t1 = optimal_tokens(-1.2, 50.0, gain_threshold=0.02)
+    t2 = optimal_tokens(-1.2, 50.0, gain_threshold=0.005)
+    assert t2 >= t1
+
+
+def test_pcc_runtime_shapes():
+    out = pcc_runtime(-0.5, 100.0, np.array([1, 4, 16]))
+    np.testing.assert_allclose(out, [100.0, 50.0, 25.0])

@@ -1,0 +1,72 @@
+"""End-to-end TASQ integration: tiny corpus through the full pipeline;
+asserts the paper's QUALITATIVE findings hold (Tables 4-6 orderings)."""
+import numpy as np
+import pytest
+
+from repro.core.dataset import build_dataset
+from repro.core.models.nn import NNConfig
+from repro.core.pipeline import TasqConfig, TasqPipeline
+from repro.workloads import build_corpus
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    cfg = TasqConfig(n_train=250, n_eval=120,
+                     nn=NNConfig(epochs=40), gnn_epochs=12)
+    p = TasqPipeline(cfg).build()
+    p.train_xgb()
+    p.train_nn("lf2")
+    p.train_gnn("lf2")
+    return p
+
+
+def test_dataset_invariants():
+    jobs = build_corpus(40, seed=2)
+    ds = build_dataset(jobs, seed=0)
+    assert len(ds) == 40
+    assert np.all(ds.target_a < 0)                  # monotone targets
+    assert np.all(ds.target_b > 0)
+    assert ds.features.shape[1] == 51
+    assert ds.xgb_X.shape[1] == 52                  # features ++ log1p(tokens)
+    assert np.all(ds.xgb_y >= 1)
+    # every job contributes at least the 3 below-observed XGB rows
+    assert ds.xgb_X.shape[0] >= 3 * len(ds)
+
+
+def test_model_orderings_match_paper(pipeline):
+    """NN/GNN: 100% monotone; XGB-PL imperfect; XGB point prediction best."""
+    res = pipeline.evaluate(pipeline.eval_set, "lf2")
+    assert res["nn"].pattern_non_increase == 1.0
+    assert res["gnn"].pattern_non_increase == 1.0
+    assert res["xgboost_pl"].pattern_non_increase <= 1.0
+    assert res["xgboost_ss"].pattern_non_increase < 1.0
+    # XGBoost is the best point predictor (it models runtime directly)
+    assert (res["xgboost_pl"].median_ae_runtime
+            <= res["nn"].median_ae_runtime + 0.05)
+    # NN/GNN beat XGB-PL on curve-parameter MAE
+    assert res["nn"].mae_curve_params < res["xgboost_pl"].mae_curve_params
+    assert res["gnn"].mae_curve_params < res["xgboost_pl"].mae_curve_params
+
+
+def test_ground_truth_records(pipeline):
+    jobs = build_corpus(6, seed=77)
+    recs = pipeline.ground_truth_records(jobs)
+    for r in recs:
+        assert r["allocs"][0] == r["job"].default_tokens
+        assert len(r["runtimes"]) == 4
+        assert r["b"] > 0
+
+
+def test_allocator_figure2_cdf():
+    from repro.core.allocator import token_reduction_cdf
+    from repro.workloads import observed_skyline
+    jobs = build_corpus(60, seed=5)
+    skylines = [observed_skyline(j) for j in jobs]
+    toks = [j.default_tokens for j in jobs]
+    r0, f0 = token_reduction_cdf(skylines, toks, max_slowdown=0.0)
+    r5, f5 = token_reduction_cdf(skylines, toks, max_slowdown=0.05)
+    assert f0[0] >= 0.99                        # every job can reduce >= 0
+    # allowing 5% slowdown only increases achievable reduction
+    assert np.all(f5 >= f0 - 1e-9)
+    # the paper's headline: a large share of jobs can cut tokens for free
+    assert f0[np.searchsorted(r0, 0.25)] > 0.2

@@ -1,0 +1,55 @@
+"""§5.1 job-selection procedure: k-means, stratified sampling, KS gate."""
+import numpy as np
+import pytest
+
+from repro.core.selection import (
+    assign_clusters,
+    kmeans,
+    ks_statistic,
+    select_jobs,
+    stratified_sample,
+)
+
+
+def test_kmeans_separates_blobs():
+    rng = np.random.RandomState(0)
+    a = rng.randn(100, 2) + np.array([5, 5])
+    b = rng.randn(100, 2) - np.array([5, 5])
+    x = np.concatenate([a, b])
+    cent, labels = kmeans(x, 2, seed=1)
+    assert len(set(labels[:100])) == 1
+    assert len(set(labels[100:])) == 1
+    assert labels[0] != labels[150]
+
+
+def test_ks_statistic_basics():
+    x = np.arange(1000) / 1000.0
+    assert ks_statistic(x, x) == 0.0
+    assert ks_statistic(x, x + 10.0) == 1.0
+    rng = np.random.RandomState(0)
+    assert ks_statistic(rng.randn(2000), rng.randn(2000)) < 0.06
+
+
+def test_stratified_sample_matches_population_proportions():
+    rng = np.random.RandomState(1)
+    pop_labels = rng.choice(4, size=2000, p=[0.4, 0.3, 0.2, 0.1])
+    # pool heavily skewed toward cluster 0
+    pool_labels = rng.choice(4, size=1500, p=[0.7, 0.1, 0.1, 0.1])
+    sel = stratified_sample(pool_labels, pop_labels, 200, seed=2)
+    frac = np.bincount(pool_labels[sel], minlength=4) / sel.size
+    np.testing.assert_allclose(frac, [0.4, 0.3, 0.2, 0.1], atol=0.07)
+
+
+def test_select_jobs_improves_ks():
+    """The paper's quality gate: selection brings the subset closer to the
+    population than the (biased) pre-selected pool."""
+    rng = np.random.RandomState(3)
+    pop = np.concatenate([rng.randn(1500, 3),
+                          rng.randn(500, 3) + 4.0])     # two regimes
+    # constraint mask biased toward the small regime
+    mask = np.zeros(2000, bool)
+    mask[1200:] = True
+    rep = select_jobs(pop, pop, mask, n_target=150, k=4, seed=0)
+    assert rep.ks_after <= rep.ks_before
+    assert rep.indices.size <= 150
+    assert np.all(mask[rep.indices])

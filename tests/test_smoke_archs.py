@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests (assignment f): every assigned arch
+instantiates a reduced same-family config and runs forward/train + decode
+on CPU with shape and NaN checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_is_runnable, get_config
+from repro.models import model_api
+from repro.train.steps import (
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    rng = jax.random.PRNGKey(0)
+    state = init_train_state(cfg, rng)
+    batch = model_api.smoke_batch(cfg, "train", rng)
+    state2, metrics = jax.jit(make_train_step(cfg))(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # params actually changed
+    before = jax.tree.leaves(state.params)[0]
+    after = jax.tree.leaves(state2.params)[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch):
+    cfg = get_config(arch, smoke=True)
+    rng = jax.random.PRNGKey(1)
+    params = model_api.init(cfg, rng)
+    batch = model_api.smoke_batch(cfg, "prefill", rng)
+    logits, cache = jax.jit(make_prefill_step(cfg))(params, batch)
+    B = batch["tokens"].shape[0]
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    db = {"tokens": tok, "cache": cache}
+    if cfg.mrope:
+        db["positions"] = cache.length[None, :, None] * jnp.ones(
+            (3, B, 1), jnp.int32)
+    logits2, cache2 = jax.jit(make_decode_step(cfg))(params, db)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits2)))
+    assert int(cache2.length[0]) == int(cache.length[0]) + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """The full (published) config keeps the assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (got, expected)
+
+
+def test_moe_configs_expert_counts():
+    m = get_config("moonshot-v1-16b-a3b")
+    assert (m.num_experts, m.experts_per_token) == (64, 6)
+    q = get_config("qwen3-moe-235b-a22b")
+    assert (q.num_experts, q.experts_per_token) == (128, 8)
+
+
+def test_ssm_state_sizes():
+    assert get_config("mamba2-1.3b").ssm_state == 128
+    assert get_config("zamba2-2.7b").ssm_state == 64
+
+
+def test_long_context_cell_matrix():
+    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    runnable = {a: cell_is_runnable(get_config(a), SHAPES["long_500k"])[0]
+                for a in ARCH_IDS}
+    assert runnable["mamba2-1.3b"] and runnable["zamba2-2.7b"]
+    assert sum(runnable.values()) == 2
+
+
+def test_param_counts_near_published():
+    """Analytic parameter count lands near each model's advertised size."""
+    # command-r: 30.3B with tied embeddings (the "35B" marketing count
+    # includes untied heads); granite/minitron: 2-proj MLP (mlp_style).
+    # moonshot: the ASSIGNED spec (48L x 64e x d_ff 1408) computes to 28B
+    # total / ~4B active — the assignment numbers are authoritative over
+    # the model's marketing name, so we pin the assignment-derived count.
+    expected_b = {"qwen2-72b": (69, 76), "command-r-35b": (29, 38),
+                  "granite-34b": (32, 36), "minitron-8b": (7.2, 9.5),
+                  "zamba2-2.7b": (2.2, 3.2), "mamba2-1.3b": (1.1, 1.5),
+                  "qwen3-moe-235b-a22b": (220, 250),
+                  "moonshot-v1-16b-a3b": (26, 30),
+                  "qwen2-vl-7b": (6.5, 8.5)}
+    for arch, (lo, hi) in expected_b.items():
+        n = get_config(arch).param_count() / 1e9
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.active_param_count() / 1e9
+    assert 18 <= active <= 26, active            # ~22B active

@@ -1,0 +1,89 @@
+"""Workload generator + executor invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arepas import skyline_area
+from repro.workloads import (
+    build_corpus,
+    execute,
+    observed_skyline,
+    population_stats,
+    reexecute_fractions,
+    sample_job,
+)
+
+
+def test_generator_deterministic():
+    a = build_corpus(20, seed=5)
+    b = build_corpus(20, seed=5)
+    for ja, jb in zip(a, b):
+        assert ja.default_tokens == jb.default_tokens
+        assert len(ja.operators) == len(jb.operators)
+        assert [s.num_tasks for s in ja.stages] == [s.num_tasks for s in jb.stages]
+
+
+def test_recurring_templates_share_structure():
+    rng = np.random.RandomState(0)
+    j1 = sample_job(0, rng, template_seed=42)
+    j2 = sample_job(1, rng, template_seed=42)
+    assert len(j1.stages) == len(j2.stages)
+    assert [o.op_type for o in j1.operators] == [o.op_type for o in j2.operators]
+    # instances still differ in data volume -> durations/widths may differ
+    assert j1.edges == j2.edges
+
+
+def test_executor_area_equals_total_work(small_corpus):
+    for job in small_corpus[:20]:
+        sky = execute(job, job.default_tokens)
+        assert skyline_area(sky) == job.total_work
+        assert sky.max() <= job.default_tokens
+
+
+def test_executor_runtime_monotone_in_tokens(small_corpus):
+    for job in small_corpus[:10]:
+        rts = [len(execute(job, t)) for t in (1, 4, 16, 64, 256)]
+        assert all(a >= b for a, b in zip(rts, rts[1:])), rts
+
+
+def test_executor_deterministic_without_noise(small_corpus):
+    job = small_corpus[0]
+    s1 = execute(job, 32, noise_sigma=0.0, seed=1)
+    s2 = execute(job, 32, noise_sigma=0.0, seed=2)
+    assert np.array_equal(s1, s2)
+
+
+def test_executor_noise_changes_runs(small_corpus):
+    job = max(small_corpus, key=lambda j: j.total_work)
+    s1 = execute(job, 32, noise_sigma=0.3, seed=1)
+    s2 = execute(job, 32, noise_sigma=0.3, seed=2)
+    assert len(s1) != len(s2) or not np.array_equal(s1, s2)
+
+
+def test_reexecute_fractions_allocations():
+    job = build_corpus(1, seed=3)[0]
+    allocs, skylines = reexecute_fractions(job, (1.0, 0.8, 0.6, 0.2))
+    assert allocs[0] == job.default_tokens
+    assert len(skylines) == 4
+    assert all(s.max() <= a for s, a in zip(skylines, allocs))
+
+
+def test_population_matches_paper_shape():
+    jobs = build_corpus(800, seed=11)
+    stats = population_stats(jobs)
+    # right-skewed token distribution in the paper's band (§5: median 54,
+    # mean 154, max 6287) — generous tolerances, shape is what matters
+    assert 20 <= stats["tokens_median"] <= 200
+    assert stats["tokens_mean"] > stats["tokens_median"]
+    assert stats["tokens_max"] <= 6287
+    rts = [len(observed_skyline(j)) for j in jobs[:200]]
+    assert np.mean(rts) > np.median(rts)        # right-skewed runtimes
+
+
+def test_job_graph_is_dag(small_corpus):
+    for job in small_corpus[:20]:
+        for s, d in job.edges:
+            assert 0 <= s < len(job.operators)
+            assert 0 <= d < len(job.operators)
+        for sid, st_ in enumerate(job.stages):
+            assert all(d < sid for d in st_.deps)   # topological stage order
