@@ -7,6 +7,7 @@
   tables456  model x loss grid on the historical dataset (§5.3)
   table7   parameter counts, training and inference times (§5.3)
   table8   model accuracy on the re-executed ground-truth subset (§5.4)
+  serve_alloc  batched AllocationService throughput vs the per-job loop path
 
 Prints human-readable tables + "name,metric,value" CSV lines, and writes
 results/benchmarks.json for EXPERIMENTS.md. ``--scale`` grows every corpus
@@ -25,15 +26,16 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core.allocator import token_reduction_cdf
+from repro.core.allocator import (AllocationPolicy, choose_tokens,
+                                  token_reduction_cdf)
 from repro.core.arepas import simulate_runtime, skyline_area
 from repro.core.dataset import build_dataset
-from repro.core.evaluate import eval_param_curves, eval_xgb_curves
+from repro.core.evaluate import eval_pcc_model, eval_xgb_curves
 from repro.core.featurize import batch_job_features
-from repro.core.models.nn import NNConfig, param_count
-from repro.core.pcc import fit_pcc
+from repro.core.models import NNConfig
 from repro.core.pipeline import TasqConfig, TasqPipeline
 from repro.core.selection import select_jobs
+from repro.serve import AllocationService
 from repro.workloads import build_corpus, execute, observed_skyline, reexecute_fractions
 
 RESULTS: Dict[str, Dict] = {}
@@ -163,9 +165,9 @@ def bench_table3_arepas_error(scale: float) -> None:
 # ------------------------------------------------------------- tables 4-6 --
 def bench_tables_4_5_6_models(scale: float, pipeline: TasqPipeline) -> None:
     for loss in ("lf1", "lf2", "lf3"):
-        if loss not in pipeline.nn_models:
+        if f"nn:{loss}" not in pipeline.models:
             pipeline.train_nn(loss)
-        if loss not in pipeline.gnn_models:
+        if f"gnn:{loss}" not in pipeline.models:
             pipeline.train_gnn(loss)
         res = pipeline.evaluate(pipeline.eval_set, loss)
         table = {f"{m}_{k}": v for m, ev in res.items()
@@ -178,33 +180,22 @@ def bench_tables_4_5_6_models(scale: float, pipeline: TasqPipeline) -> None:
 
 # ----------------------------------------------------------------- table 7 --
 def bench_table7_model_costs(pipeline: TasqPipeline) -> None:
-    import jax
-    import jax.numpy as jnp
     ds = pipeline.eval_set
-    n = len(ds)
-    # NN inference / 10k jobs
-    params, apply = pipeline.nn_models["lf2"]
-    feats = jnp.asarray(pipeline.std(ds.features))
-    apply(params, {"features": feats})                      # warm
-    t0 = time.time()
-    jax.block_until_ready(apply(params, {"features": feats}))
-    nn_infer = (time.time() - t0) / n * 10_000
-    # GNN inference / 10k jobs
-    gparams, gapply = pipeline.gnn_models["lf2"]
-    gin = {"features": jnp.asarray(ds.graph_features[:256]),
-           "adj": jnp.asarray(ds.graph_adj[:256]),
-           "mask": jnp.asarray(ds.graph_mask[:256])}
-    gapply(gparams, gin)                                    # warm
-    t0 = time.time()
-    jax.block_until_ready(gapply(gparams, gin))
-    gnn_infer = (time.time() - t0) / 256 * 10_000
+
+    def infer_per_10k(key: str, n: int) -> float:
+        model = pipeline.models[key]
+        model.predict_params(ds)                            # warm/compile
+        t0 = time.time()
+        model.predict_params(ds)
+        return (time.time() - t0) / n * 10_000
+
     out = {
         "nn_params": pipeline.param_counts["nn"],
         "gnn_params": pipeline.param_counts["gnn"],
-        "nn_epoch_s": round(pipeline.timings.get("nn_lf2_epoch_s", 0), 3),
-        "gnn_epoch_s": round(pipeline.timings.get("gnn_lf2_epoch_s", 0), 3),
-        "nn_infer_per_10k_s": round(nn_infer, 3),
-        "gnn_infer_per_10k_s": round(gnn_infer, 3),
+        "nn_epoch_s": round(pipeline.timings.get("nn:lf2_epoch_s", 0), 3),
+        "gnn_epoch_s": round(pipeline.timings.get("gnn:lf2_epoch_s", 0), 3),
+        "nn_infer_per_10k_s": round(infer_per_10k("nn:lf2", len(ds)), 3),
+        "gnn_infer_per_10k_s": round(infer_per_10k("gnn:lf2", len(ds)), 3),
         "xgb_train_s": round(pipeline.timings.get("xgb_train_s", 0), 2),
     }
     print(f"[table7] {out} (paper: NN 2216 params, GNN 19210; "
@@ -240,11 +231,9 @@ def bench_table8_ground_truth(scale: float, pipeline: TasqPipeline) -> None:
     tg = (gt_ds.target_a, gt_ds.target_b)
     f = pipeline.xgb_point_predictor()
     res["xgboost_ss"] = eval_xgb_curves(f, gt_ds.features, *args, *tg, mode="ss")
-    res["xgboost_pl"] = eval_xgb_curves(f, gt_ds.features, *args, *tg, mode="pl")
-    a, b = pipeline.predict_params_nn(gt_ds, "lf2")
-    res["nn"] = eval_param_curves(a, b, *tg, *args)
-    a, b = pipeline.predict_params_gnn(gt_ds, "lf2")
-    res["gnn"] = eval_param_curves(a, b, *tg, *args)
+    res["xgboost_pl"] = eval_pcc_model(pipeline.models["gbdt"], gt_ds)
+    res["nn"] = eval_pcc_model(pipeline.models["nn:lf2"], gt_ds)
+    res["gnn"] = eval_pcc_model(pipeline.models["gnn:lf2"], gt_ds)
     print("[table8] (ground truth)")
     for m, ev in res.items():
         print(f"  {m:12s} {ev.row()}")
@@ -253,7 +242,61 @@ def bench_table8_ground_truth(scale: float, pipeline: TasqPipeline) -> None:
            for k, v in ev.row().items()})
 
 
-ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8")
+# -------------------------------------------------------------- serve_alloc --
+def bench_serve_alloc(scale: float, pipeline: TasqPipeline) -> None:
+    """Batched allocation throughput: the jitted AllocationService path vs
+    the pre-refactor per-job loop (one model apply + one scalar policy call
+    per query). Decisions must agree bitwise."""
+    if "nn:lf2" not in pipeline.models:
+        pipeline.train_nn("lf2")
+    ds = pipeline.eval_set
+    n_target = int(1000 * scale)
+    reps = max(1, -(-n_target // len(ds)))          # tile eval set to >= 1k
+    feats = np.tile(ds.features, (reps, 1))[:n_target]
+    observed = np.tile(ds.observed_alloc, reps)[:n_target].astype(np.int64)
+
+    model = pipeline.models["nn:lf2"]
+    policy = AllocationPolicy(max_slowdown=0.05)
+    service = AllocationService(model, policy)
+
+    batch_in = {"features": feats}
+    service.allocate_batch(batch_in, observed_tokens=observed)   # warm/compile
+    t0 = time.time()
+    res = service.allocate_batch(batch_in, observed_tokens=observed)
+    batched_s = time.time() - t0
+
+    # loop path: per-query apply + decode + scalar numpy policy
+    def loop_path(n: int) -> np.ndarray:
+        toks = np.empty(n, np.int64)
+        for i in range(n):
+            a, b = model.predict_params_batch(
+                {"features": feats[i:i + 1]})
+            toks[i] = choose_tokens(float(a[0]), float(b[0]), policy,
+                                    int(observed[i]))
+        return toks
+
+    n_loop = min(n_target, 200)                     # the loop is the slow part
+    loop_path(1)                                    # warm
+    t0 = time.time()
+    loop_toks = loop_path(n_loop)
+    loop_s = (time.time() - t0) / n_loop * n_target
+
+    assert np.array_equal(res.tokens[:n_loop], loop_toks), \
+        "batched decisions diverge from the loop-path oracle"
+    out = {
+        "n_queries": n_target,
+        "batched_qps": round(n_target / max(batched_s, 1e-9), 1),
+        "loop_qps": round(n_target / max(loop_s, 1e-9), 1),
+        "speedup": round(loop_s / max(batched_s, 1e-9), 1),
+        "compiles": service.stats["compiles"],
+        "decisions_match_loop": True,
+    }
+    print(f"[serve_alloc] {out}")
+    _emit("serve_alloc", out)
+
+
+ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8",
+       "serve_alloc")
 
 
 def main() -> None:
@@ -266,7 +309,7 @@ def main() -> None:
 
     t_start = time.time()
     pipeline = None
-    if only & {"tables456", "table7", "table8"}:
+    if only & {"tables456", "table7", "table8", "serve_alloc"}:
         cfg = TasqConfig(n_train=int(1200 * args.scale),
                          n_eval=int(600 * args.scale),
                          nn=NNConfig(epochs=60),
@@ -290,6 +333,8 @@ def main() -> None:
         bench_table7_model_costs(pipeline)
     if "table8" in only:
         bench_table8_ground_truth(args.scale, pipeline)
+    if "serve_alloc" in only:
+        bench_serve_alloc(args.scale, pipeline)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -5,6 +5,11 @@ This is the paper's contribution wired into the launcher: for each
 step-time-vs-chips performance characteristic curve; the §2.1 policy picks
 the optimal (not peak) chip count.
 
+Since the unified-serving refactor the whole table is one batched call:
+``allocate_chips_batch`` fits every record's curve in a single vectorized
+float64 pass and makes every decision through the batched jnp allocation
+policy — the same compiled stage that serves query-token allocations.
+
 Requires dry-run records (python -m repro.launch.dryrun --all --out
 results/dryrun). Run:
 
@@ -15,7 +20,7 @@ import glob
 import json
 import os
 
-from repro.core.chip_allocator import allocate_chips, load_dryrun_record
+from repro.core.chip_allocator import allocate_chips_batch
 
 
 def main() -> None:
@@ -24,6 +29,7 @@ def main() -> None:
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--min-gain", type=float, default=0.005,
                     help="required relative step-time gain per chip-fraction")
+    ap.add_argument("--max-chips", type=int, default=4096)
     args = ap.parse_args()
 
     files = sorted(glob.glob(os.path.join(args.records,
@@ -32,16 +38,25 @@ def main() -> None:
         raise SystemExit(f"no dry-run records under {args.records} "
                          f"(run python -m repro.launch.dryrun --all first)")
 
-    print(f"{'arch':22s} {'shape':12s} {'chips*':>7s} {'PCC a':>8s} "
-          f"{'step@opt':>10s} {'bound':>11s}")
+    recs = []
     for f in files:
         rec = json.load(open(f))
         if "error" in rec or "skipped" in rec:
             continue
-        alloc = allocate_chips(rec, min_gain=args.min_gain)
+        recs.append(rec)
+    if not recs:
+        raise SystemExit("no usable dry-run records")
+
+    allocs = allocate_chips_batch(recs, min_gain=args.min_gain,
+                                  max_chips=args.max_chips)
+
+    print(f"{'arch':22s} {'shape':12s} {'chips*':>7s} {'PCC a':>8s} "
+          f"{'step@opt':>10s} {'bound':>11s}")
+    for rec, alloc in zip(recs, allocs):
         print(f"{rec['arch']:22s} {rec['shape']:12s} {alloc.chips:>7d} "
               f"{alloc.pcc_a:>8.3f} {alloc.predicted_step_s*1e3:>8.1f}ms "
               f"{alloc.dominant_at_choice:>11s}")
+    print(f"[batched] {len(recs)} records decided in one policy call")
 
 
 if __name__ == "__main__":

@@ -16,15 +16,21 @@ from repro.core import arepas, curves, evaluate, featurize, losses, pcc, selecti
 from repro.core.allocator import (
     AllocationPolicy,
     choose_tokens,
+    choose_tokens_batch,
+    choose_tokens_jnp,
     min_tokens_within_slowdown,
+    min_tokens_within_slowdown_jnp,
     token_reduction_cdf,
 )
 from repro.core.dataset import TasqDataset, build_dataset
+from repro.core.models import PCCModel, available_models, build_model
 from repro.core.pipeline import TasqConfig, TasqPipeline
 
 __all__ = [
     "arepas", "curves", "evaluate", "featurize", "losses", "pcc", "selection",
-    "AllocationPolicy", "choose_tokens", "min_tokens_within_slowdown",
-    "token_reduction_cdf", "TasqDataset", "build_dataset",
-    "TasqConfig", "TasqPipeline",
+    "AllocationPolicy", "choose_tokens", "choose_tokens_batch",
+    "choose_tokens_jnp", "min_tokens_within_slowdown",
+    "min_tokens_within_slowdown_jnp", "token_reduction_cdf",
+    "TasqDataset", "build_dataset", "TasqConfig", "TasqPipeline",
+    "PCCModel", "available_models", "build_model",
 ]

@@ -10,19 +10,35 @@ Two allocation policies:
 
 ``token_reduction_cdf`` reproduces Figure 2 directly from AREPAS-simulated
 skylines (the "(estimated) impact" of the paper).
+
+Each numpy policy has a jnp twin (``choose_tokens_jnp`` /
+``min_tokens_within_slowdown_jnp``): vectorized fixed-iteration bisections
+that jit/vmap for the serving hot path and — run in float64 via
+``jax.experimental.enable_x64`` — return decisions bitwise-equal to the
+scalar oracles (tests/test_alloc_parity.py). ``choose_tokens_batch`` is the
+host-side convenience wrapper.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import arepas
 from repro.core.pcc import optimal_tokens, pcc_runtime
 
-__all__ = ["AllocationPolicy", "choose_tokens", "min_tokens_within_slowdown",
-           "token_reduction_cdf"]
+__all__ = ["AllocationPolicy", "choose_tokens", "choose_tokens_jnp",
+           "choose_tokens_batch", "min_tokens_within_slowdown",
+           "min_tokens_within_slowdown_jnp", "token_reduction_cdf"]
+
+# Bisection ranges are token counts (< 2^48 by a huge margin); a fixed
+# iteration count makes the search jit-able — extra iterations are no-ops,
+# exactly like the scalar loop's termination.
+_BISECT_ITERS = 48
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +69,69 @@ def choose_tokens(a: float, b: float, policy: AllocationPolicy,
     return max(min(t_gain, policy.max_tokens), lo)
 
 
+def choose_tokens_jnp(a: jax.Array, b: jax.Array, policy: AllocationPolicy,
+                      observed_tokens: Optional[jax.Array] = None
+                      ) -> jax.Array:
+    """Vectorized jnp twin of ``choose_tokens``: (J,) params -> (J,) tokens.
+
+    The policy is static (branching on ``max_slowdown`` happens at trace
+    time); ``observed_tokens`` is an optional (J,) int array. Trace under
+    ``enable_x64`` with float64 (a, b) for bitwise parity with the oracle.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    dt = a.dtype
+    lo0 = policy.min_tokens
+    hi = (jnp.full(a.shape, policy.max_tokens, jnp.int64)
+          if observed_tokens is None
+          else jnp.asarray(observed_tokens).astype(jnp.int64))
+    # marginal-gain cut-off: A* = |a| / min_gain (lo for degenerate curves)
+    a_star = jnp.abs(a) / max(policy.min_gain, 1e-9)
+    t_gain = jnp.clip(jnp.round(a_star), lo0, hi.astype(dt)).astype(jnp.int64)
+    t_gain = jnp.where(a >= 0, jnp.int64(lo0), t_gain)
+    if policy.max_slowdown <= 0:
+        return t_gain
+
+    base = b * hi.astype(dt) ** a
+    limit = (1.0 + policy.max_slowdown) * base
+
+    def body(_, st):
+        lo, hi_s = st
+        cond = lo < hi_s
+        mid = (lo + hi_s) // 2
+        ok = b * mid.astype(dt) ** a <= limit
+        return (jnp.where(cond & ~ok, mid + 1, lo),
+                jnp.where(cond & ok, mid, hi_s))
+
+    lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body,
+                              (jnp.full(a.shape, lo0, jnp.int64), hi))
+    return jnp.maximum(jnp.minimum(t_gain, policy.max_tokens), lo)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_policy(policy: AllocationPolicy, with_observed: bool):
+    def f(a, b, hi):
+        return choose_tokens_jnp(a, b, policy, hi if with_observed else None)
+    return jax.jit(f)
+
+
+def choose_tokens_batch(a: np.ndarray, b: np.ndarray,
+                        policy: AllocationPolicy = AllocationPolicy(),
+                        observed_tokens: Optional[np.ndarray] = None
+                        ) -> np.ndarray:
+    """Batched allocation decisions, bitwise-equal to a ``choose_tokens``
+    loop: one jitted float64 call over (J,) parameter arrays."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        aj = jnp.asarray(np.asarray(a, np.float64))
+        bj = jnp.asarray(np.asarray(b, np.float64))
+        obs = (None if observed_tokens is None
+               else jnp.asarray(np.asarray(observed_tokens, np.int64)))
+        fn = _compiled_policy(policy, observed_tokens is not None)
+        out = fn(aj, bj, obs)
+        return np.asarray(out)
+
+
 def min_tokens_within_slowdown(skyline: np.ndarray, observed_tokens: int,
                                max_slowdown: float) -> int:
     """Smallest allocation whose AREPAS-simulated runtime stays within
@@ -67,6 +146,34 @@ def min_tokens_within_slowdown(skyline: np.ndarray, observed_tokens: int,
             hi = mid
         else:
             lo = mid + 1
+    return lo
+
+
+def min_tokens_within_slowdown_jnp(skyline: jax.Array, valid_len: jax.Array,
+                                   observed_tokens: jax.Array,
+                                   max_slowdown: float) -> jax.Array:
+    """jnp twin of ``min_tokens_within_slowdown`` over a padded skyline.
+
+    skyline: (Smax,) padded usage; valid_len: () true length; exact thanks to
+    ``simulate_runtime_jax`` being bitwise-equal to the numpy simulator.
+    vmap over leading axes for batches; ``max_slowdown`` is static.
+    """
+    base = valid_len.astype(jnp.float64)
+    limit = (1.0 + max_slowdown) * base
+    lo = jnp.asarray(1, jnp.int64)
+    hi = jnp.maximum(jnp.asarray(observed_tokens, jnp.int64), 1)
+
+    def body(_, st):
+        lo, hi = st
+        cond = lo < hi
+        mid = (lo + hi) // 2
+        rt = arepas.simulate_runtime_jax(skyline, valid_len,
+                                         jnp.maximum(mid, 1))
+        ok = rt.astype(jnp.float64) <= limit
+        return (jnp.where(cond & ~ok, mid + 1, lo),
+                jnp.where(cond & ok, mid, hi))
+
+    lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi))
     return lo
 
 

@@ -32,11 +32,12 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.pcc import fit_pcc, optimal_tokens, pcc_runtime
+from repro.core.allocator import AllocationPolicy, choose_tokens_batch
+from repro.core.pcc import fit_pcc_batch_np, pcc_runtime
 from repro.roofline.analysis import HW, Hardware
 
-__all__ = ["ChipAllocation", "allocate_chips", "step_time_curve",
-           "load_dryrun_record"]
+__all__ = ["ChipAllocation", "allocate_chips", "allocate_chips_batch",
+           "step_time_curve", "load_dryrun_record"]
 
 DEFAULT_CANDIDATES = (16, 32, 64, 128, 256, 512, 1024, 2048)
 
@@ -98,26 +99,45 @@ def step_time_curve(rec: Dict, candidates: Sequence[int] = DEFAULT_CANDIDATES,
     return cand, np.asarray(times), doms
 
 
+def allocate_chips_batch(recs: Sequence[Dict], *, min_gain: float = 0.005,
+                         candidates: Sequence[int] = DEFAULT_CANDIDATES,
+                         max_chips: int = 4096) -> list:
+    """Paper §2.1 policy over many chip-count PCCs at once.
+
+    min_gain: required relative step-time improvement per extra *chip
+    fraction*; the marginal-gain cut-off A* = |a| / min_gain, clipped to
+    the candidate range. All curves are fitted in one vectorized float64
+    pass and all decisions come from one batched jnp policy call — the
+    same compiled stage that serves query-token allocations.
+    """
+    curves = [step_time_curve(rec, candidates) for rec in recs]
+    cand = np.stack([c[0] for c in curves]).astype(np.float64)
+    times = np.stack([np.maximum(c[1], 1e-9) for c in curves])
+    a, b = fit_pcc_batch_np(cand, times)
+    policy = AllocationPolicy(min_gain=min_gain,
+                              min_tokens=int(cand[0, 0]),
+                              max_tokens=max_chips)
+    chips_star = choose_tokens_batch(a, b, policy)
+    out = []
+    for rec, (cands, ts, doms), ai, bi, star in zip(recs, curves, a, b,
+                                                    chips_star):
+        # snap to the nearest candidate (mesh shapes are discrete)
+        snap = int(cands[np.argmin(np.abs(cands - int(star)))])
+        idx = int(np.nonzero(cands == snap)[0][0])
+        out.append(ChipAllocation(
+            chips=snap, pcc_a=float(ai), pcc_b=float(bi),
+            candidates=cands, step_times_s=ts,
+            predicted_step_s=float(pcc_runtime(ai, bi, snap)),
+            reference_chips=_terms_from_record(rec)[3],
+            dominant_at_choice=doms[idx],
+        ))
+    return out
+
+
 def allocate_chips(rec: Dict, *, min_gain: float = 0.005,
                    candidates: Sequence[int] = DEFAULT_CANDIDATES,
                    max_chips: int = 4096) -> ChipAllocation:
-    """Paper §2.1 policy over the chip-count PCC.
-
-    min_gain: required relative step-time improvement per extra *chip
-    fraction*; like the paper we use the fitted curve's analytic optimum
-    A* = |a| / min_gain, clipped to the candidate range.
-    """
-    cand, times, doms = step_time_curve(rec, candidates)
-    a, b = fit_pcc(cand.astype(np.float64), np.maximum(times, 1e-9))
-    chips_star = optimal_tokens(a, b, gain_threshold=min_gain,
-                                lo=int(cand[0]), hi=max_chips)
-    # snap to the nearest candidate (mesh shapes are discrete)
-    snap = int(cand[np.argmin(np.abs(cand - chips_star))])
-    idx = int(np.nonzero(cand == snap)[0][0])
-    return ChipAllocation(
-        chips=snap, pcc_a=a, pcc_b=b,
-        candidates=cand, step_times_s=times,
-        predicted_step_s=float(pcc_runtime(a, b, snap)),
-        reference_chips=_terms_from_record(rec)[3],
-        dominant_at_choice=doms[idx],
-    )
+    """Single-record convenience over ``allocate_chips_batch``."""
+    return allocate_chips_batch([rec], min_gain=min_gain,
+                                candidates=candidates,
+                                max_chips=max_chips)[0]

@@ -24,8 +24,8 @@ from repro.core.curves import (
 )
 from repro.core.pcc import is_non_increasing, pcc_runtime
 
-__all__ = ["CurveEval", "eval_param_curves", "eval_xgb_curves",
-           "standardized_param_mae"]
+__all__ = ["CurveEval", "eval_param_curves", "eval_pcc_model",
+           "eval_xgb_curves", "standardized_param_mae"]
 
 
 @dataclasses.dataclass
@@ -67,6 +67,18 @@ def eval_param_curves(pred_a: np.ndarray, pred_b: np.ndarray,
         mae_curve_params=standardized_param_mae(pred_a, pred_b, tgt_a, tgt_b),
         median_ae_runtime=float(np.median(rel)),
     )
+
+
+def eval_pcc_model(model, ds) -> CurveEval:
+    """Evaluate any ``PCCModel`` on a dataset through the unified interface.
+
+    One batched ``predict_params`` call per model — the GBDT assembles its
+    power-law fan in a single vectorized pass, NN/GNN run one jitted apply —
+    then the standard parameter-curve metrics.
+    """
+    a, b = model.predict_params(ds)
+    return eval_param_curves(a, b, ds.target_a, ds.target_b,
+                             ds.observed_alloc, ds.observed_runtime)
 
 
 def eval_xgb_curves(predict_runtime: Callable[[np.ndarray, np.ndarray], np.ndarray],

@@ -1,0 +1,33 @@
+"""PCC model zoo: unified interface + registry over GBDT / NN / GNN."""
+from repro.core.models.base import (
+    GBDTModel,
+    GNNModel,
+    JaxPCCModel,
+    NNModel,
+    PCCModel,
+    available_models,
+    build_model,
+    register_model,
+)
+from repro.core.models.gbdt import GBDT, GBDTConfig
+from repro.core.models.gnn import GNNConfig, make_gnn
+from repro.core.models.nn import NNConfig, fit_model, make_nn, param_count
+
+__all__ = [
+    "PCCModel",
+    "JaxPCCModel",
+    "GBDTModel",
+    "NNModel",
+    "GNNModel",
+    "available_models",
+    "build_model",
+    "register_model",
+    "GBDT",
+    "GBDTConfig",
+    "GNNConfig",
+    "NNConfig",
+    "fit_model",
+    "make_gnn",
+    "make_nn",
+    "param_count",
+]

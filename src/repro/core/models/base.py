@@ -1,0 +1,332 @@
+"""Unified PCCModel interface + registry (paper §2.2 deploy/allocate stage).
+
+Every model family — GBDT, NN, GNN — predicts a job's performance
+characteristic curve ``runtime = b * A^a``; they only differ in what they
+consume (aggregated features vs padded plan graphs) and how the (a, b) pair
+is produced (batched power-law fit over point predictions vs a decoded
+parameter head). ``PCCModel`` pins down one surface for all of them:
+
+  * ``fit(ds, scaler=..., std=...)``        — train on a ``TasqDataset``;
+  * ``batch_inputs(ds)``                    — model-ready input arrays;
+  * ``predict_params_batch(model_in, ...)`` — (a, b) for a raw batch;
+  * ``predict_params(ds)``                  — (a, b) for a dataset;
+  * jit surface (``supports_jit`` / ``serve_apply`` / ``params``) — a pure
+    ``(params, model_in) -> scaled z`` function the AllocationService fuses
+    with decode + the allocation policy into a single compiled call.
+
+The registry follows the ``repro.configs`` build-config idiom: a string key
+resolves a builder, so pipelines, benchmarks, and the serving layer construct
+models uniformly (``build_model("gnn", cfg=...)``).
+"""
+from __future__ import annotations
+
+import abc
+import itertools
+from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.curves import prediction_fan
+from repro.core.featurize import Standardizer
+from repro.core.models.gbdt import GBDT, GBDTConfig
+from repro.core.models.gnn import GNNConfig, make_gnn
+from repro.core.models.nn import NNConfig, fit_model, make_nn, param_count
+from repro.core.pcc import PCCScaler, fit_pcc_batch_np
+
+if TYPE_CHECKING:  # avoid a runtime cycle: dataset -> featurize only
+    from repro.core.dataset import TasqDataset
+
+__all__ = [
+    "PCCModel",
+    "JaxPCCModel",
+    "GBDTModel",
+    "NNModel",
+    "GNNModel",
+    "register_model",
+    "build_model",
+    "available_models",
+]
+
+_serial = itertools.count()
+
+
+class PCCModel(abc.ABC):
+    """One trained PCC predictor: dataset in, power-law (a, b) out."""
+
+    family: ClassVar[str] = ""
+
+    def __init__(self) -> None:
+        self.scaler: Optional[PCCScaler] = None
+        self.std: Optional[Standardizer] = None
+        self.history: Dict[str, Any] = {}
+        # unique per instance: the AllocationService keys compiled fns on it
+        self.cache_key: str = f"{self.family}#{next(_serial)}"
+
+    # ------------------------------------------------------------- training --
+    @abc.abstractmethod
+    def fit(self, ds: "TasqDataset", *, scaler: PCCScaler, std: Standardizer,
+            xgb_runtime: Optional[np.ndarray] = None) -> "PCCModel":
+        """Train on a dataset. ``xgb_runtime`` feeds the LF3 distillation."""
+
+    # ------------------------------------------------------------ inference --
+    @abc.abstractmethod
+    def batch_inputs(self, ds: "TasqDataset") -> Dict[str, np.ndarray]:
+        """Raw model inputs for a dataset (what ``serve_apply`` consumes)."""
+
+    @abc.abstractmethod
+    def predict_params_batch(self, model_in: Dict[str, np.ndarray],
+                             ref_alloc: Optional[np.ndarray] = None
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """(a, b) for a raw input batch. ``ref_alloc`` anchors models that
+        assemble curves from point predictions (GBDT's prediction fan)."""
+
+    def predict_params(self, ds: "TasqDataset"
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        return self.predict_params_batch(self.batch_inputs(ds),
+                                         np.asarray(ds.observed_alloc))
+
+    # ----------------------------------------------------------- jit surface --
+    @property
+    def supports_jit(self) -> bool:
+        """True if ``serve_apply`` is a pure jax function of ``params``."""
+        return False
+
+    @property
+    def params(self) -> Any:
+        return None
+
+    def serve_apply(self, params: Any, model_in: Dict[str, jax.Array]
+                    ) -> jax.Array:
+        """Pure (params, model_in) -> (B, 2) scaled predictions. Standardizes
+        inside, so the jitted serving path starts from raw features."""
+        raise NotImplementedError(f"{self.family} has no jit surface")
+
+    def param_count(self) -> int:
+        return 0
+
+
+class JaxPCCModel(PCCModel):
+    """Shared jit surface for parameter-head models (NN / GNN).
+
+    Inference runs through one jitted apply in fixed-size chunks: batches
+    are cut at ``_CHUNK`` rows and each chunk is zero-padded to a power-of-
+    two bucket, so memory stays bounded at paper scale (the GCN's B*N*N
+    activations would otherwise materialize for the whole corpus at once)
+    while the set of compiled shapes stays small. Padded rows are inert and
+    sliced off.
+    """
+
+    _CHUNK = 1024
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._params: Any = None
+        self._apply: Optional[Callable] = None
+        self._jitted: Optional[Callable] = None
+
+    @property
+    def supports_jit(self) -> bool:
+        return self._params is not None
+
+    @property
+    def params(self):
+        return self._params
+
+    @staticmethod
+    def _bucket(n: int) -> int:
+        p = 8
+        while p < n:
+            p *= 2
+        return p
+
+    def _predict_z(self, model_in: Dict[str, np.ndarray]) -> np.ndarray:
+        if self._jitted is None:
+            self._jitted = jax.jit(self.serve_apply)
+        arrays = {k: np.asarray(v) for k, v in model_in.items()}
+        B = next(iter(arrays.values())).shape[0]
+        zs = []
+        for i in range(0, B, self._CHUNK):
+            chunk = {k: v[i:i + self._CHUNK] for k, v in arrays.items()}
+            n = next(iter(chunk.values())).shape[0]
+            bp = self._bucket(n)
+            if bp != n:
+                chunk = {k: np.pad(v, [(0, bp - n)] + [(0, 0)] * (v.ndim - 1))
+                         for k, v in chunk.items()}
+            z = self._jitted(self._params,
+                             {k: jnp.asarray(v) for k, v in chunk.items()})
+            zs.append(np.asarray(z)[:n])
+        return np.concatenate(zs) if len(zs) > 1 else zs[0]
+
+    def predict_params_batch(self, model_in, ref_alloc=None):
+        a, b = self.scaler.decode(jnp.asarray(self._predict_z(model_in)))
+        return np.asarray(a), np.asarray(b)
+
+    def param_count(self) -> int:
+        return param_count(self._params)
+
+
+# ------------------------------------------------------------------ registry --
+_REGISTRY: Dict[str, Callable[..., PCCModel]] = {}
+
+
+def register_model(name: str):
+    """Class decorator: ``@register_model("nn")`` exposes the family to
+    ``build_model``. Mirrors the arch-id resolution of ``repro.configs``."""
+    def deco(cls):
+        cls.family = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def build_model(name: str, **kwargs) -> PCCModel:
+    """Construct an untrained PCCModel by family name."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown PCC model {name!r}; "
+                       f"known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def available_models() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# -------------------------------------------------------------------- GBDT ---
+@register_model("gbdt")
+class GBDTModel(PCCModel):
+    """Histogram-GBDT point predictor -> per-job power-law fit.
+
+    Plays XGBoost's role: predicts runtime at (features ++ log1p tokens)
+    points; ``predict_params_batch`` assembles the PL curve from a prediction
+    fan around the reference allocation in ONE vectorized pass — one
+    ``GBDT.predict`` over (B * fan) rows, one batched log-log fit — replacing
+    the per-job loop of ``eval_xgb_curves(mode="pl")``.
+    """
+
+    def __init__(self, cfg: GBDTConfig = GBDTConfig()):
+        super().__init__()
+        self.cfg = cfg
+        self.booster: Optional[GBDT] = None
+
+    def fit(self, ds, *, scaler, std, xgb_runtime=None):
+        self.scaler, self.std = scaler, std
+        X = ds.xgb_X.copy()
+        X[:, :-1] = std(X[:, :-1])
+        self.booster = GBDT(self.cfg).fit(X, ds.xgb_y)
+        return self
+
+    def batch_inputs(self, ds):
+        return {"features": np.asarray(ds.features)}
+
+    def point_predictor(self) -> Callable[[np.ndarray, np.ndarray], np.ndarray]:
+        """(feature_rows, allocs) -> runtimes, for SS-curve assembly."""
+        def f(rows: np.ndarray, allocs: np.ndarray) -> np.ndarray:
+            X = np.concatenate(
+                [self.std(rows),
+                 np.log1p(allocs.astype(np.float64))[:, None]], 1)
+            return self.booster.predict(X)
+        return f
+
+    def runtime_at(self, ds) -> np.ndarray:
+        """Predicted runtime at each job's observed allocation (LF3 teacher)."""
+        feats = self.std(ds.features)
+        X = np.concatenate([feats, np.log1p(ds.observed_alloc)[:, None]], 1)
+        return self.booster.predict(X).astype(np.float32)
+
+    def predict_params_batch(self, model_in, ref_alloc=None):
+        feats = np.asarray(model_in["features"])
+        if ref_alloc is None:
+            raise ValueError("gbdt needs ref_alloc (fan reference) to "
+                             "assemble PCC parameters")
+        ref = np.asarray(ref_alloc, np.float64)
+        B = feats.shape[0]
+        # fan: (B, K) token grids — same grid per job as prediction_fan()
+        fans = np.stack([prediction_fan(r) for r in ref])
+        K = fans.shape[1]
+        rows = np.repeat(self.std(feats), K, axis=0)
+        X = np.concatenate(
+            [rows, np.log1p(fans.astype(np.float64)).reshape(-1, 1)], 1)
+        preds = self.booster.predict(X).reshape(B, K)
+        a, b = fit_pcc_batch_np(fans, preds)
+        return a, b
+
+
+# ---------------------------------------------------------------------- NN ---
+@register_model("nn")
+class NNModel(JaxPCCModel):
+    """Feed-forward MLP over aggregated job features -> scaled PCC params."""
+
+    def __init__(self, cfg: NNConfig = NNConfig()):
+        super().__init__()
+        self.cfg = cfg
+        self._mu: Optional[jax.Array] = None
+        self._sd: Optional[jax.Array] = None
+
+    def fit(self, ds, *, scaler, std, xgb_runtime=None):
+        self.scaler, self.std = scaler, std
+        self._mu = jnp.asarray(std.mu.astype(np.float32))
+        self._sd = jnp.asarray(std.sd.astype(np.float32))
+        params, apply = make_nn(ds.features.shape[1], self.cfg)
+        self._apply = apply
+        extras = _loss_extras(ds, scaler, xgb_runtime)
+        self._params, self.history = fit_model(
+            apply, params, {"features": std(ds.features)}, extras, scaler,
+            self.cfg)
+        return self
+
+    def serve_apply(self, params, model_in):
+        x = (model_in["features"].astype(jnp.float32) - self._mu) / self._sd
+        return self._apply(params, {"features": x})
+
+    def batch_inputs(self, ds):
+        return {"features": np.asarray(ds.features, np.float32)}
+
+
+# --------------------------------------------------------------------- GNN ---
+@register_model("gnn")
+class GNNModel(JaxPCCModel):
+    """SimGNN-style GCN over padded plan graphs -> scaled PCC params.
+
+    Inference is chunked vmapped/jitted calls over padded batches — the
+    per-256-row eager Python loop of the old pipeline is gone; the
+    AllocationService buckets the node dimension so variable-size graphs
+    reuse a bounded set of compiled shapes.
+    """
+
+    def __init__(self, cfg: GNNConfig = GNNConfig(),
+                 train_cfg: NNConfig = NNConfig()):
+        super().__init__()
+        self.cfg = cfg
+        self.train_cfg = train_cfg
+
+    def fit(self, ds, *, scaler, std, xgb_runtime=None):
+        self.scaler, self.std = scaler, std
+        params, apply = make_gnn(ds.graph_features.shape[-1], self.cfg)
+        self._apply = apply
+        extras = _loss_extras(ds, scaler, xgb_runtime)
+        inputs = {"features": ds.graph_features, "adj": ds.graph_adj,
+                  "mask": ds.graph_mask}
+        self._params, self.history = fit_model(
+            apply, params, inputs, extras, scaler, self.train_cfg)
+        return self
+
+    def serve_apply(self, params, model_in):
+        return self._apply(params, model_in)
+
+    def batch_inputs(self, ds):
+        return {"features": np.asarray(ds.graph_features, np.float32),
+                "adj": np.asarray(ds.graph_adj, np.float32),
+                "mask": np.asarray(ds.graph_mask, np.float32)}
+
+
+def _loss_extras(ds, scaler: PCCScaler,
+                 xgb_runtime: Optional[np.ndarray]) -> Dict[str, np.ndarray]:
+    return {
+        "target_z": scaler.encode(ds.target_a, ds.target_b),
+        "observed_alloc": ds.observed_alloc,
+        "observed_runtime": ds.observed_runtime,
+        "xgb_runtime": (xgb_runtime if xgb_runtime is not None
+                        else ds.observed_runtime),
+    }

@@ -23,6 +23,7 @@ import numpy as np
 __all__ = [
     "fit_pcc",
     "fit_pcc_batch",
+    "fit_pcc_batch_np",
     "pcc_runtime",
     "pcc_runtime_jax",
     "is_non_increasing",
@@ -48,6 +49,29 @@ def fit_pcc(allocs: np.ndarray, runtimes: np.ndarray,
         return 0.0, float(np.exp(Rm))
     a = float(np.sum(wm * (A - Am) * (R - Rm)) / var)
     b = float(np.exp(Rm - a * Am))
+    return a, b
+
+
+def fit_pcc_batch_np(allocs: np.ndarray, runtimes: np.ndarray,
+                     weights: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized float64 twin of ``fit_pcc``: (J, K) -> (a (J,), b (J,)).
+
+    Same operations in the same order as the scalar fit, so each row is
+    bitwise-identical to ``fit_pcc(allocs[j], runtimes[j])`` — callers can
+    batch per-job loops without changing results.
+    """
+    A = np.log(np.asarray(allocs, np.float64))
+    R = np.log(np.maximum(np.asarray(runtimes, np.float64), 1e-9))
+    w = np.ones_like(A) if weights is None else np.asarray(weights, np.float64)
+    wm = w / np.sum(w, axis=-1, keepdims=True)
+    Am = np.sum(wm * A, -1, keepdims=True)
+    Rm = np.sum(wm * R, -1, keepdims=True)
+    var = np.sum(wm * (A - Am) ** 2, -1)
+    cov = np.sum(wm * (A - Am) * (R - Rm), -1)
+    a = np.where(var < 1e-12, 0.0, cov / np.maximum(var, 1e-300))
+    b = np.where(var < 1e-12, np.exp(Rm[..., 0]),
+                 np.exp(Rm[..., 0] - a * Am[..., 0]))
     return a, b
 
 

@@ -3,8 +3,13 @@ train -> deploy -> allocate).
 
 One object wires the full reproduction:
   corpus -> observed runs -> AREPAS augmentation -> featurization ->
-  {XGBoost(SS/PL), NN, GNN} x {LF1, LF2, LF3} -> Tables 4-8 metrics ->
+  PCCModel zoo {gbdt, nn, gnn} x {LF1, LF2, LF3} -> Tables 4-8 metrics ->
   allocation decisions.
+
+Models are built through the ``repro.core.models`` registry and share the
+``PCCModel`` surface, so training, evaluation, and the serving layer
+(``repro.serve.AllocationService``) treat every family identically. Keys in
+``self.models`` are ``"gbdt"`` / ``"nn:<loss>"`` / ``"gnn:<loss>"``.
 
 Sizes are configurable (the paper trains on 85k jobs; CPU defaults are
 smaller — every consumer takes a ``--scale`` style override).
@@ -15,17 +20,19 @@ import dataclasses
 import time
 from typing import Dict, Optional, Tuple
 
-import jax
 import numpy as np
 
 from repro.core.dataset import TasqDataset, build_dataset
-from repro.core.evaluate import CurveEval, eval_param_curves, eval_xgb_curves
-from repro.core.featurize import JOB_FEATURE_DIM, Standardizer
-from repro.core.losses import LossWeights
-from repro.core.models.gbdt import GBDT, GBDTConfig
-from repro.core.models.gnn import GNNConfig, make_gnn
-from repro.core.models.nn import NNConfig, fit_model, make_nn, param_count
-from repro.core.pcc import PCCScaler, fit_pcc, pcc_runtime
+from repro.core.evaluate import CurveEval, eval_pcc_model, eval_xgb_curves
+from repro.core.featurize import Standardizer
+from repro.core.models import (
+    GBDTConfig,
+    GNNConfig,
+    NNConfig,
+    PCCModel,
+    build_model,
+)
+from repro.core.pcc import PCCScaler, fit_pcc_batch_np
 from repro.workloads.executor import reexecute_fractions
 from repro.workloads.generator import build_corpus
 
@@ -47,7 +54,7 @@ class TasqConfig:
 
 
 class TasqPipeline:
-    """Build corpora, train the three model families, evaluate the tables."""
+    """Build corpora, train the model zoo, evaluate the tables."""
 
     def __init__(self, cfg: TasqConfig = TasqConfig()):
         self.cfg = cfg
@@ -55,9 +62,7 @@ class TasqPipeline:
         self.eval_set: Optional[TasqDataset] = None
         self.scaler: Optional[PCCScaler] = None
         self.std: Optional[Standardizer] = None
-        self.xgb: Optional[GBDT] = None
-        self.nn_models: Dict[str, Tuple] = {}     # loss kind -> (params, apply)
-        self.gnn_models: Dict[str, Tuple] = {}
+        self.models: Dict[str, PCCModel] = {}    # "gbdt" | "nn:lf2" | ...
         self.timings: Dict[str, float] = {}
         self.param_counts: Dict[str, int] = {}
 
@@ -76,115 +81,87 @@ class TasqPipeline:
         return self
 
     # -------------------------------------------------------------- training --
-    def train_xgb(self) -> None:
+    def _fit(self, key: str, model: PCCModel,
+             xgb_runtime: Optional[np.ndarray] = None) -> PCCModel:
         t0 = time.time()
-        X = self.train_set.xgb_X.copy()
-        X[:, :-1] = self.std(X[:, :-1])
-        self.xgb = GBDT(self.cfg.gbdt).fit(X, self.train_set.xgb_y)
-        self.timings["xgb_train_s"] = time.time() - t0
+        model.fit(self.train_set, scaler=self.scaler, std=self.std,
+                  xgb_runtime=xgb_runtime)
+        self.timings[f"{key}_train_s"] = time.time() - t0
+        if model.history.get("epoch_time_s"):
+            self.timings[f"{key}_epoch_s"] = float(
+                np.mean(model.history["epoch_time_s"]))
+        self.models[key] = model
+        self.param_counts.setdefault(model.family, model.param_count())
+        return model
 
-    def _extras(self, ds: TasqDataset, xgb_rt: Optional[np.ndarray] = None
-                ) -> Dict[str, np.ndarray]:
-        ex = {
-            "target_z": self.scaler.encode(ds.target_a, ds.target_b),
-            "observed_alloc": ds.observed_alloc,
-            "observed_runtime": ds.observed_runtime,
-        }
-        ex["xgb_runtime"] = (xgb_rt if xgb_rt is not None
-                             else ds.observed_runtime)
-        return ex
+    def _lf3_teacher(self, loss: str) -> Optional[np.ndarray]:
+        """LF3 distills the GBDT's runtime predictions (paper §4.5)."""
+        if loss != "lf3":
+            return None
+        return self.models["gbdt"].runtime_at(self.train_set)
 
-    def _xgb_runtime_at_observed(self, ds: TasqDataset) -> np.ndarray:
-        feats = self.std(ds.features)
-        X = np.concatenate([feats, np.log1p(ds.observed_alloc)[:, None]], 1)
-        return self.xgb.predict(X).astype(np.float32)
+    def train_xgb(self) -> None:
+        self._fit("gbdt", build_model("gbdt", cfg=self.cfg.gbdt))
+        # keep the legacy timing key for Table 7 consumers
+        self.timings["xgb_train_s"] = self.timings["gbdt_train_s"]
 
     def train_nn(self, loss: str = "lf2") -> None:
-        ds = self.train_set
         cfg = dataclasses.replace(self.cfg.nn, loss=loss)
-        params, apply = make_nn(JOB_FEATURE_DIM, cfg)
-        self.param_counts.setdefault("nn", param_count(params))
-        xgb_rt = (self._xgb_runtime_at_observed(ds) if loss == "lf3" else None)
-        t0 = time.time()
-        params, hist = fit_model(apply, params,
-                                 {"features": self.std(ds.features)},
-                                 self._extras(ds, xgb_rt), self.scaler, cfg)
-        self.timings[f"nn_{loss}_train_s"] = time.time() - t0
-        self.timings[f"nn_{loss}_epoch_s"] = float(np.mean(hist["epoch_time_s"]))
-        self.nn_models[loss] = (params, apply)
+        self._fit(f"nn:{loss}", build_model("nn", cfg=cfg),
+                  self._lf3_teacher(loss))
 
     def train_gnn(self, loss: str = "lf2") -> None:
-        ds = self.train_set
-        cfg = dataclasses.replace(self.cfg.nn, loss=loss,
-                                  epochs=self.cfg.gnn_epochs, batch_size=64)
-        params, apply = make_gnn(ds.graph_features.shape[-1], self.cfg.gnn_cfg)
-        self.param_counts.setdefault("gnn", param_count(params))
-        xgb_rt = (self._xgb_runtime_at_observed(ds) if loss == "lf3" else None)
-        inputs = {"features": ds.graph_features, "adj": ds.graph_adj,
-                  "mask": ds.graph_mask}
-        t0 = time.time()
-        params, hist = fit_model(apply, params, inputs,
-                                 self._extras(ds, xgb_rt), self.scaler, cfg)
-        self.timings[f"gnn_{loss}_train_s"] = time.time() - t0
-        self.timings[f"gnn_{loss}_epoch_s"] = float(np.mean(hist["epoch_time_s"]))
-        self.gnn_models[loss] = (params, apply)
+        train_cfg = dataclasses.replace(self.cfg.nn, loss=loss,
+                                        epochs=self.cfg.gnn_epochs,
+                                        batch_size=64)
+        self._fit(f"gnn:{loss}",
+                  build_model("gnn", cfg=self.cfg.gnn_cfg,
+                              train_cfg=train_cfg),
+                  self._lf3_teacher(loss))
 
     # ------------------------------------------------------------ inference --
-    def predict_params_nn(self, ds: TasqDataset, loss: str
-                          ) -> Tuple[np.ndarray, np.ndarray]:
-        params, apply = self.nn_models[loss]
-        z = apply(params, {"features": self.std(ds.features)})
-        a, b = self.scaler.decode(z)
-        return np.asarray(a), np.asarray(b)
-
-    def predict_params_gnn(self, ds: TasqDataset, loss: str,
-                           batch: int = 256) -> Tuple[np.ndarray, np.ndarray]:
-        params, apply = self.gnn_models[loss]
-        outs = []
-        for i in range(0, len(ds), batch):
-            z = apply(params, {
-                "features": ds.graph_features[i:i + batch],
-                "adj": ds.graph_adj[i:i + batch],
-                "mask": ds.graph_mask[i:i + batch]})
-            outs.append(np.asarray(z))
-        a, b = self.scaler.decode(np.concatenate(outs))
-        return np.asarray(a), np.asarray(b)
+    def predict_params(self, key: str, ds: TasqDataset
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """(a, b) from any trained model — one vmapped/jitted batch call."""
+        return self.models[key].predict_params(ds)
 
     def xgb_point_predictor(self):
-        """(feature_rows, allocs) -> runtimes, for curve assembly."""
-        def f(rows: np.ndarray, allocs: np.ndarray) -> np.ndarray:
-            X = np.concatenate(
-                [self.std(rows), np.log1p(allocs.astype(np.float64))[:, None]], 1)
-            return self.xgb.predict(X)
-        return f
+        """(feature_rows, allocs) -> runtimes, for SS-curve assembly."""
+        return self.models["gbdt"].point_predictor()
 
     # ----------------------------------------------------------- evaluation --
     def evaluate(self, ds: TasqDataset, loss: str) -> Dict[str, CurveEval]:
         """One Tables 4-6 row set on a dataset for one loss function."""
         out: Dict[str, CurveEval] = {}
-        args = (ds.observed_alloc, ds.observed_runtime)
-        tg = (ds.target_a, ds.target_b)
-        f = self.xgb_point_predictor()
-        out["xgboost_ss"] = eval_xgb_curves(f, ds.features, *args, *tg, mode="ss")
-        out["xgboost_pl"] = eval_xgb_curves(f, ds.features, *args, *tg, mode="pl")
-        if loss in self.nn_models:
-            a, b = self.predict_params_nn(ds, loss)
-            out["nn"] = eval_param_curves(a, b, *tg, *args)
-        if loss in self.gnn_models:
-            a, b = self.predict_params_gnn(ds, loss)
-            out["gnn"] = eval_param_curves(a, b, *tg, *args)
+        gbdt = self.models["gbdt"]
+        out["xgboost_ss"] = eval_xgb_curves(
+            gbdt.point_predictor(), ds.features, ds.observed_alloc,
+            ds.observed_runtime, ds.target_a, ds.target_b, mode="ss")
+        out["xgboost_pl"] = eval_pcc_model(gbdt, ds)
+        if f"nn:{loss}" in self.models:
+            out["nn"] = eval_pcc_model(self.models[f"nn:{loss}"], ds)
+        if f"gnn:{loss}" in self.models:
+            out["gnn"] = eval_pcc_model(self.models[f"gnn:{loss}"], ds)
         return out
 
     # ------------------------------------------------- ground-truth dataset --
     def ground_truth_records(self, jobs, fractions=(1.0, 0.8, 0.6, 0.2)):
-        """§5.1 re-execution: true runtimes at token fractions, with noise."""
-        recs = []
+        """§5.1 re-execution: true runtimes at token fractions, with noise.
+
+        Re-execution is inherently per-job (variable-length skylines), but
+        the PCC fits happen in one batched float64 call."""
+        allocs_all, runtimes_all, skylines_all = [], [], []
         for j in jobs:
             allocs, skylines = reexecute_fractions(
                 j, fractions, noise_sigma=self.cfg.noise_sigma_gt,
                 seed=self.cfg.seed + 97)
-            runtimes = np.array([len(s) for s in skylines], np.int64)
-            a, b = fit_pcc(allocs, runtimes)
-            recs.append({"job": j, "allocs": allocs, "runtimes": runtimes,
-                         "skylines": skylines, "a": a, "b": b})
-        return recs
+            allocs_all.append(allocs)
+            runtimes_all.append([len(s) for s in skylines])
+            skylines_all.append(skylines)
+        a, b = fit_pcc_batch_np(np.asarray(allocs_all, np.float64),
+                                np.asarray(runtimes_all, np.float64))
+        return [{"job": j, "allocs": al,
+                 "runtimes": np.asarray(rt, np.int64), "skylines": sk,
+                 "a": float(ai), "b": float(bi)}
+                for j, al, rt, sk, ai, bi in zip(
+                    jobs, allocs_all, runtimes_all, skylines_all, a, b)]

@@ -8,6 +8,12 @@ decode batch shape stays static so nothing recompiles).
 
 Runs for real on CPU with smoke configs (examples/serve_lm.py); lowers
 against the production mesh for the decode-shape dry-run cells.
+
+``AllocationFrontend`` is the same request-queue pattern for the paper's
+allocation decisions: single-query PCC allocation requests are micro-batched
+through a ``repro.serve.AllocationService`` — padded/bucketed batches, one
+compiled call per (model, bucket) — mirroring how the LM server keeps its
+decode shapes static.
 """
 from __future__ import annotations
 
@@ -20,9 +26,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model_api
+from repro.serve.batching import AllocationRequest, MicroBatcher
 from repro.train.steps import make_decode_step, make_prefill_step
 
-__all__ = ["ServeConfig", "Server", "Request"]
+__all__ = ["ServeConfig", "Server", "Request", "AllocationFrontend"]
 
 
 @dataclasses.dataclass
@@ -89,4 +96,41 @@ class Server:
 
             for i, r in enumerate(batch):
                 out[r.request_id] = gen[i][:r.max_new_tokens]
+        return out
+
+
+class AllocationFrontend:
+    """Request-queue endpoint for PCC token allocation.
+
+    The allocation analogue of ``Server``: requests queue up, ``step()``
+    drains them through the service's jitted batch path. Closed sets of
+    requests go through ``run()`` like the LM server.
+    """
+
+    def __init__(self, service, max_batch: int = 256):
+        self.service = service
+        self._batcher = MicroBatcher(service, max_batch=max_batch)
+
+    @property
+    def pending(self) -> int:
+        return len(self._batcher)
+
+    def submit(self, request_id: int, model_in: Dict[str, np.ndarray],
+               observed_tokens: Optional[int] = None) -> None:
+        self._batcher.submit(AllocationRequest(
+            request_id=request_id, model_in=model_in,
+            observed_tokens=observed_tokens))
+
+    def step(self) -> Dict[int, int]:
+        """Drain the queue: {request_id: allocated tokens}."""
+        return self._batcher.flush()
+
+    def run(self, requests: Sequence[AllocationRequest]) -> Dict[int, int]:
+        """Serve a closed set of allocation requests to completion."""
+        out: Dict[int, int] = {}
+        for r in requests:
+            self._batcher.submit(r)
+            if self.pending >= self._batcher.max_batch:
+                out.update(self.step())
+        out.update(self.step())
         return out

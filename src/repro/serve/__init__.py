@@ -1,0 +1,25 @@
+"""Serving layer: batched, jit-compiled PCC allocation decisions.
+
+``AllocationService`` turns any registered ``PCCModel`` into an online
+allocator: features -> scaled params -> decode -> allocation policy in one
+compiled call per (model, batch bucket). ``MicroBatcher`` queues single-job
+requests and drains them through the service in padded batches.
+"""
+from repro.serve.batching import (
+    AllocationRequest,
+    MicroBatcher,
+    batch_bucket,
+    node_bucket,
+    pad_to,
+)
+from repro.serve.service import AllocationResult, AllocationService
+
+__all__ = [
+    "AllocationRequest",
+    "AllocationResult",
+    "AllocationService",
+    "MicroBatcher",
+    "batch_bucket",
+    "node_bucket",
+    "pad_to",
+]

@@ -1,0 +1,133 @@
+"""Padded/bucketed batching + request-queue micro-batching.
+
+Serving traffic arrives one query at a time with variable-size plan graphs;
+XLA wants a small, fixed set of shapes. Two levers:
+
+  * ``batch_bucket``: round the batch dimension up to a power of two (min 8)
+    so every compiled function is reused across nearby batch sizes;
+  * ``node_bucket``: round a GNN graph's node count up to a power of two
+    (min 8). Padded nodes carry mask 0, which the GCN provably ignores
+    (tests/test_models_tasq.py::test_gnn_padding_invariance).
+
+``MicroBatcher`` is the request queue: submit single-job requests, then
+``flush()`` groups them by input signature (same node bucket -> same
+compiled fn), pads each group to its batch bucket, and issues one
+``AllocationService.allocate_batch`` call per group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["AllocationRequest", "MicroBatcher", "batch_bucket", "node_bucket",
+           "pad_to"]
+
+
+def _next_pow2(n: int, floor: int) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+def batch_bucket(n: int, floor: int = 8, cap: int = 4096) -> int:
+    """Compiled batch size for ``n`` queries: next power of two >= floor."""
+    return min(_next_pow2(max(n, 1), floor), max(cap, floor))
+
+
+def node_bucket(n: int, floor: int = 8) -> int:
+    """Compiled node-dimension size for an ``n``-operator plan graph."""
+    return _next_pow2(max(n, 1), floor)
+
+
+def pad_to(x: np.ndarray, size: int, axis: int = 0) -> np.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to ``size`` (no-op if already there)."""
+    if x.shape[axis] == size:
+        return x
+    assert x.shape[axis] < size, (x.shape, size, axis)
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - x.shape[axis])
+    return np.pad(x, widths)
+
+
+def pad_graph_inputs(model_in: Dict[str, np.ndarray], n_nodes: int
+                     ) -> Dict[str, np.ndarray]:
+    """Pad graph inputs' node dimension(s) to ``n_nodes`` (mask-safe).
+
+    Handles both single-job inputs (features (N, P), adj (N, N), mask (N,))
+    and batched ones (leading batch axis on each).
+    """
+    out = dict(model_in)
+    if "mask" in out:
+        out["mask"] = pad_to(out["mask"], n_nodes, axis=-1)
+    if "adj" in out:
+        out["adj"] = pad_to(pad_to(out["adj"], n_nodes, axis=-1),
+                            n_nodes, axis=-2)
+    if "features" in out:
+        # node axis is second-to-last: (N, P) single job, (B, N, P) batched
+        out["features"] = pad_to(out["features"], n_nodes, axis=-2)
+    return out
+
+
+@dataclasses.dataclass
+class AllocationRequest:
+    """One serving query: a single job's model inputs (no batch dim)."""
+    request_id: int
+    model_in: Dict[str, np.ndarray]
+    observed_tokens: Optional[int] = None
+
+
+class MicroBatcher:
+    """Queue single-job allocation requests; drain them in padded batches."""
+
+    def __init__(self, service, max_batch: int = 256):
+        self.service = service
+        self.max_batch = max_batch
+        self._queue: List[AllocationRequest] = []
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, request: AllocationRequest) -> None:
+        self._queue.append(request)
+
+    def _signature(self, req: AllocationRequest) -> Tuple:
+        # graphs in the same node bucket share a compiled function
+        feats = req.model_in.get("features")
+        if feats is not None and feats.ndim >= 2:   # (N, P) graph input
+            return ("graph", node_bucket(feats.shape[0]))
+        return ("flat",)
+
+    def flush(self) -> Dict[int, int]:
+        """Drain the queue: one service call per (signature, chunk).
+        Returns {request_id: allocated tokens}."""
+        out: Dict[int, int] = {}
+        groups: Dict[Tuple, List[AllocationRequest]] = {}
+        for r in self._queue:
+            groups.setdefault(self._signature(r), []).append(r)
+        self._queue = []
+        for sig, reqs in groups.items():
+            for i in range(0, len(reqs), self.max_batch):
+                chunk = reqs[i:i + self.max_batch]
+                out.update(self._dispatch(sig, chunk))
+        return out
+
+    def _dispatch(self, sig: Tuple, reqs: Sequence[AllocationRequest]
+                  ) -> Dict[int, int]:
+        if sig[0] == "graph":
+            n_nodes = sig[1]
+            padded = [pad_graph_inputs(r.model_in, n_nodes) for r in reqs]
+            stacked = {k: np.stack([p[k] for p in padded])
+                       for k in reqs[0].model_in}
+        else:
+            stacked = {k: np.stack([r.model_in[k] for r in reqs])
+                       for k in reqs[0].model_in}
+        observed = None
+        if any(r.observed_tokens is not None for r in reqs):
+            observed = np.array(
+                [r.observed_tokens if r.observed_tokens is not None
+                 else self.service.policy.max_tokens for r in reqs], np.int64)
+        res = self.service.allocate_batch(stacked, observed_tokens=observed)
+        return {r.request_id: int(t) for r, t in zip(reqs, res.tokens)}

@@ -1,0 +1,187 @@
+"""AllocationService: one compiled call from features to token decisions.
+
+The deploy/allocate stage of the paper (§2.2) as an online service: a
+trained ``PCCModel`` plus an ``AllocationPolicy`` become a batch function
+
+    model inputs (B, ...) -> scaled z -> PCCScaler.decode -> (a, b)
+                          -> choose_tokens_jnp -> tokens (B,)
+
+fused into a single jitted XLA executable per (model, input-shape bucket,
+policy). Decisions are computed in float64 (``enable_x64``) so they are
+bitwise-equal to the numpy ``choose_tokens`` oracle run on the same decoded
+parameters. Host-only models (GBDT) predict (a, b) on the host and share
+the compiled policy stage.
+
+Compiled functions are cached on (model.cache_key, shape signature,
+observed?, policy); ``stats["compiles"]`` exposes cache behavior to tests
+and benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.allocator import AllocationPolicy, choose_tokens_jnp
+from repro.serve.batching import batch_bucket, pad_to
+
+__all__ = ["AllocationResult", "AllocationService"]
+
+
+@dataclasses.dataclass
+class AllocationResult:
+    tokens: np.ndarray        # (B,) int64 allocation decisions
+    a: np.ndarray             # (B,) decoded PCC exponent
+    b: np.ndarray             # (B,) decoded PCC coefficient
+    runtime: np.ndarray       # (B,) predicted runtime at the chosen tokens
+
+
+class AllocationService:
+    """Batched allocation decisions for one trained PCCModel."""
+
+    # largest single compiled batch; bigger requests are served in chunks
+    MAX_BATCH = 4096
+
+    def __init__(self, model, policy: AllocationPolicy = AllocationPolicy(),
+                 batch_floor: int = 8):
+        self.model = model
+        self.policy = policy
+        self.batch_floor = batch_floor
+        self._cache: Dict[Tuple, callable] = {}
+        self.stats = {"compiles": 0, "calls": 0, "queries": 0}
+
+    # ------------------------------------------------------------ jit cache --
+    def _shape_sig(self, model_in: Dict[str, np.ndarray]) -> Tuple:
+        # full padded shapes (batch dim included): one cache entry == one
+        # XLA executable, so ``stats["compiles"]`` counts real compilations
+        return tuple(sorted((k, v.shape) for k, v in model_in.items()))
+
+    def _fused_fn(self, sig: Tuple, with_observed: bool):
+        key = ("fused", self.model.cache_key, sig, with_observed, self.policy)
+        if key not in self._cache:
+            self.stats["compiles"] += 1
+            model, policy, scaler = self.model, self.policy, self.model.scaler
+
+            def fused(params, model_in, observed):
+                z = model.serve_apply(params, model_in)
+                a, b = scaler.decode(z)
+                a64 = a.astype(jnp.float64)
+                b64 = b.astype(jnp.float64)
+                toks = choose_tokens_jnp(a64, b64, policy,
+                                         observed if with_observed else None)
+                rt = b64 * toks.astype(jnp.float64) ** a64
+                return toks, a, b, rt
+
+            self._cache[key] = jax.jit(fused)
+        return self._cache[key]
+
+    def _policy_fn(self, n_padded: int, with_observed: bool):
+        key = ("policy", n_padded, with_observed, self.policy)
+        if key not in self._cache:
+            self.stats["compiles"] += 1
+            policy = self.policy
+
+            def decide(a, b, observed):
+                toks = choose_tokens_jnp(a, b, policy,
+                                         observed if with_observed else None)
+                return toks, b * toks.astype(a.dtype) ** a
+
+            self._cache[key] = jax.jit(decide)
+        return self._cache[key]
+
+    @staticmethod
+    def _concat(results) -> AllocationResult:
+        return AllocationResult(
+            tokens=np.concatenate([r.tokens for r in results]),
+            a=np.concatenate([r.a for r in results]),
+            b=np.concatenate([r.b for r in results]),
+            runtime=np.concatenate([r.runtime for r in results]))
+
+    # ------------------------------------------------------------- serving --
+    def allocate_batch(self, model_in: Dict[str, np.ndarray],
+                       observed_tokens: Optional[np.ndarray] = None
+                       ) -> AllocationResult:
+        """Allocate for a batch of queries. Inputs are raw model arrays
+        (batch-leading); the batch dimension is padded to a power-of-two
+        bucket so repeated traffic reuses one compiled executable. Batches
+        beyond ``MAX_BATCH`` are served in MAX_BATCH-sized chunks."""
+        B = next(iter(model_in.values())).shape[0]
+        if B > self.MAX_BATCH:
+            return self._concat([
+                self.allocate_batch(
+                    {k: v[i:i + self.MAX_BATCH] for k, v in model_in.items()},
+                    None if observed_tokens is None
+                    else observed_tokens[i:i + self.MAX_BATCH])
+                for i in range(0, B, self.MAX_BATCH)])
+        if not self.model.supports_jit:
+            return self._allocate_host(model_in, observed_tokens)
+        self.stats["calls"] += 1
+        self.stats["queries"] += B
+
+        Bp = batch_bucket(B, self.batch_floor)
+        padded = {k: pad_to(np.asarray(v), Bp) for k, v in model_in.items()}
+        obs = None
+        if observed_tokens is not None:
+            # zero-padded rows are harmless: the bisection degenerates and
+            # their outputs are sliced off below
+            obs = pad_to(np.asarray(observed_tokens, np.int64), Bp)
+        fn = self._fused_fn(self._shape_sig(padded), observed_tokens is not None)
+        with enable_x64():
+            toks, a, b, rt = fn(
+                self.model.params,
+                {k: jnp.asarray(v) for k, v in padded.items()},
+                None if obs is None else jnp.asarray(obs))
+            toks, a, b, rt = (np.asarray(toks), np.asarray(a),
+                              np.asarray(b), np.asarray(rt))
+        return AllocationResult(tokens=toks[:B], a=a[:B], b=b[:B],
+                                runtime=rt[:B])
+
+    def _allocate_host(self, model_in, observed_tokens) -> AllocationResult:
+        """GBDT path: host (a, b) prediction + the shared compiled policy."""
+        ref = (observed_tokens if observed_tokens is not None
+               else np.full(next(iter(model_in.values())).shape[0],
+                            self.policy.max_tokens, np.int64))
+        a, b = self.model.predict_params_batch(model_in, np.asarray(ref))
+        return self.allocate_params(a, b, observed_tokens)
+
+    def allocate_params(self, a: np.ndarray, b: np.ndarray,
+                        observed_tokens: Optional[np.ndarray] = None
+                        ) -> AllocationResult:
+        """Policy-only path: decisions straight from (a, b) arrays — used by
+        host models and non-query PCCs (e.g. chip-count curves)."""
+        B = np.asarray(a).shape[0]
+        if B > self.MAX_BATCH:
+            return self._concat([
+                self.allocate_params(
+                    np.asarray(a)[i:i + self.MAX_BATCH],
+                    np.asarray(b)[i:i + self.MAX_BATCH],
+                    None if observed_tokens is None
+                    else np.asarray(observed_tokens)[i:i + self.MAX_BATCH])
+                for i in range(0, B, self.MAX_BATCH)])
+        self.stats["calls"] += 1
+        self.stats["queries"] += B
+        Bp = batch_bucket(B, self.batch_floor)
+        a64 = pad_to(np.asarray(a, np.float64), Bp)
+        b64 = pad_to(np.asarray(b, np.float64), Bp)
+        obs = None
+        if observed_tokens is not None:
+            obs = pad_to(np.asarray(observed_tokens, np.int64), Bp)
+        fn = self._policy_fn(Bp, observed_tokens is not None)
+        with enable_x64():
+            toks, rt = fn(jnp.asarray(a64), jnp.asarray(b64),
+                          None if obs is None else jnp.asarray(obs))
+            toks, rt = np.asarray(toks), np.asarray(rt)
+        return AllocationResult(tokens=toks[:B], a=np.asarray(a)[:B],
+                                b=np.asarray(b)[:B], runtime=rt[:B])
+
+    def allocate_dataset(self, ds, use_observed: bool = True
+                         ) -> AllocationResult:
+        """Allocate for every job in a TasqDataset (batch convenience)."""
+        obs = (np.asarray(ds.observed_alloc, np.int64) if use_observed
+               else None)
+        return self.allocate_batch(self.model.batch_inputs(ds),
+                                   observed_tokens=obs)

@@ -1,0 +1,99 @@
+"""Numeric parity: the jnp allocation policies must match the numpy oracles
+bitwise — the serving hot path may be compiled, but it is not allowed to
+make different decisions than the paper's reference policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import enable_x64
+
+from repro.core.allocator import (
+    AllocationPolicy,
+    choose_tokens,
+    choose_tokens_batch,
+    min_tokens_within_slowdown,
+    min_tokens_within_slowdown_jnp,
+)
+
+POLICIES = [
+    AllocationPolicy(),                                       # defaults
+    AllocationPolicy(min_gain=0.001),
+    AllocationPolicy(min_gain=0.1, max_slowdown=0.05),
+    AllocationPolicy(max_slowdown=0.05),
+    AllocationPolicy(max_slowdown=0.5),
+    AllocationPolicy(max_slowdown=0.0),                       # gain-only edge
+    AllocationPolicy(min_tokens=4, max_tokens=100,
+                     max_slowdown=0.05),
+]
+
+
+def _sweep_params(seed=0, n=200):
+    rng = np.random.RandomState(seed)
+    # bulk random + hand-picked edges: flat (a=0), barely-monotone, positive
+    a = np.concatenate([rng.uniform(-3.0, 0.5, n),
+                        [0.0, -1e-4, -1.0, 0.5, -2.9]])
+    b = np.concatenate([np.exp(rng.uniform(-1.0, 9.0, n)),
+                        [1.0, 100.0, 3.5, 7.0, 1e4]])
+    return a, b
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("with_observed", [False, True])
+def test_choose_tokens_bitwise_parity(policy, with_observed):
+    a, b = _sweep_params()
+    obs = (np.random.RandomState(1).randint(1, 7000, a.size)
+           if with_observed else None)
+    got = choose_tokens_batch(a, b, policy, obs)
+    want = np.array([
+        choose_tokens(float(ai), float(bi), policy,
+                      None if obs is None else int(obs[i]))
+        for i, (ai, bi) in enumerate(zip(a, b))])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_choose_tokens_observed_cap_edge():
+    """observed_tokens caps the search range, including observed < min_tokens
+    and observed == 1."""
+    pol = AllocationPolicy(min_tokens=4, max_slowdown=0.05)
+    a = np.full(6, -1.5)
+    b = np.full(6, 50.0)
+    obs = np.array([1, 2, 4, 5, 100, 6287], np.int64)
+    got = choose_tokens_batch(a, b, pol, obs)
+    want = np.array([choose_tokens(-1.5, 50.0, pol, int(o)) for o in obs])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_choose_tokens_zero_slowdown_is_gain_only():
+    """max_slowdown=0 must bypass the bisection entirely (oracle semantics:
+    the marginal-gain cut-off alone decides)."""
+    pol = AllocationPolicy(max_slowdown=0.0, min_gain=0.01)
+    a, b = _sweep_params(seed=3, n=64)
+    got = choose_tokens_batch(a, b, pol)
+    want = np.array([choose_tokens(float(ai), float(bi), pol)
+                     for ai, bi in zip(a, b)])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("max_slowdown", [0.0, 0.05, 0.3])
+def test_min_tokens_within_slowdown_parity(max_slowdown):
+    SMAX = 256
+    with enable_x64():
+        fn = jax.jit(jax.vmap(min_tokens_within_slowdown_jnp,
+                              in_axes=(0, 0, 0, None)),
+                     static_argnums=3)
+        skys, lens, obss, want = [], [], [], []
+        for seed in range(25):
+            rng = np.random.RandomState(seed)
+            L = int(rng.randint(5, 200))
+            sky = rng.randint(1, 50, L).astype(np.int64)
+            pad = np.zeros(SMAX, np.int64)
+            pad[:L] = sky
+            for obs in (1, int(sky.max()), int(sky.max() * 2), 500):
+                skys.append(pad)
+                lens.append(L)
+                obss.append(obs)
+                want.append(min_tokens_within_slowdown(sky, obs, max_slowdown))
+        got = fn(jnp.asarray(np.stack(skys)),
+                 jnp.asarray(np.asarray(lens, np.int32)),
+                 jnp.asarray(np.asarray(obss, np.int64)), max_slowdown)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -3,6 +3,8 @@ area-conservation and monotonicity properties, kernel parity."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import arepas

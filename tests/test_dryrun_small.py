@@ -50,6 +50,8 @@ _SCRIPT = textwrap.dedent("""
                          batch_shardings(cfg, shape, mesh))
             compiled = jax.jit(step, in_shardings=in_sh).lower(*args).compile()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # older jax: [dict]
+                cost = cost[0]
             coll = parse_hlo_collectives(compiled.as_text())
             out[f"{arch}:{kind}"] = {
                 "flops": float(cost.get("flops", 0)),

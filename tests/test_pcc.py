@@ -3,6 +3,7 @@ optimal-allocation policy."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pcc import (

@@ -11,8 +11,10 @@ from repro.workloads import build_corpus
 
 @pytest.fixture(scope="module")
 def pipeline():
+    # 18 GNN epochs: the 12-epoch fixture left the GNN undertrained and the
+    # Tables 4-6 curve-parameter ordering (GNN < XGB-PL) did not yet hold
     cfg = TasqConfig(n_train=250, n_eval=120,
-                     nn=NNConfig(epochs=40), gnn_epochs=12)
+                     nn=NNConfig(epochs=40), gnn_epochs=18)
     p = TasqPipeline(cfg).build()
     p.train_xgb()
     p.train_nn("lf2")

@@ -1,0 +1,223 @@
+"""PCCModel registry + AllocationService: uniform construction, round-trip
+predict -> allocate for all three families, compiled-function cache reuse,
+and the request-queue micro-batcher."""
+import numpy as np
+import pytest
+
+from repro.core.allocator import AllocationPolicy, choose_tokens
+from repro.core.models import (
+    GBDTModel,
+    GNNModel,
+    NNModel,
+    NNConfig,
+    PCCModel,
+    available_models,
+    build_model,
+)
+from repro.core.pipeline import TasqConfig, TasqPipeline
+from repro.launch.serve import AllocationFrontend
+from repro.serve import AllocationRequest, AllocationService, MicroBatcher
+from repro.serve.batching import batch_bucket, node_bucket, pad_to
+
+
+# ----------------------------------------------------------------- registry --
+def test_registry_exposes_all_families():
+    assert set(available_models()) >= {"gbdt", "nn", "gnn"}
+
+
+def test_build_model_resolves_families():
+    assert isinstance(build_model("gbdt"), GBDTModel)
+    assert isinstance(build_model("nn"), NNModel)
+    assert isinstance(build_model("gnn"), GNNModel)
+    assert all(isinstance(build_model(n), PCCModel)
+               for n in available_models())
+
+
+def test_build_model_unknown_name_raises():
+    with pytest.raises(KeyError, match="unknown PCC model"):
+        build_model("transformer")
+
+
+def test_cache_keys_unique_per_instance():
+    assert build_model("nn").cache_key != build_model("nn").cache_key
+
+
+# ----------------------------------------------------------------- buckets --
+def test_bucket_helpers():
+    assert batch_bucket(1) == 8 and batch_bucket(8) == 8
+    assert batch_bucket(9) == 16 and batch_bucket(1000) == 1024
+    assert node_bucket(3) == 8 and node_bucket(17) == 32
+    x = pad_to(np.ones((3, 2)), 8)
+    assert x.shape == (8, 2) and x[3:].sum() == 0
+
+
+# ------------------------------------------------------------ shared fixture --
+@pytest.fixture(scope="module")
+def pipeline():
+    """Tiny but fully trained pipeline: the shared fixture corpus."""
+    cfg = TasqConfig(n_train=160, n_eval=60, nn=NNConfig(epochs=8),
+                     gnn_epochs=3)
+    p = TasqPipeline(cfg).build()
+    p.train_xgb()
+    p.train_nn("lf2")
+    p.train_gnn("lf2")
+    return p
+
+
+ALL_KEYS = ("gbdt", "nn:lf2", "gnn:lf2")
+
+
+@pytest.mark.parametrize("key", ALL_KEYS)
+def test_unified_predict_params(pipeline, key):
+    ds = pipeline.eval_set
+    a, b = pipeline.models[key].predict_params(ds)
+    assert a.shape == b.shape == (len(ds),)
+    assert np.all(np.isfinite(a)) and np.all(np.isfinite(b))
+    assert np.all(b > 0)
+    if key != "gbdt":                      # decode guarantees the sign
+        assert np.all(a < 0)
+
+
+@pytest.mark.parametrize("key", ALL_KEYS)
+def test_round_trip_predict_allocate(pipeline, key):
+    """features -> params -> policy in one service call; decisions must be
+    bitwise-equal to the numpy policy run on the decoded parameters."""
+    ds = pipeline.eval_set
+    policy = AllocationPolicy(max_slowdown=0.05)
+    svc = AllocationService(pipeline.models[key], policy)
+    res = svc.allocate_dataset(ds)
+    assert res.tokens.shape == (len(ds),)
+    assert np.all(res.tokens >= policy.min_tokens)
+    assert np.all(res.tokens <= policy.max_tokens)
+    want = np.array([
+        choose_tokens(float(ai), float(bi), policy, int(o))
+        for ai, bi, o in zip(res.a, res.b,
+                             ds.observed_alloc.astype(np.int64))])
+    np.testing.assert_array_equal(res.tokens, want)
+
+
+def test_compiled_fn_cache_no_recompile(pipeline):
+    """Repeated batches of the same bucket shape must reuse one executable."""
+    ds = pipeline.eval_set
+    svc = AllocationService(pipeline.models["nn:lf2"],
+                            AllocationPolicy(max_slowdown=0.05))
+    svc.allocate_dataset(ds)
+    compiles_after_first = svc.stats["compiles"]
+    assert compiles_after_first == 1
+    svc.allocate_dataset(ds)                      # identical shape
+    inputs = pipeline.models["nn:lf2"].batch_inputs(ds)
+    small = {k: v[:17] for k, v in inputs.items()}   # different B, same bucket?
+    svc.allocate_batch({k: v[:32] for k, v in inputs.items()},
+                       observed_tokens=ds.observed_alloc[:32].astype(np.int64))
+    assert svc.stats["compiles"] == compiles_after_first + (
+        1 if batch_bucket(32) != batch_bucket(len(ds)) else 0)
+    calls_before = svc.stats["calls"]
+    svc.allocate_batch(small, observed_tokens=None)  # no-observed variant
+    assert svc.stats["calls"] == calls_before + 1
+
+
+def test_batches_beyond_max_batch_are_chunked(pipeline):
+    """Batches larger than MAX_BATCH must be served in chunks, not crash
+    on the padding assert (paper scale is 85k jobs)."""
+    ds = pipeline.eval_set
+    policy = AllocationPolicy(max_slowdown=0.05)
+    svc = AllocationService(pipeline.models["nn:lf2"], policy)
+    n = AllocationService.MAX_BATCH + 100
+    reps = -(-n // len(ds))
+    feats = np.tile(ds.features, (reps, 1))[:n]
+    obs = np.tile(ds.observed_alloc, reps)[:n].astype(np.int64)
+    res = svc.allocate_batch({"features": feats}, observed_tokens=obs)
+    assert res.tokens.shape == (n,)
+    # chunking must not change decisions: row i tiles eval row i % len(ds),
+    # so the whole output must be the first period repeated
+    np.testing.assert_array_equal(res.tokens,
+                                  np.tile(res.tokens[:len(ds)], reps)[:n])
+    # policy-only path chunks too
+    big = svc.allocate_params(np.full(n, -1.2), np.full(n, 50.0),
+                              observed_tokens=obs)
+    assert big.tokens.shape == (n,)
+
+
+def test_gnn_node_bucket_padding_invariance(pipeline):
+    """Padding the node dimension up to a bigger bucket must not change the
+    allocation decisions (masked nodes are inert)."""
+    from repro.serve.batching import pad_graph_inputs
+    ds = pipeline.eval_set
+    model = pipeline.models["gnn:lf2"]
+    svc = AllocationService(model, AllocationPolicy(max_slowdown=0.05))
+    base_in = model.batch_inputs(ds)
+    obs = ds.observed_alloc.astype(np.int64)
+    r1 = svc.allocate_batch(base_in, observed_tokens=obs)
+    n_now = base_in["features"].shape[1]
+    padded = pad_graph_inputs(base_in, node_bucket(n_now + 1))
+    r2 = svc.allocate_batch(padded, observed_tokens=obs)
+    np.testing.assert_array_equal(r1.tokens, r2.tokens)
+
+
+def test_micro_batcher_routes_requests(pipeline):
+    ds = pipeline.eval_set
+    model = pipeline.models["nn:lf2"]
+    svc = AllocationService(model, AllocationPolicy(max_slowdown=0.05))
+    mb = MicroBatcher(svc, max_batch=16)
+    n = 20
+    for i in range(n):
+        mb.submit(AllocationRequest(
+            request_id=100 + i,
+            model_in={"features": ds.features[i]},
+            observed_tokens=int(ds.observed_alloc[i])))
+    assert len(mb) == n
+    out = mb.flush()
+    assert len(mb) == 0
+    assert set(out) == {100 + i for i in range(n)}
+    # same answers as the direct batch path
+    direct = svc.allocate_batch({"features": ds.features[:n]},
+                                observed_tokens=ds.observed_alloc[:n]
+                                .astype(np.int64))
+    for i in range(n):
+        assert out[100 + i] == int(direct.tokens[i])
+
+
+def test_allocation_frontend_closed_set(pipeline):
+    ds = pipeline.eval_set
+    svc = AllocationService(pipeline.models["gnn:lf2"],
+                            AllocationPolicy(max_slowdown=0.05))
+    fe = AllocationFrontend(svc, max_batch=8)
+    reqs = [AllocationRequest(
+                request_id=i,
+                model_in={"features": ds.graph_features[i],
+                          "adj": ds.graph_adj[i],
+                          "mask": ds.graph_mask[i]},
+                observed_tokens=int(ds.observed_alloc[i]))
+            for i in range(12)]
+    out = fe.run(reqs)
+    assert set(out) == set(range(12))
+    assert all(t >= 1 for t in out.values())
+    assert fe.pending == 0
+
+
+def test_gbdt_host_path_through_service(pipeline):
+    """GBDT has no jit surface; the service must route it through the host
+    predictor + the shared compiled policy stage."""
+    ds = pipeline.eval_set
+    model = pipeline.models["gbdt"]
+    assert not model.supports_jit
+    svc = AllocationService(model, AllocationPolicy(max_slowdown=0.05))
+    res = svc.allocate_dataset(ds)
+    a, b = model.predict_params(ds)
+    np.testing.assert_array_equal(res.a, a)
+    np.testing.assert_array_equal(res.b, b)
+
+
+def test_gbdt_vectorized_pl_matches_scalar_loop(pipeline):
+    """The one-pass fan + batched fit must reproduce the per-job PL loop."""
+    from repro.core.curves import fit_pl_curve, prediction_fan
+    ds = pipeline.eval_set
+    model = pipeline.models["gbdt"]
+    a, b = model.predict_params(ds)
+    f = model.point_predictor()
+    for i in (0, 7, len(ds) - 1):
+        fan = prediction_fan(ds.observed_alloc[i])
+        rows = np.repeat(ds.features[i][None, :], fan.size, 0)
+        ai, bi = fit_pl_curve(fan, f(rows, fan))
+        assert a[i] == pytest.approx(ai, rel=1e-12)
+        assert b[i] == pytest.approx(bi, rel=1e-12)

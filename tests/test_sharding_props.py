@@ -1,6 +1,7 @@
 """Property tests for the sharding rule machinery (hypothesis)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax

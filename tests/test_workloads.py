@@ -1,6 +1,7 @@
 """Workload generator + executor invariants."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.arepas import skyline_area
