@@ -8,10 +8,14 @@
   table7   parameter counts, training and inference times (§5.3)
   table8   model accuracy on the re-executed ground-truth subset (§5.4)
   serve_alloc  batched AllocationService throughput vs the per-job loop path
+  cluster_sim  trace-driven cluster simulator with online PCC refinement
 
 Prints human-readable tables + "name,metric,value" CSV lines, and writes
-results/benchmarks.json for EXPERIMENTS.md. ``--scale`` grows every corpus
-(1.0 == CPU-sized defaults; the paper's 85k-job scale is --scale 50).
+results/benchmarks.json for EXPERIMENTS.md. ``--json out.json`` additionally
+emits one machine-readable row per benchmark — name, wall time, throughput,
+metrics — so the perf trajectory can be tracked across PRs. ``--scale``
+grows every corpus (1.0 == CPU-sized defaults; the paper's 85k-job scale is
+--scale 50).
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--scale 1.0] [--only fig2,...]
 """
@@ -22,10 +26,11 @@ import dataclasses
 import json
 import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.cluster import ClusterConfig, ClusterSimulator
 from repro.core.allocator import (AllocationPolicy, choose_tokens,
                                   token_reduction_cdf)
 from repro.core.arepas import simulate_runtime, skyline_area
@@ -36,15 +41,38 @@ from repro.core.models import NNConfig
 from repro.core.pipeline import TasqConfig, TasqPipeline
 from repro.core.selection import select_jobs
 from repro.serve import AllocationService
-from repro.workloads import build_corpus, execute, observed_skyline, reexecute_fractions
+from repro.workloads import (TraceGenerator, build_corpus, execute,
+                             observed_skyline, reexecute_fractions)
 
 RESULTS: Dict[str, Dict] = {}
+JSON_ROWS: List[Dict] = []          # one machine-readable row per benchmark
+_CURRENT_ITEMS = [0]                # work items of the bench being timed
 
 
-def _emit(name: str, metrics: Dict) -> None:
+def _emit(name: str, metrics: Dict, items: Optional[int] = None) -> None:
     RESULTS[name] = metrics
+    if items is not None:
+        _CURRENT_ITEMS[0] += int(items)
     for k, v in metrics.items():
         print(f"CSV,{name},{k},{v}")
+
+
+def _run_bench(name: str, fn, *args) -> None:
+    """Time one benchmark and append its machine-readable row."""
+    before = set(RESULTS)
+    _CURRENT_ITEMS[0] = 0
+    t0 = time.time()
+    fn(*args)
+    wall = time.time() - t0
+    items = _CURRENT_ITEMS[0]
+    metrics = {k: v for k, v in RESULTS.items() if k not in before}
+    JSON_ROWS.append({
+        "name": name,
+        "wall_time_s": round(wall, 3),
+        "throughput": round(items / wall, 2) if items and wall > 0 else None,
+        "items": items or None,
+        "metrics": metrics,
+    })
 
 
 # ---------------------------------------------------------------- figure 2 --
@@ -63,7 +91,7 @@ def bench_fig2_token_reduction_cdf(scale: float) -> None:
         out[f"jobs_ge50pct_reduction_{tag}"] = round(
             float(frac[np.searchsorted(r, 0.50)]), 3)
     print(f"[fig2] n={n}: {out}")
-    _emit("fig2_token_reduction", out)
+    _emit("fig2_token_reduction", out, items=n)
 
 
 # --------------------------------------------------------------- figure 10 --
@@ -86,7 +114,7 @@ def bench_fig10_job_selection(scale: float) -> None:
             rep.sel_cluster_frac - rep.pop_cluster_frac))), 4),
     }
     print(f"[fig10] {out}")
-    _emit("fig10_selection", out)
+    _emit("fig10_selection", out, items=n)
 
 
 # --------------------------------------------------------------- figure 11 --
@@ -122,7 +150,7 @@ def bench_fig11_area_conservation(scale: float) -> None:
         "jobs_zero_outliers": round(float(np.mean(oc == 0)), 3),
     }
     print(f"[fig11] n={n}: {out} (paper: 65% pairs @30%, 83% jobs <=1 outlier)")
-    _emit("fig11_area_conservation", out)
+    _emit("fig11_area_conservation", out, items=n)
 
 
 # ----------------------------------------------------------------- table 3 --
@@ -159,7 +187,7 @@ def bench_table3_arepas_error(scale: float) -> None:
         "n_executions": int(apes.size),
     }
     print(f"[table3] {out} (paper: 9.19%/14% and 22%/25%)")
-    _emit("table3_arepas_error", out)
+    _emit("table3_arepas_error", out, items=int(apes.size))
 
 
 # ------------------------------------------------------------- tables 4-6 --
@@ -175,7 +203,7 @@ def bench_tables_4_5_6_models(scale: float, pipeline: TasqPipeline) -> None:
         print(f"[tables456:{loss}]")
         for m, ev in res.items():
             print(f"  {m:12s} {ev.row()}")
-        _emit(f"table456_{loss}", table)
+        _emit(f"table456_{loss}", table, items=len(pipeline.eval_set))
 
 
 # ----------------------------------------------------------------- table 7 --
@@ -200,7 +228,7 @@ def bench_table7_model_costs(pipeline: TasqPipeline) -> None:
     }
     print(f"[table7] {out} (paper: NN 2216 params, GNN 19210; "
           f"NN 2s/epoch vs GNN 913s; 0.09s vs 78s per 10k)")
-    _emit("table7_costs", out)
+    _emit("table7_costs", out, items=len(ds))
 
 
 # ----------------------------------------------------------------- table 8 --
@@ -239,7 +267,8 @@ def bench_table8_ground_truth(scale: float, pipeline: TasqPipeline) -> None:
         print(f"  {m:12s} {ev.row()}")
     _emit("table8_ground_truth",
           {f"{m}_{k}": v for m, ev in res.items()
-           for k, v in ev.row().items()})
+           for k, v in ev.row().items()},
+          items=len(selected))
 
 
 # -------------------------------------------------------------- serve_alloc --
@@ -292,11 +321,45 @@ def bench_serve_alloc(scale: float, pipeline: TasqPipeline) -> None:
         "decisions_match_loop": True,
     }
     print(f"[serve_alloc] {out}")
-    _emit("serve_alloc", out)
+    _emit("serve_alloc", out, items=n_target)
+
+
+# -------------------------------------------------------------- cluster_sim --
+def bench_cluster_sim(scale: float, pipeline: TasqPipeline) -> None:
+    """Trace-driven cluster simulation: replay a multi-tenant query stream
+    (bursty arrivals, Zipf repeats, SLA classes) through the batched
+    AllocationService against a finite token pool, with completed queries
+    AREPAS-refined into the PCCCache (the paper's "past observed" path)."""
+    if "nn:lf2" not in pipeline.models:
+        pipeline.train_nn("lf2")
+    n_events = int(10_000 * scale)
+    gen = TraceGenerator(seed=71, n_unique=max(32, int(256 * scale)))
+    trace = gen.generate(n_events)
+    service = AllocationService(pipeline.models["nn:lf2"],
+                                AllocationPolicy(max_slowdown=0.05))
+    sim = ClusterSimulator(service, ClusterConfig())
+    rep = sim.run(trace)
+    m = rep.metrics
+    out = {
+        "n_events": rep.n_events,
+        "n_epochs": rep.n_epochs,
+        "events_per_s": rep.events_per_s,
+        "utilization": m["utilization"],
+        "p50_slowdown": m["p50_slowdown"],
+        "p99_slowdown": m["p99_slowdown"],
+        "sla_violation_rate": m.get("sla_violation_rate"),
+        "cost_saving_frac": m["cost_saving_frac"],
+        "cache_hit_rate": m["cache_hit_rate"],
+        "alloc_error_model": m.get("alloc_error_model"),
+        "alloc_error_cache": m.get("alloc_error_cache"),
+        "mean_queue_depth": m["mean_queue_depth"],
+    }
+    print(f"[cluster_sim] {rep.summary()}")
+    _emit("cluster_sim", out, items=n_events)
 
 
 ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8",
-       "serve_alloc")
+       "serve_alloc", "cluster_sim")
 
 
 def main() -> None:
@@ -304,12 +367,15 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--only", default="", help="comma-separated subset")
     ap.add_argument("--out", default="results/benchmarks.json")
+    ap.add_argument("--json", default="", dest="json_out", metavar="OUT.json",
+                    help="write per-benchmark machine-readable rows "
+                         "(name, wall time, throughput, metrics)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(ALL)
 
     t_start = time.time()
     pipeline = None
-    if only & {"tables456", "table7", "table8", "serve_alloc"}:
+    if only & {"tables456", "table7", "table8", "serve_alloc", "cluster_sim"}:
         cfg = TasqConfig(n_train=int(1200 * args.scale),
                          n_eval=int(600 * args.scale),
                          nn=NNConfig(epochs=60),
@@ -318,27 +384,38 @@ def main() -> None:
               f"(train={cfg.n_train}, eval={cfg.n_eval})")
         pipeline = TasqPipeline(cfg).build()
         pipeline.train_xgb()
+        if only & {"serve_alloc", "cluster_sim"}:
+            # train outside the timed windows: their wall/throughput rows
+            # must measure serving/replay, not model training
+            pipeline.train_nn("lf2")
 
     if "fig2" in only:
-        bench_fig2_token_reduction_cdf(args.scale)
+        _run_bench("fig2", bench_fig2_token_reduction_cdf, args.scale)
     if "fig10" in only:
-        bench_fig10_job_selection(args.scale)
+        _run_bench("fig10", bench_fig10_job_selection, args.scale)
     if "fig11" in only:
-        bench_fig11_area_conservation(args.scale)
+        _run_bench("fig11", bench_fig11_area_conservation, args.scale)
     if "table3" in only:
-        bench_table3_arepas_error(args.scale)
+        _run_bench("table3", bench_table3_arepas_error, args.scale)
     if "tables456" in only:
-        bench_tables_4_5_6_models(args.scale, pipeline)
+        _run_bench("tables456", bench_tables_4_5_6_models, args.scale, pipeline)
     if "table7" in only:
-        bench_table7_model_costs(pipeline)
+        _run_bench("table7", bench_table7_model_costs, pipeline)
     if "table8" in only:
-        bench_table8_ground_truth(args.scale, pipeline)
+        _run_bench("table8", bench_table8_ground_truth, args.scale, pipeline)
     if "serve_alloc" in only:
-        bench_serve_alloc(args.scale, pipeline)
+        _run_bench("serve_alloc", bench_serve_alloc, args.scale, pipeline)
+    if "cluster_sim" in only:
+        _run_bench("cluster_sim", bench_cluster_sim, args.scale, pipeline)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(RESULTS, f, indent=1)
+    if args.json_out:
+        os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
+        with open(args.json_out, "w") as f:
+            json.dump(JSON_ROWS, f, indent=1)
+        print(f"[json] {len(JSON_ROWS)} benchmark rows -> {args.json_out}")
     print(f"[done] {time.time()-t_start:.1f}s -> {args.out}")
 
 

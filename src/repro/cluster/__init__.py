@@ -1,0 +1,25 @@
+"""Cluster layer: trace-driven multi-tenant simulation with online PCC
+refinement.
+
+``ClusterSimulator`` replays a ``repro.workloads.Trace`` (bursty arrivals,
+Zipf-repeated queries, per-tenant SLA classes) through a batched
+``AllocationService`` against a finite ``TokenPool`` with admission control
+and FIFO/priority queueing. Completed queries are AREPAS-refined into a
+``PCCCache`` — the paper's "past observed" path — so repeat traffic bypasses
+the learned model; ``ClusterMetrics`` tracks cost, utilization, p50/p99
+slowdown, SLA violations, queue depth, and model-vs-history allocation
+error over time.
+"""
+from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.pcc_cache import PCCCache
+from repro.cluster.pool import TokenPool
+from repro.cluster.simulator import ClusterConfig, ClusterReport, ClusterSimulator
+
+__all__ = [
+    "ClusterConfig",
+    "ClusterMetrics",
+    "ClusterReport",
+    "ClusterSimulator",
+    "PCCCache",
+    "TokenPool",
+]

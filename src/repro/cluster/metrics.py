@@ -1,0 +1,150 @@
+"""ClusterMetrics — cost / utilization / slowdown / SLA accounting.
+
+Per-query records (append-only column lists, finalized into numpy arrays)
+plus per-epoch samples of queue depth and pool occupancy. ``report()``
+aggregates the headline numbers; ``error_series()`` exposes the
+model-vs-history allocation error over trace time, the quantity the online
+refinement loop is supposed to drive toward zero as traffic repeats.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ClusterMetrics"]
+
+
+@dataclasses.dataclass
+class _Columns:
+    """Per-completed-query columns (parallel lists)."""
+    arrival_s: List[float] = dataclasses.field(default_factory=list)
+    start_s: List[float] = dataclasses.field(default_factory=list)
+    finish_s: List[float] = dataclasses.field(default_factory=list)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    default_tokens: List[int] = dataclasses.field(default_factory=list)
+    runtime_s: List[int] = dataclasses.field(default_factory=list)
+    ideal_runtime_s: List[int] = dataclasses.field(default_factory=list)
+    sla: List[int] = dataclasses.field(default_factory=list)
+    tenant: List[int] = dataclasses.field(default_factory=list)
+    cache_hit: List[bool] = dataclasses.field(default_factory=list)
+    repeat: List[bool] = dataclasses.field(default_factory=list)
+    alloc_error: List[float] = dataclasses.field(default_factory=list)
+
+
+class ClusterMetrics:
+    """Collects per-query and per-epoch statistics for one simulation run."""
+
+    def __init__(self, capacity: int,
+                 sla_limits: Optional[np.ndarray] = None):
+        self.capacity = capacity
+        self.sla_limits = (None if sla_limits is None
+                           else np.asarray(sla_limits, np.float64))
+        self._q = _Columns()
+        self._epoch_t: List[float] = []
+        self._epoch_queue_depth: List[int] = []
+        self._epoch_in_use: List[int] = []
+        self._epoch_alloc_err: List[float] = []
+        self.n_rejected = 0
+
+    # ----------------------------------------------------------- recording --
+    def record_completions(self, *, arrival_s, start_s, finish_s, tokens,
+                           default_tokens, runtime_s, ideal_runtime_s, sla,
+                           tenant, cache_hit, repeat, alloc_error) -> None:
+        """Append a batch of completed queries (parallel arrays)."""
+        c = self._q
+        c.arrival_s.extend(np.asarray(arrival_s, np.float64).tolist())
+        c.start_s.extend(np.asarray(start_s, np.float64).tolist())
+        c.finish_s.extend(np.asarray(finish_s, np.float64).tolist())
+        c.tokens.extend(np.asarray(tokens, np.int64).tolist())
+        c.default_tokens.extend(np.asarray(default_tokens, np.int64).tolist())
+        c.runtime_s.extend(np.asarray(runtime_s, np.int64).tolist())
+        c.ideal_runtime_s.extend(np.asarray(ideal_runtime_s, np.int64).tolist())
+        c.sla.extend(np.asarray(sla, np.int64).tolist())
+        c.tenant.extend(np.asarray(tenant, np.int64).tolist())
+        c.cache_hit.extend(np.asarray(cache_hit, bool).tolist())
+        c.repeat.extend(np.asarray(repeat, bool).tolist())
+        c.alloc_error.extend(np.asarray(alloc_error, np.float64).tolist())
+
+    def sample_epoch(self, now: float, queue_depth: int, in_use: int,
+                     epoch_alloc_errors: np.ndarray) -> None:
+        self._epoch_t.append(float(now))
+        self._epoch_queue_depth.append(int(queue_depth))
+        self._epoch_in_use.append(int(in_use))
+        errs = np.asarray(epoch_alloc_errors, np.float64)
+        self._epoch_alloc_err.append(float(np.mean(errs)) if errs.size
+                                     else np.nan)
+
+    # ----------------------------------------------------------- reporting --
+    def _cols(self) -> Dict[str, np.ndarray]:
+        c = self._q
+        return {f.name: np.asarray(getattr(c, f.name))
+                for f in dataclasses.fields(c)}
+
+    def slowdowns(self) -> np.ndarray:
+        """(finish - arrival) / ideal runtime — queueing wait included."""
+        d = self._cols()
+        if d["arrival_s"].size == 0:
+            return np.zeros(0)
+        return ((d["finish_s"] - d["arrival_s"])
+                / np.maximum(d["ideal_runtime_s"], 1))
+
+    def error_series(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(epoch end times, mean allocation error of that epoch's decisions).
+
+        Epochs with no decisions carry NaN; with repeat-heavy traffic and the
+        cache enabled the series converges toward zero as history accrues.
+        """
+        return (np.asarray(self._epoch_t),
+                np.asarray(self._epoch_alloc_err))
+
+    def report(self) -> Dict[str, float]:
+        d = self._cols()
+        n = int(d["arrival_s"].size)
+        if n == 0:
+            return {"n_completed": 0}
+        makespan = float(np.max(d["finish_s"]))
+        cost = float(np.sum(d["tokens"] * d["runtime_s"]))
+        default_cost = float(np.sum(d["default_tokens"]
+                                    * d["ideal_runtime_s"]))
+        slow = self.slowdowns()
+        out = {
+            "n_completed": n,
+            "n_rejected": int(self.n_rejected),
+            "makespan_s": round(makespan, 1),
+            "cost_token_s": round(cost, 1),
+            "default_cost_token_s": round(default_cost, 1),
+            "cost_saving_frac": round(1.0 - cost / max(default_cost, 1e-9), 4),
+            "utilization": round(cost / max(self.capacity * makespan, 1e-9), 4),
+            "p50_slowdown": round(float(np.percentile(slow, 50)), 3),
+            "p99_slowdown": round(float(np.percentile(slow, 99)), 3),
+            "mean_queue_depth": round(float(np.mean(self._epoch_queue_depth))
+                                      if self._epoch_queue_depth else 0.0, 2),
+            "peak_queue_depth": int(np.max(self._epoch_queue_depth)
+                                    if self._epoch_queue_depth else 0),
+            "cache_hit_rate": round(float(np.mean(d["cache_hit"])), 4),
+            "repeat_frac": round(float(np.mean(d["repeat"])), 4),
+            "alloc_error_mean": round(float(np.mean(d["alloc_error"])), 4),
+        }
+        wait = d["start_s"] - d["arrival_s"]
+        out["mean_wait_s"] = round(float(np.mean(wait)), 2)
+        if self.sla_limits is not None:
+            limits = self.sla_limits[d["sla"]]
+            viol = slow > limits
+            out["sla_violation_rate"] = round(float(np.mean(viol)), 4)
+            for cls in np.unique(d["sla"]):
+                m = d["sla"] == cls
+                out[f"sla_violation_rate_class{int(cls)}"] = round(
+                    float(np.mean(viol[m])), 4)
+                out[f"mean_wait_s_class{int(cls)}"] = round(
+                    float(np.mean(wait[m])), 2)
+        # the tentpole comparison: exact-history path vs cold-model path
+        for name, mask in (("cache", d["cache_hit"]),
+                           ("model", ~d["cache_hit"]),
+                           ("model_repeat", d["repeat"] & ~d["cache_hit"]),
+                           ("cache_repeat", d["repeat"] & d["cache_hit"])):
+            if np.any(mask):
+                out[f"alloc_error_{name}"] = round(
+                    float(np.mean(d["alloc_error"][mask])), 4)
+        return out

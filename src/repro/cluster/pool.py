@@ -1,0 +1,97 @@
+"""Finite global token pool with lease-based accounting.
+
+The cluster's shared resource: a fixed capacity of tokens, out of which each
+admitted query leases its allocation for the duration of its (simulated)
+execution. Lease state lives in fixed-size arrays so the per-epoch expiry
+scan — find every lease that ended by ``now``, return the freed tokens and
+their query ids — is one jitted jnp kernel over the whole table, compiled
+once per table size (the same static-shape discipline as the serving layer).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+__all__ = ["TokenPool"]
+
+
+@jax.jit
+def _expire_kernel(end_s: jax.Array, tokens: jax.Array, now: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One vectorized expiry scan over the lease table.
+
+    Returns (expired mask, freed token total, new end_s, new tokens).
+    """
+    expired = (tokens > 0) & (end_s <= now)
+    freed = jnp.sum(jnp.where(expired, tokens, 0))
+    return (expired, freed,
+            jnp.where(expired, jnp.inf, end_s),
+            jnp.where(expired, 0, tokens))
+
+
+class TokenPool:
+    """Global token pool: ``capacity`` tokens shared by up to ``max_leases``
+    concurrently running queries."""
+
+    def __init__(self, capacity: int, max_leases: int = 4096):
+        assert capacity >= 1
+        self.capacity = int(capacity)
+        self.max_leases = int(max_leases)
+        self._end_s = np.full(max_leases, np.inf)
+        self._tokens = np.zeros(max_leases, np.int64)
+        self._query = np.full(max_leases, -1, np.int64)
+        self.in_use = 0
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.in_use
+
+    @property
+    def n_active(self) -> int:
+        return int(np.count_nonzero(self._tokens))
+
+    def next_expiry(self) -> float:
+        """Earliest lease end time (inf if the pool is idle)."""
+        return float(np.min(self._end_s))
+
+    def expire(self, now: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Release every lease that ended by ``now``.
+
+        Returns (query ids, token counts) of the released leases.
+        """
+        with enable_x64():    # end times must keep float64 resolution
+            expired, freed, end_s, tokens = _expire_kernel(
+                jnp.asarray(self._end_s), jnp.asarray(self._tokens),
+                jnp.asarray(float(now)))
+        expired = np.asarray(expired)
+        qids = self._query[expired]
+        toks = self._tokens[expired]
+        # copies: jax buffers are read-only; dtypes pinned against downcasts
+        self._end_s = np.asarray(end_s, np.float64).copy()
+        self._tokens = np.asarray(tokens, np.int64).copy()
+        self._query[expired] = -1
+        self.in_use -= int(freed)
+        assert self.in_use >= 0, self.in_use
+        return qids, toks
+
+    def acquire_batch(self, query_ids: np.ndarray, tokens: np.ndarray,
+                      end_s: np.ndarray) -> None:
+        """Lease ``tokens[i]`` for query ``query_ids[i]`` until ``end_s[i]``.
+
+        The caller guarantees the batch fits (sum(tokens) <= free).
+        """
+        k = len(query_ids)
+        if k == 0:
+            return
+        total = int(np.sum(tokens))
+        assert total <= self.free, (total, self.free)
+        slots = np.flatnonzero(self._tokens == 0)[:k]
+        assert len(slots) == k, "lease table full; raise max_leases"
+        self._end_s[slots] = end_s
+        self._tokens[slots] = tokens
+        self._query[slots] = query_ids
+        self.in_use += total

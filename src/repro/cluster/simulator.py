@@ -1,0 +1,249 @@
+"""Trace-driven cluster simulator (discrete-event, epoch-batched).
+
+Replays a multi-tenant ``Trace`` through an ``AllocationService`` against a
+finite global ``TokenPool`` with admission control and FIFO/priority
+queueing. The inner step is vectorized over event batches:
+
+  * allocation decisions go through the service's jitted batch path — the
+    learned model for cold queries, the policy-only ``allocate_params`` twin
+    for queries whose exact PCC is already in the ``PCCCache``;
+  * true runtimes at the chosen allocation come from one jitted AREPAS call
+    over the batch's padded skylines;
+  * pool accounting / lease expiry is one jnp kernel over the lease table;
+  * admission is a vectorized prefix-sum over the (priority, arrival)-sorted
+    queue — no per-query Python in the hot loop.
+
+Completed queries feed the online refinement loop: their observed skylines
+are run back through AREPAS and fitted into the ``PCCCache`` (the paper's
+"past observed" path), so repeat traffic progressively bypasses the model
+and the simulator can measure model-vs-history allocation error converging.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.metrics import ClusterMetrics
+from repro.cluster.pcc_cache import PCCCache
+from repro.cluster.pool import TokenPool
+from repro.core.arepas import simulate_runtime_batch_jit
+from repro.core.featurize import batch_graphs, batch_job_features
+from repro.serve.batching import batch_bucket, pad_to
+from repro.workloads.generator import Trace
+
+__all__ = ["ClusterConfig", "ClusterReport", "ClusterSimulator"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    capacity: int = 8192          # global token pool size
+    epoch_s: float = 15.0         # decision-batching window
+    max_leases: int = 8192
+    use_cache: bool = True        # online PCC refinement + cache-hit path
+    admission: str = "priority"   # "priority" (SLA classes) or "fifo"
+    max_queue: int = 100_000      # admission control: reject beyond this
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    metrics: Dict[str, float]
+    n_events: int
+    n_epochs: int
+    wall_s: float
+    events_per_s: float
+    cache_stats: Dict[str, int]
+    service_stats: Dict[str, int]
+    error_series: Tuple[np.ndarray, np.ndarray]
+    alloc_errors: np.ndarray          # (n_events,) per-decision error
+    cache_hits: np.ndarray            # (n_events,) decision used the cache
+    repeats: np.ndarray               # (n_events,) query seen earlier
+
+    def summary(self) -> str:
+        m = self.metrics
+        return (f"{self.n_events} queries in {self.n_epochs} epochs "
+                f"({self.events_per_s:.0f} ev/s wall) | "
+                f"util {m.get('utilization', 0):.2f} "
+                f"p50/p99 slowdown {m.get('p50_slowdown', 0):.2f}/"
+                f"{m.get('p99_slowdown', 0):.2f} | "
+                f"SLA viol {m.get('sla_violation_rate', 0):.1%} | "
+                f"cost saving {m.get('cost_saving_frac', 0):.1%} | "
+                f"cache hit {m.get('cache_hit_rate', 0):.1%}")
+
+
+class ClusterSimulator:
+    """Discrete-event simulation of one trace against one trained service."""
+
+    def __init__(self, service, cfg: ClusterConfig = ClusterConfig()):
+        assert cfg.admission in ("priority", "fifo"), cfg.admission
+        self.service = service
+        self.cfg = cfg
+        # rebuilt per run(): cache keys are trace-local unique-query indices
+        self.cache = PCCCache()
+
+    # ---------------------------------------------------------- precompute --
+    def _pool_inputs(self, trace: Trace) -> Dict[str, np.ndarray]:
+        """Model inputs for every unique query, gatherable by job index."""
+        if self.service.model.family == "gnn":
+            gf, ga, gm = batch_graphs(trace.jobs)
+            return {"features": gf, "adj": ga, "mask": gm}
+        return {"features": batch_job_features(trace.jobs)}
+
+    def _true_runtimes(self, sky_rows: np.ndarray, lens: np.ndarray,
+                       tokens: np.ndarray) -> np.ndarray:
+        """Batched AREPAS: runtime of each query at its chosen allocation."""
+        B = tokens.shape[0]
+        Bp = batch_bucket(B)
+        rt = np.asarray(simulate_runtime_batch_jit(
+            jnp.asarray(pad_to(sky_rows.astype(np.float32), Bp)),
+            jnp.asarray(pad_to(lens.astype(np.int32), Bp)),
+            jnp.asarray(np.maximum(pad_to(tokens[:, None], Bp), 1))))[:B, 0]
+        return np.maximum(rt.astype(np.int64), 1)
+
+    # ----------------------------------------------------------------- run --
+    def run(self, trace: Trace) -> ClusterReport:
+        cfg = self.cfg
+        self.cache = PCCCache()   # keys are indices into *this* trace's pool
+        t_wall = time.time()
+        n = len(trace)
+        cols = trace.arrays()
+        arrival = cols["arrival_s"]
+        jb_all = cols["job_index"]
+        sla_all = cols["sla"]
+        tenant_all = cols["tenant"]
+        repeat_all = trace.repeat_mask()
+        priorities = np.array([c.priority for c in trace.sla_classes])
+        sla_limits = np.array([c.slowdown_limit for c in trace.sla_classes])
+
+        # unique-query pool tensors
+        U = len(trace.jobs)
+        smax = max(len(s) for s in trace.skylines)
+        sky = np.zeros((U, smax), np.float32)
+        lens = np.zeros(U, np.int32)
+        for u, s in enumerate(trace.skylines):
+            sky[u, :len(s)] = s
+            lens[u] = len(s)
+        peaks = sky.max(axis=1).astype(np.int64)
+        defaults = np.array([j.default_tokens for j in trace.jobs], np.int64)
+        model_pool = self._pool_inputs(trace)
+
+        # exact-history oracle: the decision the policy makes from the true
+        # per-query PCC (what a fully warmed cache converges to)
+        oracle_cache = PCCCache()
+        a_ex, b_ex = oracle_cache.refine_batch(
+            np.arange(U), sky, lens, defaults, peaks)
+        oracle = np.minimum(
+            self.service.allocate_params(a_ex, b_ex,
+                                         observed_tokens=defaults).tokens,
+            cfg.capacity).astype(np.int64)
+
+        # per-query state, indexed by query id
+        tok_q = np.zeros(n, np.int64)
+        rt_q = np.zeros(n, np.int64)
+        err_q = np.zeros(n, np.float64)
+        hit_q = np.zeros(n, bool)
+        start_q = np.zeros(n, np.float64)
+        end_q = np.zeros(n, np.float64)
+
+        pool = TokenPool(cfg.capacity, cfg.max_leases)
+        metrics = ClusterMetrics(cfg.capacity, sla_limits)
+        # pending queue (columnar): query ids + sort keys + token asks
+        q_ids = np.zeros(0, np.int64)
+        next_ev = 0
+        now = 0.0
+        n_epochs = 0
+
+        while next_ev < n or q_ids.size or pool.n_active:
+            # advance: one epoch, or jump an idle gap to the next event
+            targets = []
+            if next_ev < n:
+                targets.append(arrival[next_ev])
+            if pool.n_active:
+                targets.append(pool.next_expiry())
+            now = max(now + cfg.epoch_s, min(targets) if targets else now)
+            n_epochs += 1
+
+            # 1. lease expiry (jnp kernel) -> completions -> refinement
+            done_ids, _ = pool.expire(now)
+            if done_ids.size:
+                jb = jb_all[done_ids]
+                metrics.record_completions(
+                    arrival_s=arrival[done_ids], start_s=start_q[done_ids],
+                    finish_s=end_q[done_ids], tokens=tok_q[done_ids],
+                    default_tokens=defaults[jb], runtime_s=rt_q[done_ids],
+                    ideal_runtime_s=lens[jb], sla=sla_all[done_ids],
+                    tenant=tenant_all[done_ids], cache_hit=hit_q[done_ids],
+                    repeat=repeat_all[done_ids], alloc_error=err_q[done_ids])
+                if cfg.use_cache:
+                    fresh = np.unique(jb[[u not in self.cache for u in jb]])
+                    if fresh.size:
+                        self.cache.refine_batch(fresh, sky[fresh], lens[fresh],
+                                                defaults[fresh], peaks[fresh])
+
+            # 2. arrivals in this epoch -> batched allocation decisions
+            hi = int(np.searchsorted(arrival, now, side="right"))
+            ids = np.arange(next_ev, hi)
+            next_ev = hi
+            if ids.size and q_ids.size + ids.size > cfg.max_queue:
+                keep = max(cfg.max_queue - q_ids.size, 0)
+                metrics.n_rejected += ids.size - keep
+                ids = ids[:keep]
+            if ids.size:
+                jb = jb_all[ids]
+                obs = defaults[jb]
+                tokens = np.zeros(ids.size, np.int64)
+                if cfg.use_cache:
+                    hit, a_c, b_c = self.cache.lookup(jb)
+                else:
+                    hit = np.zeros(ids.size, bool)
+                if np.any(hit):      # exact-history path: policy twin only
+                    tokens[hit] = self.service.allocate_params(
+                        a_c[hit], b_c[hit], observed_tokens=obs[hit]).tokens
+                miss = ~hit
+                if np.any(miss):     # cold path: fused model+policy executable
+                    model_in = {k: v[jb[miss]] for k, v in model_pool.items()}
+                    tokens[miss] = self.service.allocate_batch(
+                        model_in, observed_tokens=obs[miss]).tokens
+                tokens = np.minimum(tokens, cfg.capacity)
+                tok_q[ids] = tokens
+                hit_q[ids] = hit
+                err_q[ids] = (np.abs(tokens - oracle[jb])
+                              / np.maximum(oracle[jb], 1))
+                rt_q[ids] = self._true_runtimes(sky[jb], lens[jb], tokens)
+                q_ids = np.concatenate([q_ids, ids])
+
+            # 3. admission: vectorized prefix over the sorted queue
+            if q_ids.size and pool.free > 0:
+                if cfg.admission == "priority":
+                    order = np.lexsort((arrival[q_ids],
+                                        priorities[sla_all[q_ids]]))
+                else:
+                    order = np.argsort(arrival[q_ids], kind="stable")
+                q_ids = q_ids[order]
+                fits = np.cumsum(tok_q[q_ids]) <= pool.free
+                k = int(np.searchsorted(~fits, True))   # longest True prefix
+                if k:
+                    adm = q_ids[:k]
+                    q_ids = q_ids[k:]
+                    start_q[adm] = now
+                    end_q[adm] = now + rt_q[adm]
+                    pool.acquire_batch(adm, tok_q[adm], end_q[adm])
+
+            epoch_errs = err_q[ids] if ids.size else np.zeros(0)
+            metrics.sample_epoch(now, q_ids.size, pool.in_use, epoch_errs)
+
+        wall = time.time() - t_wall
+        report = metrics.report()
+        # replay rate: queries fully processed (completed or rejected) / wall
+        n_processed = report.get("n_completed", 0) + report.get("n_rejected", 0)
+        return ClusterReport(
+            metrics=report, n_events=n, n_epochs=n_epochs,
+            wall_s=round(wall, 3),
+            events_per_s=round(n_processed / max(wall, 1e-9), 1),
+            cache_stats=dict(self.cache.stats),
+            service_stats=dict(self.service.stats),
+            error_series=metrics.error_series(),
+            alloc_errors=err_q, cache_hits=hit_q, repeats=repeat_all)

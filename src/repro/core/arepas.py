@@ -34,6 +34,7 @@ __all__ = [
     "simulate_runtime",
     "simulate_runtime_jax",
     "simulate_runtime_batch",
+    "simulate_runtime_batch_jit",
     "augmentation_grid",
     "skyline_area",
     "peak_allocation",
@@ -134,7 +135,8 @@ def simulate_runtime_batch(skylines: jax.Array, valid_lens: jax.Array,
     return fn(skylines, valid_lens, allocs)
 
 
-_sim_batch_jit = jax.jit(simulate_runtime_batch)
+simulate_runtime_batch_jit = jax.jit(simulate_runtime_batch)
+_sim_batch_jit = simulate_runtime_batch_jit   # back-compat alias
 
 
 # -------------------------------------------------------- augmentation grid --

@@ -134,3 +134,13 @@ class AllocationFrontend:
                 out.update(self.step())
         out.update(self.step())
         return out
+
+    def run_cluster(self, trace, cluster_cfg=None) -> "ClusterReport":
+        """Replay a ``repro.workloads.Trace`` through this frontend's service
+        inside the trace-driven cluster simulator (``repro.cluster``): finite
+        token pool, admission control, SLA queueing, and online PCC
+        refinement, with every allocation decision going through the same
+        jitted batch path the micro-batcher uses."""
+        from repro.cluster import ClusterConfig, ClusterSimulator
+        sim = ClusterSimulator(self.service, cluster_cfg or ClusterConfig())
+        return sim.run(trace)

@@ -17,7 +17,8 @@ compiled fn), pads each group to its batch bucket, and issues one
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -80,18 +81,47 @@ class AllocationRequest:
 
 
 class MicroBatcher:
-    """Queue single-job allocation requests; drain them in padded batches."""
+    """Queue single-job allocation requests; drain them in padded batches.
 
-    def __init__(self, service, max_batch: int = 256):
+    ``max_wait_s`` bounds request latency: once the oldest queued request
+    has waited that long, ``due()`` turns true and ``poll()`` flushes even a
+    partial batch. The clock is injectable so drivers (and tests) can run on
+    simulated time; submission order is preserved within each input
+    signature across both full-batch and timeout flushes.
+    """
+
+    def __init__(self, service, max_batch: int = 256,
+                 max_wait_s: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.service = service
         self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._clock = clock
         self._queue: List[AllocationRequest] = []
+        self._oldest_t: Optional[float] = None
 
     def __len__(self) -> int:
         return len(self._queue)
 
     def submit(self, request: AllocationRequest) -> None:
+        if not self._queue:
+            self._oldest_t = self._clock()
         self._queue.append(request)
+
+    def due(self, now: Optional[float] = None) -> bool:
+        """True once the queue is full or the oldest request timed out."""
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.max_batch:
+            return True
+        if self.max_wait_s is None:
+            return False
+        now = self._clock() if now is None else now
+        return now - self._oldest_t >= self.max_wait_s
+
+    def poll(self, now: Optional[float] = None) -> Dict[int, int]:
+        """Flush if ``due()``; otherwise keep queueing and return {}."""
+        return self.flush() if self.due(now) else {}
 
     def _signature(self, req: AllocationRequest) -> Tuple:
         # graphs in the same node bucket share a compiled function

@@ -20,7 +20,7 @@ resource-consumption skyline; the generator alone fixes all ground truth.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,12 +28,19 @@ NUM_OP_TYPES = 35       # paper Table 2: 35 physical operator types
 NUM_PARTITION_TYPES = 4  # paper Table 2: 4 partition types
 MAX_TOKENS = 6287        # paper §5: peak tokens observed in the population
 
-# Per-op-type cost coefficient and selectivity (fixed "engine" truth table —
-# the module-level RNG makes it deterministic across processes).
-_rng = np.random.RandomState(20210415)
-OP_COST_COEFF = np.exp(_rng.uniform(-1.5, 1.5, NUM_OP_TYPES))
-OP_SELECTIVITY = np.clip(_rng.lognormal(-0.3, 0.6, NUM_OP_TYPES), 0.05, 2.0)
-del _rng
+_ENGINE_SEED = 20210415
+
+
+def _engine_truth_tables(seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-op-type cost coefficient and selectivity: the fixed "engine" truth
+    table, derived from an explicit seed (no module-level RNG state)."""
+    rng = np.random.RandomState(seed)
+    coeff = np.exp(rng.uniform(-1.5, 1.5, NUM_OP_TYPES))
+    selectivity = np.clip(rng.lognormal(-0.3, 0.6, NUM_OP_TYPES), 0.05, 2.0)
+    return coeff, selectivity
+
+
+OP_COST_COEFF, OP_SELECTIVITY = _engine_truth_tables(_ENGINE_SEED)
 
 
 @dataclasses.dataclass
@@ -221,9 +228,18 @@ def sample_job(job_id: int, rng: np.random.RandomState,
 
 
 def build_corpus(n_jobs: int, seed: int = 0, *, recurring_frac: float = 0.8,
-                 jobs_per_template: int = 20) -> List[Job]:
+                 jobs_per_template: int = 20,
+                 rng: Optional[np.random.Generator] = None) -> List[Job]:
     """Corpus with SCOPE-like recurrence: ``recurring_frac`` of jobs are
-    instances of a shared template pool; the rest are ad-hoc one-offs."""
+    instances of a shared template pool; the rest are ad-hoc one-offs.
+
+    All entropy comes from the single explicit ``seed`` (or, when ``rng`` —
+    a ``numpy.random.Generator`` — is given, from its stream; ``seed`` is
+    then ignored). The draw sequence itself is RandomState-based so corpora
+    stay bitwise-stable across releases for a given integer seed.
+    """
+    if rng is not None:
+        seed = int(rng.integers(2**31 - 1))
     rng = np.random.RandomState(seed)
     n_templates = max(1, int(n_jobs * recurring_frac / jobs_per_template))
     template_seeds = rng.randint(2**31 - 1, size=n_templates)
@@ -235,6 +251,163 @@ def build_corpus(n_jobs: int, seed: int = 0, *, recurring_frac: float = 0.8,
         else:
             jobs.append(sample_job(i, rng))
     return jobs
+
+
+# ----------------------------------------------------------------- tracing --
+@dataclasses.dataclass(frozen=True)
+class SLAClass:
+    """Per-tenant service class: a bound on end-to-end slowdown (queueing
+    wait + execution, relative to the query's observed production runtime)
+    and an admission priority (lower = more urgent)."""
+    name: str
+    slowdown_limit: float
+    priority: int
+
+
+DEFAULT_SLA_CLASSES: Tuple[SLAClass, ...] = (
+    SLAClass("interactive", 2.0, 0),
+    SLAClass("standard", 4.0, 1),
+    SLAClass("batch", 10.0, 2),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One query arrival in a cluster trace."""
+    query_id: int      # position in the trace
+    arrival_s: float
+    job_index: int     # index into Trace.jobs (the unique-query pool)
+    tenant: int
+    sla: int           # index into Trace.sla_classes
+
+
+@dataclasses.dataclass
+class Trace:
+    """A replayable multi-tenant query stream.
+
+    ``jobs`` is the unique-query pool; repeat queries reference the same
+    ``job_index`` (the paper's "past observed" case — the identical script
+    re-submitted). ``skylines[u]`` is the canonical observed production run
+    of pool entry ``u`` at its default allocation: the history the online
+    refinement loop replays through AREPAS.
+    """
+    events: List[TraceEvent]
+    jobs: List[Job]
+    skylines: List[np.ndarray]
+    sla_classes: Tuple[SLAClass, ...]
+    seed: int
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """Columnar view for vectorized consumption by the simulator."""
+        return {
+            "arrival_s": np.array([e.arrival_s for e in self.events]),
+            "job_index": np.array([e.job_index for e in self.events], np.int64),
+            "tenant": np.array([e.tenant for e in self.events], np.int64),
+            "sla": np.array([e.sla for e in self.events], np.int64),
+        }
+
+    def repeat_mask(self) -> np.ndarray:
+        """(n_events,) bool: query had already appeared earlier in the trace."""
+        seen: set = set()
+        out = np.zeros(len(self.events), bool)
+        for i, e in enumerate(self.events):
+            out[i] = e.job_index in seen
+            seen.add(e.job_index)
+        return out
+
+
+class TraceGenerator:
+    """Synthesize cluster traces, reproducible from one explicit seed.
+
+    All randomness flows from ``np.random.SeedSequence(seed)`` through
+    spawned ``numpy.random.Generator`` children (pool / arrivals / popularity
+    / tenancy) — no module-level or global RNG state anywhere.
+
+      * arrivals: Markov-modulated Poisson — a calm state at ``rate_qps`` and
+        a burst state at ``rate_qps * burst_factor``, switching with
+        probabilities ``p_burst`` / ``p_calm`` per event;
+      * repeats: query identity drawn from a Zipf-like power law over the
+        unique pool (production SCOPE traffic is dominated by recurring
+        scripts), so a small head of queries repeats heavily;
+      * tenancy: each unique query belongs to one tenant; tenants are spread
+        round-robin over the SLA classes.
+    """
+
+    def __init__(self, seed: int = 0, *, n_unique: int = 256,
+                 n_tenants: int = 8, zipf_exponent: float = 1.2,
+                 rate_qps: float = 0.5, burst_factor: float = 4.0,
+                 p_burst: float = 0.05, p_calm: float = 0.25,
+                 sla_classes: Tuple[SLAClass, ...] = DEFAULT_SLA_CLASSES,
+                 max_skyline_s: int = 16384):
+        assert n_unique >= 1 and n_tenants >= 1 and rate_qps > 0
+        self.seed = seed
+        self.n_unique = n_unique
+        self.n_tenants = n_tenants
+        self.zipf_exponent = zipf_exponent
+        self.rate_qps = rate_qps
+        self.burst_factor = burst_factor
+        self.p_burst = p_burst
+        self.p_calm = p_calm
+        self.sla_classes = tuple(sla_classes)
+        self.max_skyline_s = max_skyline_s
+        self._children = np.random.SeedSequence(seed).spawn(5)
+
+    def _gen(self, i: int) -> np.random.Generator:
+        return np.random.default_rng(self._children[i])
+
+    def _build_pool(self) -> Tuple[List[Job], List[np.ndarray]]:
+        """Unique-query pool + canonical observed skylines (bounded length)."""
+        from repro.workloads.executor import observed_skyline  # no import cycle
+        g = self._gen(0)
+        jobs: List[Job] = []
+        skylines: List[np.ndarray] = []
+        for u in range(self.n_unique):
+            for _ in range(32):  # resample pathologically long-running jobs
+                rng = np.random.RandomState(int(g.integers(2**31 - 1)))
+                job = sample_job(u, rng)
+                sky = observed_skyline(job)
+                if len(sky) <= self.max_skyline_s:
+                    break
+            jobs.append(job)
+            skylines.append(sky)
+        return jobs, skylines
+
+    def _arrival_times(self, n: int) -> np.ndarray:
+        g = self._gen(1)
+        gaps = np.empty(n)
+        burst = False
+        for i in range(n):
+            rate = self.rate_qps * (self.burst_factor if burst else 1.0)
+            gaps[i] = g.exponential(1.0 / rate)
+            burst = (g.random() < self.p_burst if not burst
+                     else g.random() >= self.p_calm)
+        return np.cumsum(gaps)
+
+    def _popularity(self) -> np.ndarray:
+        """Zipf weights over the pool, rank order shuffled."""
+        g = self._gen(2)
+        ranks = g.permutation(self.n_unique)
+        p = (1.0 + ranks) ** -self.zipf_exponent
+        return p / p.sum()
+
+    def generate(self, n_events: int) -> Trace:
+        jobs, skylines = self._build_pool()
+        arrivals = self._arrival_times(n_events)
+        g_pick, g_tenant = self._gen(3), self._gen(4)
+        picks = g_pick.choice(self.n_unique, size=n_events,
+                              p=self._popularity())
+        tenant_of_job = g_tenant.integers(self.n_tenants, size=self.n_unique)
+        sla_of_tenant = np.arange(self.n_tenants) % len(self.sla_classes)
+        events = [TraceEvent(query_id=i, arrival_s=float(arrivals[i]),
+                             job_index=int(picks[i]),
+                             tenant=int(tenant_of_job[picks[i]]),
+                             sla=int(sla_of_tenant[tenant_of_job[picks[i]]]))
+                  for i in range(n_events)]
+        return Trace(events=events, jobs=jobs, skylines=skylines,
+                     sla_classes=self.sla_classes, seed=self.seed)
 
 
 def population_stats(jobs: Sequence[Job]) -> dict:

@@ -1,0 +1,127 @@
+"""serve/batching.py edge cases: empty flush, requests beyond the biggest
+bucket, and flush-on-timeout ordering (satellites of the cluster PR).
+
+A stub service keeps these tests pure MicroBatcher-logic tests — no model
+training; the stub echoes a per-row fingerprint so routing and ordering are
+verifiable exactly.
+"""
+import numpy as np
+
+from repro.core.allocator import AllocationPolicy
+from repro.serve import AllocationRequest, MicroBatcher
+from repro.serve.batching import node_bucket, pad_to
+from repro.serve.service import AllocationResult
+
+
+class StubService:
+    """Echoes each row's feature sum as its token decision."""
+
+    def __init__(self):
+        self.policy = AllocationPolicy()
+        self.batch_sizes = []
+
+    def allocate_batch(self, model_in, observed_tokens=None):
+        feats = model_in["features"]
+        B = feats.shape[0]
+        self.batch_sizes.append(B)
+        toks = feats.reshape(B, -1).sum(axis=1).astype(np.int64)
+        one = np.ones(B)
+        return AllocationResult(tokens=toks, a=one, b=one, runtime=one)
+
+
+def _req(i, value, n_feat=4):
+    return AllocationRequest(request_id=i,
+                             model_in={"features": np.full(n_feat, value,
+                                                           np.float64)})
+
+
+# -------------------------------------------------------------- empty flush --
+def test_empty_flush_is_noop():
+    svc = StubService()
+    mb = MicroBatcher(svc)
+    assert mb.flush() == {}
+    assert svc.batch_sizes == []        # no service call for an empty queue
+    assert len(mb) == 0 and not mb.due()
+
+
+# ------------------------------------------- bigger than the biggest bucket --
+def test_flush_beyond_max_batch_chunks_and_keeps_all_requests():
+    svc = StubService()
+    mb = MicroBatcher(svc, max_batch=16)
+    n = 53                               # > 3 full chunks
+    for i in range(n):
+        mb.submit(_req(i, value=i))
+    out = mb.flush()
+    assert len(mb) == 0
+    assert set(out) == set(range(n))
+    assert all(out[i] == i * 4 for i in range(n))     # right answer per row
+    assert svc.batch_sizes == [16, 16, 16, 5]         # chunked, none dropped
+
+
+def test_graph_request_larger_than_any_previous_bucket():
+    """A plan graph bigger than every bucket seen so far must still route:
+    it lands in its own (larger) node bucket, padded mask-safely."""
+    svc = StubService()
+    mb = MicroBatcher(svc)
+    small = AllocationRequest(
+        request_id=0, model_in={"features": np.ones((3, 2)),
+                                "adj": np.eye(3), "mask": np.ones(3)})
+    huge = AllocationRequest(
+        request_id=1, model_in={"features": np.ones((35, 2)),
+                                "adj": np.eye(35), "mask": np.ones(35)})
+    mb.submit(small)
+    mb.submit(huge)
+    out = mb.flush()
+    # separate node buckets -> separate service calls, both answered
+    assert set(out) == {0, 1}
+    assert svc.batch_sizes == [1, 1]
+    assert out[0] == 3 * 2              # features zero-padded 3 -> 8 nodes
+    assert out[1] == 35 * 2             # padded 35 -> 64 nodes
+    assert node_bucket(35) == 64
+
+
+def test_pad_to_noop_and_refuses_shrink():
+    x = np.ones((8, 2))
+    assert pad_to(x, 8) is x
+    try:
+        pad_to(x, 4)
+        assert False, "expected an assertion on shrink"
+    except AssertionError:
+        pass
+
+
+# ---------------------------------------------------- flush-on-timeout order --
+def test_flush_on_timeout_ordering():
+    svc = StubService()
+    clock = [0.0]
+    mb = MicroBatcher(svc, max_batch=64, max_wait_s=5.0,
+                      clock=lambda: clock[0])
+    mb.submit(_req(10, value=1))
+    clock[0] = 3.0
+    mb.submit(_req(11, value=2))
+    assert not mb.due()                  # oldest has waited 3s < 5s
+    assert mb.poll() == {} and len(mb) == 2
+    clock[0] = 5.0                       # oldest hits the deadline
+    assert mb.due()
+    out = mb.poll()
+    assert list(out) == [10, 11]         # submission order preserved
+    assert out == {10: 4, 11: 8}
+    assert len(mb) == 0 and svc.batch_sizes == [2]
+
+    # the timer restarts with the next submission, not the old epoch
+    mb.submit(_req(12, value=3))
+    assert not mb.due()
+    clock[0] = 9.9
+    assert not mb.due()
+    clock[0] = 10.0
+    assert mb.poll() == {12: 12}
+
+
+def test_full_queue_is_due_without_timeout():
+    svc = StubService()
+    mb = MicroBatcher(svc, max_batch=2, max_wait_s=1000.0, clock=lambda: 0.0)
+    mb.submit(_req(0, value=1))
+    assert not mb.due()
+    mb.submit(_req(1, value=1))
+    assert mb.due()                      # full batch flushes immediately
+    assert set(mb.poll()) == {0, 1}

@@ -1,0 +1,224 @@
+"""Cluster layer: trace generation, token pool, PCC cache refinement, and
+the trace-driven simulator (repro.cluster)."""
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    ClusterConfig,
+    ClusterSimulator,
+    PCCCache,
+    TokenPool,
+)
+from repro.core.allocator import AllocationPolicy
+from repro.core.arepas import simulate_runtime
+from repro.core.dataset import PCC_FRACTIONS
+from repro.core.models import NNConfig
+from repro.core.pcc import fit_pcc
+from repro.core.pipeline import TasqConfig, TasqPipeline
+from repro.launch.serve import AllocationFrontend
+from repro.serve import AllocationService
+from repro.workloads import TraceGenerator, build_corpus
+
+
+# ------------------------------------------------------------------- traces --
+def test_build_corpus_threads_generator_seeds():
+    a = build_corpus(10, rng=np.random.default_rng(123))
+    b = build_corpus(10, rng=np.random.default_rng(123))
+    c = build_corpus(10, rng=np.random.default_rng(124))
+    for ja, jb in zip(a, b):
+        assert ja.default_tokens == jb.default_tokens
+        assert [s.num_tasks for s in ja.stages] == \
+            [s.num_tasks for s in jb.stages]
+    assert any(ja.default_tokens != jc.default_tokens
+               or len(ja.operators) != len(jc.operators)
+               for ja, jc in zip(a, c))
+
+
+
+def test_trace_reproducible_from_single_seed():
+    t1 = TraceGenerator(seed=5, n_unique=16, rate_qps=2.0).generate(300)
+    t2 = TraceGenerator(seed=5, n_unique=16, rate_qps=2.0).generate(300)
+    a1, a2 = t1.arrays(), t2.arrays()
+    for k in a1:
+        np.testing.assert_array_equal(a1[k], a2[k])
+    for s1, s2 in zip(t1.skylines, t2.skylines):
+        np.testing.assert_array_equal(s1, s2)
+    t3 = TraceGenerator(seed=6, n_unique=16, rate_qps=2.0).generate(300)
+    assert not np.array_equal(a1["job_index"], t3.arrays()["job_index"])
+
+
+def test_trace_zipf_repeats_are_head_heavy():
+    trace = TraceGenerator(seed=1, n_unique=40, rate_qps=2.0).generate(1000)
+    counts = np.bincount(trace.arrays()["job_index"], minlength=40)
+    uniform = 1000 / 40
+    assert counts.max() > 3 * uniform          # a hot head of repeat queries
+    assert np.mean(trace.repeat_mask()) > 0.5  # repeat-heavy traffic
+
+
+def test_trace_tenancy_and_sla_consistent():
+    trace = TraceGenerator(seed=2, n_unique=24, n_tenants=5,
+                           rate_qps=2.0).generate(500)
+    cols = trace.arrays()
+    for u in np.unique(cols["job_index"]):
+        m = cols["job_index"] == u
+        assert len(np.unique(cols["tenant"][m])) == 1   # query owned by tenant
+    for t in np.unique(cols["tenant"]):
+        m = cols["tenant"] == t
+        assert len(np.unique(cols["sla"][m])) == 1      # tenant has one class
+    assert np.all(cols["sla"] < len(trace.sla_classes))
+
+
+def test_trace_arrivals_sorted_and_bursty():
+    gen = TraceGenerator(seed=3, n_unique=8, rate_qps=2.0, burst_factor=8.0)
+    arr = gen.generate(2000).arrays()["arrival_s"]
+    gaps = np.diff(arr)
+    assert np.all(gaps >= 0) and arr[0] > 0
+    # burst state compresses inter-arrivals: heavier-than-exponential spread
+    assert np.std(gaps) > np.mean(gaps)
+
+
+# --------------------------------------------------------------------- pool --
+def test_token_pool_lease_cycle():
+    pool = TokenPool(capacity=100, max_leases=8)
+    pool.acquire_batch(np.array([1, 2, 3]), np.array([40, 30, 20]),
+                       np.array([10.0, 20.0, 30.0]))
+    assert pool.free == 10 and pool.n_active == 3
+    assert pool.next_expiry() == 10.0
+    qids, toks = pool.expire(15.0)
+    assert list(qids) == [1] and list(toks) == [40]
+    assert pool.free == 50
+    qids, _ = pool.expire(100.0)
+    assert sorted(qids.tolist()) == [2, 3]
+    assert pool.free == 100 and pool.n_active == 0
+    with pytest.raises(AssertionError):        # over-commit is a bug
+        pool.acquire_batch(np.array([9]), np.array([101]), np.array([1.0]))
+
+
+# -------------------------------------------------------------------- cache --
+def test_pcc_cache_refinement_matches_scalar_fit():
+    trace = TraceGenerator(seed=9, n_unique=4, rate_qps=2.0).generate(4)
+    u = 0
+    sky = trace.skylines[u]
+    job = trace.jobs[u]
+    peak = int(sky.max())
+    cache = PCCCache()
+    assert u not in cache
+    smax = len(sky)
+    a, b = cache.refine_batch(
+        np.array([u]), sky[None, :].astype(np.float32),
+        np.array([smax], np.int32), np.array([job.default_tokens]),
+        np.array([peak]))
+    assert u in cache and len(cache) == 1
+    # scalar oracle: same grid, numpy AREPAS, scalar log-log fit
+    allocs = np.maximum(1, np.round(np.asarray(
+        sorted(PCC_FRACTIONS, reverse=True)) * job.default_tokens)
+        ).astype(np.int64)
+    rts = np.array([len(sky) if al >= peak else simulate_runtime(sky, al)
+                    for al in allocs])
+    a_ref, b_ref = fit_pcc(allocs, np.maximum(rts, 1))
+    assert a[0] == pytest.approx(min(a_ref, -1e-4), rel=1e-9)
+    assert b[0] == pytest.approx(b_ref, rel=1e-9)
+    hit, a_l, b_l = cache.lookup(np.array([u, 3]))
+    assert hit.tolist() == [True, False]
+    assert a_l[0] == a[0] and b_l[0] == b[0]
+
+
+# ---------------------------------------------------------------- simulator --
+@pytest.fixture(scope="module")
+def service():
+    cfg = TasqConfig(n_train=160, n_eval=40, nn=NNConfig(epochs=8))
+    p = TasqPipeline(cfg).build()
+    p.train_nn("lf2")
+    return AllocationService(p.models["nn:lf2"],
+                             AllocationPolicy(max_slowdown=0.05))
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return TraceGenerator(seed=33, n_unique=40, rate_qps=1.0).generate(800)
+
+
+def test_simulator_end_to_end(service, trace):
+    calls_before = service.stats["calls"]
+    queries_before = service.stats["queries"]
+    sim = ClusterSimulator(service, ClusterConfig(capacity=16384))
+    rep = sim.run(trace)
+    m = rep.metrics
+    assert m["n_completed"] + m["n_rejected"] == len(trace)
+    assert 0 < m["utilization"] <= 1.0
+    assert 1.0 <= m["p50_slowdown"] <= m["p99_slowdown"]
+    assert 0 <= m["sla_violation_rate"] <= 1
+    assert m["cost_token_s"] > 0 and m["cost_saving_frac"] < 1
+    assert rep.events_per_s > 0
+    t, err = rep.error_series
+    assert t.size == rep.n_epochs == err.size
+    # every decision went through the batched service path: far fewer
+    # compiled-batch calls than queries (no per-query fallback)
+    n_calls = service.stats["calls"] - calls_before
+    n_served = service.stats["queries"] - queries_before
+    assert n_served >= len(trace)
+    assert n_calls < len(trace) / 2
+
+
+def test_cache_path_beats_cold_model_on_repeats(service, trace):
+    assert np.mean(trace.repeat_mask()) > 0.5
+    cold = ClusterSimulator(
+        service, ClusterConfig(capacity=16384, use_cache=False)).run(trace)
+    warm = ClusterSimulator(
+        service, ClusterConfig(capacity=16384, use_cache=True)).run(trace)
+    assert warm.metrics["cache_hit_rate"] > 0.2
+    assert warm.cache_stats["refined"] > 0
+    # the paper's distinction under load: repeat queries served from exact
+    # history must beat the model's generalization, strictly
+    rep_mask = warm.repeats
+    err_warm = float(np.mean(warm.alloc_errors[rep_mask]))
+    err_cold = float(np.mean(cold.alloc_errors[rep_mask]))
+    assert err_cold > 0
+    assert err_warm < err_cold
+    # within the warm run: cache-hit decisions are exact, model ones are not
+    assert warm.metrics["alloc_error_cache"] < warm.metrics["alloc_error_model"]
+    assert warm.metrics["alloc_error_cache"] == pytest.approx(0.0, abs=1e-12)
+    # online convergence: late-trace decisions beat early-trace decisions
+    t, err = warm.error_series
+    ok = ~np.isnan(err)
+    half = ok.sum() // 2
+    early = np.nanmean(err[ok][:half])
+    late = np.nanmean(err[ok][half:])
+    assert late < early
+
+
+def test_priority_vs_fifo_admission(service, trace):
+    pri = ClusterSimulator(service, ClusterConfig(
+        capacity=4096, admission="priority")).run(trace)
+    fifo = ClusterSimulator(service, ClusterConfig(
+        capacity=4096, admission="fifo")).run(trace)
+    for rep in (pri, fifo):
+        assert rep.metrics["n_completed"] + rep.metrics["n_rejected"] \
+            == len(trace)
+        assert rep.metrics["mean_queue_depth"] > 0   # contention present
+    # priority admission must favor the urgent class over the batch class
+    assert (pri.metrics["mean_wait_s_class0"]
+            < pri.metrics["mean_wait_s_class2"])
+    # ... and serve the urgent class no worse than plain FIFO does
+    assert (pri.metrics["mean_wait_s_class0"]
+            <= fifo.metrics["mean_wait_s_class0"])
+
+
+def test_frontend_wires_into_simulator(service):
+    small = TraceGenerator(seed=44, n_unique=12, rate_qps=1.0).generate(120)
+    fe = AllocationFrontend(service)
+    rep = fe.run_cluster(small, ClusterConfig(capacity=16384))
+    assert rep.metrics["n_completed"] == len(small)
+    assert "sla_violation_rate" in rep.metrics
+
+
+def test_simulator_replays_10k_trace(service):
+    """Acceptance: a >=10k-query trace end to end, reporting events/sec."""
+    trace = TraceGenerator(seed=7, n_unique=48, rate_qps=2.0).generate(10_000)
+    rep = ClusterSimulator(service, ClusterConfig(capacity=32768)).run(trace)
+    m = rep.metrics
+    assert m["n_completed"] + m["n_rejected"] == 10_000
+    assert rep.events_per_s > 0
+    for key in ("cost_token_s", "utilization", "p50_slowdown", "p99_slowdown",
+                "sla_violation_rate", "mean_queue_depth"):
+        assert key in m

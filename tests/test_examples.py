@@ -32,6 +32,12 @@ def test_serve_lm():
     assert "req 0" in out
 
 
+def test_cluster_sim():
+    out = _run("cluster_sim.py", "--events", "400", "--n-train", "120",
+               "--n-unique", "32")
+    assert "queries in" in out and "cache path" in out
+
+
 def test_train_lm_short():
     out = _run("train_lm.py", "--steps", "6", "--seq-len", "32",
                "--global-batch", "2", "--ckpt-dir", "/tmp/tlm_test_ckpt")
