@@ -9,6 +9,8 @@
   table8   model accuracy on the re-executed ground-truth subset (§5.4)
   serve_alloc  batched AllocationService throughput vs the per-job loop path
   cluster_sim  trace-driven cluster simulator with online PCC refinement
+  edf_cluster  scheduler shoot-out: priority/fixed vs EDF + elastic repricing
+               (10k-query replay per policy: events/sec, total cost, SLA)
 
 Prints human-readable tables + "name,metric,value" CSV lines, and writes
 results/benchmarks.json for EXPERIMENTS.md. ``--json out.json`` additionally
@@ -358,8 +360,55 @@ def bench_cluster_sim(scale: float, pipeline: TasqPipeline) -> None:
     _emit("cluster_sim", out, items=n_events)
 
 
+# -------------------------------------------------------------- edf_cluster --
+def bench_edf_cluster(scale: float, pipeline: TasqPipeline) -> None:
+    """Scheduler shoot-out on one bursty trace: PR 2's priority/fixed
+    admission vs. EDF-over-slack admission with elastic lease resizing and
+    per-SLA-class repricing. The acceptance bar: EDF + elastic repricing
+    cuts total token-cost >= 15% at equal-or-fewer SLA violations, with
+    replay throughput within 2x of the fixed-capacity sim."""
+    assert "nn:lf2" in pipeline.models, \
+        "main() must pre-train nn:lf2 outside the timed window"
+    n_events = int(10_000 * scale)
+    gen = TraceGenerator(seed=71, n_unique=max(32, int(256 * scale)))
+    trace = gen.generate(n_events)
+    service = AllocationService(pipeline.models["nn:lf2"],
+                                AllocationPolicy(max_slowdown=0.05))
+    reports = {}
+    for name, cfg in (
+            ("priority_fixed", ClusterConfig()),
+            ("edf_elastic", ClusterConfig(admission="edf", elastic=True,
+                                          pricing="elastic"))):
+        reports[name] = ClusterSimulator(service, cfg).run(trace)
+        print(f"[edf_cluster:{name}] {reports[name].summary()}")
+    base_m = reports["priority_fixed"].metrics
+    edf_m = reports["edf_elastic"].metrics
+    out = {"n_events": n_events}
+    for name, rep in reports.items():
+        m = rep.metrics
+        out[f"{name}_events_per_s"] = rep.events_per_s
+        out[f"{name}_cost_token_s"] = m["cost_token_s"]
+        out[f"{name}_sla_violation_rate"] = m.get("sla_violation_rate")
+        out[f"{name}_p99_slowdown"] = m["p99_slowdown"]
+    out["cost_reduction_frac"] = round(
+        1.0 - edf_m["cost_token_s"] / max(base_m["cost_token_s"], 1e-9), 4)
+    out["violations_no_worse"] = bool(
+        edf_m.get("sla_violation_rate", 0) <= base_m.get(
+            "sla_violation_rate", 0))
+    out["events_per_s_ratio"] = round(
+        reports["priority_fixed"].events_per_s
+        / max(reports["edf_elastic"].events_per_s, 1e-9), 2)
+    out["mean_price"] = edf_m.get("mean_price")
+    out["resize_shrinks"] = edf_m.get("resize_shrinks", 0)
+    out["resize_grows"] = edf_m.get("resize_grows", 0)
+    print(f"[edf_cluster] cost cut {out['cost_reduction_frac']:.1%}, "
+          f"violations_no_worse={out['violations_no_worse']}, "
+          f"ev/s ratio {out['events_per_s_ratio']}x")
+    _emit("edf_cluster", out, items=2 * n_events)
+
+
 ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8",
-       "serve_alloc", "cluster_sim")
+       "serve_alloc", "cluster_sim", "edf_cluster")
 
 
 def main() -> None:
@@ -375,7 +424,8 @@ def main() -> None:
 
     t_start = time.time()
     pipeline = None
-    if only & {"tables456", "table7", "table8", "serve_alloc", "cluster_sim"}:
+    if only & {"tables456", "table7", "table8", "serve_alloc", "cluster_sim",
+               "edf_cluster"}:
         cfg = TasqConfig(n_train=int(1200 * args.scale),
                          n_eval=int(600 * args.scale),
                          nn=NNConfig(epochs=60),
@@ -384,7 +434,7 @@ def main() -> None:
               f"(train={cfg.n_train}, eval={cfg.n_eval})")
         pipeline = TasqPipeline(cfg).build()
         pipeline.train_xgb()
-        if only & {"serve_alloc", "cluster_sim"}:
+        if only & {"serve_alloc", "cluster_sim", "edf_cluster"}:
             # train outside the timed windows: their wall/throughput rows
             # must measure serving/replay, not model training
             pipeline.train_nn("lf2")
@@ -407,6 +457,8 @@ def main() -> None:
         _run_bench("serve_alloc", bench_serve_alloc, args.scale, pipeline)
     if "cluster_sim" in only:
         _run_bench("cluster_sim", bench_cluster_sim, args.scale, pipeline)
+    if "edf_cluster" in only:
+        _run_bench("edf_cluster", bench_edf_cluster, args.scale, pipeline)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

@@ -7,9 +7,15 @@ serving stack, end to end.
      token pool with priority admission (repro.cluster),
   4. watch the online PCC refinement loop: repeat queries graduate from the
      learned model to their exact-history PCCCache entry, and the
-     allocation error vs the exact-PCC oracle collapses.
+     allocation error vs the exact-PCC oracle collapses,
+  5. optionally switch the scheduler: --admission edf --elastic
+     --pricing elastic replays the same trace under deadline-aware EDF
+     admission with lease resizing and per-SLA-class repricing, and prints
+     the cost / SLA delta vs. the priority/fixed baseline.
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py [--events 3000]
+      PYTHONPATH=src python examples/cluster_sim.py --admission edf \
+          --elastic --pricing elastic
 """
 import argparse
 
@@ -29,6 +35,12 @@ def main() -> None:
     ap.add_argument("--events", type=int, default=3000)
     ap.add_argument("--n-train", type=int, default=300)
     ap.add_argument("--n-unique", type=int, default=96)
+    ap.add_argument("--admission", default="priority",
+                    choices=("fifo", "priority", "edf"))
+    ap.add_argument("--elastic", action="store_true",
+                    help="resize running leases under pressure / idleness")
+    ap.add_argument("--pricing", default="fixed",
+                    choices=("fixed", "elastic"))
     args = ap.parse_args()
 
     print("training the cold-path PCC model ...")
@@ -46,10 +58,22 @@ def main() -> None:
     service = AllocationService(pipe.models["nn:lf2"],
                                 AllocationPolicy(max_slowdown=0.05))
     frontend = AllocationFrontend(service)
-    report = frontend.run_cluster(trace, ClusterConfig(capacity=8192))
+    report = frontend.run_cluster(
+        trace, ClusterConfig(capacity=8192), admission=args.admission,
+        elastic=args.elastic, pricing=args.pricing)
 
     print(f"\n{report.summary()}")
     m = report.metrics
+    if args.admission != "priority" or args.elastic or args.pricing != "fixed":
+        base = frontend.run_cluster(trace, ClusterConfig(capacity=8192))
+        bm = base.metrics
+        print(f"  vs priority/fixed baseline: "
+              f"cost cut {1 - m['cost_token_s']/bm['cost_token_s']:.1%}, "
+              f"SLA violations {bm['sla_violation_rate']:.1%} -> "
+              f"{m['sla_violation_rate']:.1%}, "
+              f"mean price {m.get('mean_price', 1.0):.2f}, "
+              f"resizes {m.get('resize_shrinks', 0)} shrink / "
+              f"{m.get('resize_grows', 0)} grow")
     print(f"  allocation error vs exact-PCC oracle: "
           f"model path {m.get('alloc_error_model', 0):.2f}, "
           f"cache path {m.get('alloc_error_cache', 0):.2f}")

@@ -4,15 +4,28 @@ refinement.
 ``ClusterSimulator`` replays a ``repro.workloads.Trace`` (bursty arrivals,
 Zipf-repeated queries, per-tenant SLA classes) through a batched
 ``AllocationService`` against a finite ``TokenPool`` with admission control
-and FIFO/priority queueing. Completed queries are AREPAS-refined into a
-``PCCCache`` — the paper's "past observed" path — so repeat traffic bypasses
-the learned model; ``ClusterMetrics`` tracks cost, utilization, p50/p99
-slowdown, SLA violations, queue depth, and model-vs-history allocation
-error over time.
+and pluggable queueing (``scheduler``: fifo / priority / EDF over SLA
+slack), elastic lease resizing (AREPAS re-simulation of running queries'
+remaining work under pool pressure or idleness), and a per-SLA-class price
+signal that slides pressured classes to the cost-optimal point of their
+PCC. Completed queries are AREPAS-refined into a ``PCCCache`` — the paper's
+"past observed" path — so repeat traffic bypasses the learned model;
+``ClusterMetrics`` tracks cost (exact across resizes), utilization, p50/p99
+slowdown, SLA violations, deadline slack, queue depth, and
+model-vs-history allocation error over time.
 """
 from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.pcc_cache import PCCCache
 from repro.cluster.pool import TokenPool
+from repro.cluster.scheduler import (
+    EdfPolicy,
+    FifoPolicy,
+    PriceSignal,
+    PriorityPolicy,
+    QueueView,
+    SchedulerPolicy,
+    make_policy,
+)
 from repro.cluster.simulator import ClusterConfig, ClusterReport, ClusterSimulator
 
 __all__ = [
@@ -20,6 +33,13 @@ __all__ = [
     "ClusterMetrics",
     "ClusterReport",
     "ClusterSimulator",
+    "EdfPolicy",
+    "FifoPolicy",
     "PCCCache",
+    "PriceSignal",
+    "PriorityPolicy",
+    "QueueView",
+    "SchedulerPolicy",
     "TokenPool",
+    "make_policy",
 ]

@@ -5,6 +5,13 @@ plus per-epoch samples of queue depth and pool occupancy. ``report()``
 aggregates the headline numbers; ``error_series()`` exposes the
 model-vs-history allocation error over trace time, the quantity the online
 refinement loop is supposed to drive toward zero as traffic repeats.
+
+Scheduler-layer accounting (PR 3): completions carry an accrued
+``cost_token_s`` (exact under lease resizing, == tokens * runtime without
+it), the decision-time ``price``, and the ``slack_s`` left at finish;
+``record_resizes`` accumulates shrink/grow counts and reclaimed/granted
+tokens; ``report()`` adds per-class cost and slack aggregates and
+``slack_histogram()`` exposes the finish-slack distribution.
 """
 from __future__ import annotations
 
@@ -31,6 +38,9 @@ class _Columns:
     cache_hit: List[bool] = dataclasses.field(default_factory=list)
     repeat: List[bool] = dataclasses.field(default_factory=list)
     alloc_error: List[float] = dataclasses.field(default_factory=list)
+    cost_token_s: List[float] = dataclasses.field(default_factory=list)
+    price: List[float] = dataclasses.field(default_factory=list)
+    slack_s: List[float] = dataclasses.field(default_factory=list)
 
 
 class ClusterMetrics:
@@ -47,13 +57,43 @@ class ClusterMetrics:
         self._epoch_in_use: List[int] = []
         self._epoch_alloc_err: List[float] = []
         self.n_rejected = 0
+        self.n_shrunk = 0
+        self.n_grown = 0
+        self.tokens_reclaimed = 0
+        self.tokens_granted = 0
 
     # ----------------------------------------------------------- recording --
+    def record_resizes(self, *, shrunk: int = 0, grown: int = 0,
+                       reclaimed: int = 0, granted: int = 0) -> None:
+        """Accumulate one epoch's lease-resize activity."""
+        self.n_shrunk += int(shrunk)
+        self.n_grown += int(grown)
+        self.tokens_reclaimed += int(reclaimed)
+        self.tokens_granted += int(granted)
+
     def record_completions(self, *, arrival_s, start_s, finish_s, tokens,
                            default_tokens, runtime_s, ideal_runtime_s, sla,
-                           tenant, cache_hit, repeat, alloc_error) -> None:
-        """Append a batch of completed queries (parallel arrays)."""
+                           tenant, cache_hit, repeat, alloc_error,
+                           cost_token_s=None, price=None,
+                           slack_s=None) -> None:
+        """Append a batch of completed queries (parallel arrays).
+
+        ``cost_token_s`` defaults to tokens * runtime (exact when leases are
+        never resized); ``price`` defaults to 1 (fixed pricing); ``slack_s``
+        defaults to +inf (no deadline).
+        """
         c = self._q
+        n = np.asarray(arrival_s).size
+        if cost_token_s is None:
+            cost_token_s = (np.asarray(tokens, np.float64)
+                            * np.asarray(runtime_s, np.float64))
+        if price is None:
+            price = np.ones(n)
+        if slack_s is None:
+            slack_s = np.full(n, np.inf)
+        c.cost_token_s.extend(np.asarray(cost_token_s, np.float64).tolist())
+        c.price.extend(np.asarray(price, np.float64).tolist())
+        c.slack_s.extend(np.asarray(slack_s, np.float64).tolist())
         c.arrival_s.extend(np.asarray(arrival_s, np.float64).tolist())
         c.start_s.extend(np.asarray(start_s, np.float64).tolist())
         c.finish_s.extend(np.asarray(finish_s, np.float64).tolist())
@@ -99,13 +139,23 @@ class ClusterMetrics:
         return (np.asarray(self._epoch_t),
                 np.asarray(self._epoch_alloc_err))
 
+    def slack_histogram(self, bins: int = 20) -> Tuple[np.ndarray, np.ndarray]:
+        """(bin edges, counts) over finite finish slacks — negative bins are
+        deadline misses, the area the scheduler is trying to shrink."""
+        s = np.asarray(self._q.slack_s, np.float64)
+        s = s[np.isfinite(s)]
+        if s.size == 0:
+            return np.zeros(bins + 1), np.zeros(bins, np.int64)
+        counts, edges = np.histogram(s, bins=bins)
+        return edges, counts
+
     def report(self) -> Dict[str, float]:
         d = self._cols()
         n = int(d["arrival_s"].size)
         if n == 0:
             return {"n_completed": 0}
         makespan = float(np.max(d["finish_s"]))
-        cost = float(np.sum(d["tokens"] * d["runtime_s"]))
+        cost = float(np.sum(d["cost_token_s"]))
         default_cost = float(np.sum(d["default_tokens"]
                                     * d["ideal_runtime_s"]))
         slow = self.slowdowns()
@@ -129,6 +179,20 @@ class ClusterMetrics:
         }
         wait = d["start_s"] - d["arrival_s"]
         out["mean_wait_s"] = round(float(np.mean(wait)), 2)
+        out["mean_price"] = round(float(np.mean(d["price"])), 4)
+        if self.n_shrunk or self.n_grown:
+            out["resize_shrinks"] = self.n_shrunk
+            out["resize_grows"] = self.n_grown
+            out["tokens_reclaimed"] = self.tokens_reclaimed
+            out["tokens_granted"] = self.tokens_granted
+        slack = d["slack_s"]
+        finite = np.isfinite(slack)
+        if np.any(finite):
+            out["mean_slack_s"] = round(float(np.mean(slack[finite])), 2)
+            out["p10_slack_s"] = round(
+                float(np.percentile(slack[finite], 10)), 2)
+            out["deadline_miss_rate"] = round(
+                float(np.mean(slack[finite] < 0)), 4)
         if self.sla_limits is not None:
             limits = self.sla_limits[d["sla"]]
             viol = slow > limits
@@ -139,6 +203,10 @@ class ClusterMetrics:
                     float(np.mean(viol[m])), 4)
                 out[f"mean_wait_s_class{int(cls)}"] = round(
                     float(np.mean(wait[m])), 2)
+                out[f"cost_token_s_class{int(cls)}"] = round(
+                    float(np.sum(d["cost_token_s"][m])), 1)
+                out[f"mean_price_class{int(cls)}"] = round(
+                    float(np.mean(d["price"][m])), 4)
         # the tentpole comparison: exact-history path vs cold-model path
         for name, mask in (("cache", d["cache_hit"]),
                            ("model", ~d["cache_hit"]),

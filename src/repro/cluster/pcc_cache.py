@@ -11,10 +11,17 @@ Refinement is fully batched: completed skylines are padded into one
 jitted ``simulate_runtime_batch`` call, and the grid is fitted with the
 vectorized float64 ``fit_pcc_batch_np`` — the same math the training set
 uses (``core/dataset.py``), so a cache entry is the exact-history fit.
+
+Staleness: recurring templates drift (the same script over a fresh, larger
+day of data). Each entry remembers the skyline area (total work) it was
+fitted from; a lookup that passes the query's *current* area demotes an
+entry whose cached area drifted beyond ``drift_tol`` to a miss and evicts
+it, so the completion path refits the curve instead of serving the stale
+one. ``max_entries`` bounds the table with LRU eviction.
 """
 from __future__ import annotations
 
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,28 +37,92 @@ __all__ = ["PCCCache"]
 class PCCCache:
     """Exact per-query PCC parameters keyed by unique-query id."""
 
-    def __init__(self, fractions: Sequence[float] = PCC_FRACTIONS):
+    def __init__(self, fractions: Sequence[float] = PCC_FRACTIONS,
+                 max_entries: Optional[int] = None,
+                 drift_tol: float = 0.25):
         self.fractions = np.asarray(sorted(fractions, reverse=True),
                                     np.float64)
         assert np.all(self.fractions > 0)
-        self._a: Dict[int, float] = {}
-        self._b: Dict[int, float] = {}
-        self.stats = {"hits": 0, "misses": 0, "refined": 0, "refine_calls": 0}
+        assert max_entries is None or max_entries >= 1
+        self.max_entries = max_entries
+        self.drift_tol = drift_tol
+        # one dict so (a, b, area) can never desynchronize across keys
+        self._entries: Dict[int, Tuple[float, float, float]] = {}
+        self._used: Dict[int, int] = {}       # LRU tick per key
+        self._tick = 0
+        self._dense = None                    # (keys, a, b, area) sorted view
+        self.stats = {"hits": 0, "misses": 0, "refined": 0, "refine_calls": 0,
+                      "stale": 0, "evicted": 0}
 
     def __len__(self) -> int:
-        return len(self._a)
+        return len(self._entries)
 
     def __contains__(self, key: int) -> bool:
-        return int(key) in self._a
+        return int(key) in self._entries
+
+    def _dense_view(self) -> Tuple[np.ndarray, ...]:
+        """Sorted columnar view of the table, rebuilt lazily on mutation —
+        lookups are pure numpy gathers, no per-key Python in the hot path."""
+        if self._dense is None:
+            n = len(self._entries)
+            keys = np.fromiter(self._entries.keys(), np.int64, n)
+            vals = np.array(list(self._entries.values()),
+                            np.float64).reshape(n, 3)
+            order = np.argsort(keys)
+            self._dense = (keys[order], vals[order, 0], vals[order, 1],
+                           vals[order, 2])
+        return self._dense
+
+    def _find(self, keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(hit mask, dense row index) per key — vectorized searchsorted."""
+        dk = self._dense_view()[0]
+        idx = np.searchsorted(dk, keys)
+        idx = np.minimum(idx, max(dk.size - 1, 0))
+        hit = (dk[idx] == keys) if dk.size else np.zeros(keys.size, bool)
+        return hit, idx
+
+    def missing(self, keys: np.ndarray) -> np.ndarray:
+        """(K,) bool: key has no cache entry (vectorized, no stats)."""
+        hit, _ = self._find(np.asarray(keys, np.int64))
+        return ~hit
+
+    def _evict(self, key: int) -> None:
+        del self._entries[key], self._used[key]
+        self._dense = None
+        self.stats["evicted"] += 1
 
     # -------------------------------------------------------------- lookup --
-    def lookup(self, keys: np.ndarray
+    def lookup(self, keys: np.ndarray, areas: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Batch lookup: (hit mask, a, b); (a, b) are 0 where missed."""
+        """Batch lookup: (hit mask, a, b); (a, b) are 0 where missed.
+
+        ``areas`` — the queries' current skyline areas — enables drift
+        detection: an entry fitted from work that differs from the current
+        volume by more than ``drift_tol`` (relative) is stale, counts as a
+        miss, and is evicted so the next completion refits it.
+        """
         keys = np.asarray(keys, np.int64)
-        hit = np.array([int(k) in self._a for k in keys], bool)
-        a = np.array([self._a.get(int(k), 0.0) for k in keys], np.float64)
-        b = np.array([self._b.get(int(k), 0.0) for k in keys], np.float64)
+        hit, idx = self._find(keys)
+        if areas is not None and np.any(hit):
+            cached = np.where(hit, self._dense_view()[3][idx], 0.0)
+            cur = np.asarray(areas, np.float64)
+            stale = hit & (np.abs(cur - cached)
+                           > self.drift_tol * np.maximum(cached, 1e-9))
+            if np.any(stale):
+                self.stats["stale"] += int(stale.sum())
+                for k in np.unique(keys[stale]):
+                    self._evict(int(k))
+                # re-resolve from scratch: eviction removes the key for
+                # *every* row that references it (a duplicate key with a
+                # fresh area must not resolve to a neighboring entry)
+                hit, idx = self._find(keys)
+        _, da, db, _ = self._dense_view()
+        a = np.where(hit, da[idx] if da.size else 0.0, 0.0)
+        b = np.where(hit, db[idx] if db.size else 0.0, 0.0)
+        self._tick += 1
+        if self.max_entries is not None and np.any(hit):   # LRU bookkeeping
+            self._used.update(
+                dict.fromkeys(np.unique(keys[hit]).tolist(), self._tick))
         self.stats["hits"] += int(hit.sum())
         self.stats["misses"] += int((~hit).sum())
         return hit, a, b
@@ -66,8 +137,9 @@ class PCCCache:
         lengths (== observed runtimes); observed_tokens/peaks: (B,) the run's
         allocation and peak usage. Returns the fitted (a, b) arrays.
 
-        Keys already refined are refitted idempotently (the executor is
-        deterministic, so the fit is identical); callers typically filter.
+        Keys already refined are refitted — drifted reruns of a recurring
+        template overwrite the stale curve with the fresh one (the executor
+        is deterministic, so a refit from identical data is identical).
         """
         keys = np.asarray(keys, np.int64)
         B = keys.shape[0]
@@ -95,9 +167,16 @@ class PCCCache:
 
         a, b = fit_pcc_batch_np(allocs, runtimes)
         a = np.minimum(a, -1e-4)      # deterministic runs are monotone
-        for k, ai, bi in zip(keys, a, b):
-            if int(k) not in self._a:
+        row_area = np.asarray(skylines, np.float64).sum(axis=1)
+        self._tick += 1
+        for i, (k, ai, bi) in enumerate(zip(keys, a, b)):
+            if int(k) not in self._entries:
                 self.stats["refined"] += 1
-            self._a[int(k)] = float(ai)
-            self._b[int(k)] = float(bi)
+            self._entries[int(k)] = (float(ai), float(bi), float(row_area[i]))
+            self._used[int(k)] = self._tick
+        self._dense = None
+        if self.max_entries is not None and len(self._entries) > self.max_entries:
+            by_age = sorted(self._used, key=self._used.get)
+            for k in by_age[:len(self._entries) - self.max_entries]:
+                self._evict(int(k))
         return a, b

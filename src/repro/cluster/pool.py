@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.serve.batching import node_bucket
+
 __all__ = ["TokenPool"]
 
 
@@ -31,6 +33,18 @@ def _expire_kernel(end_s: jax.Array, tokens: jax.Array, now: jax.Array
     return (expired, freed,
             jnp.where(expired, jnp.inf, end_s),
             jnp.where(expired, 0, tokens))
+
+
+@jax.jit
+def _resize_kernel(end_s: jax.Array, tokens: jax.Array, slots: jax.Array,
+                   new_tokens: jax.Array, new_end_s: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Partial lease release / grow: one scatter over the lease table.
+
+    ``slots`` may contain duplicates from padding — duplicated slots carry
+    identical values, so the scatter is idempotent.
+    """
+    return end_s.at[slots].set(new_end_s), tokens.at[slots].set(new_tokens)
 
 
 class TokenPool:
@@ -77,6 +91,56 @@ class TokenPool:
         self.in_use -= int(freed)
         assert self.in_use >= 0, self.in_use
         return qids, toks
+
+    def active(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Live leases as (query ids, tokens, end times), slot order."""
+        m = self._tokens > 0
+        return self._query[m].copy(), self._tokens[m].copy(), self._end_s[m].copy()
+
+    def resize_batch(self, query_ids: np.ndarray, new_tokens: np.ndarray,
+                     new_end_s: np.ndarray) -> None:
+        """Shrink or grow live leases in place (partial release / regrant).
+
+        ``new_tokens[i]`` (>= 1) replaces query ``query_ids[i]``'s lease and
+        its end time becomes ``new_end_s[i]`` — one scatter kernel over the
+        lease table, padded to a power-of-two bucket so repeat resizes reuse
+        a bounded set of compiled shapes. Net growth must fit the free pool;
+        resizing an id with no live lease is a caller bug.
+        """
+        k = len(query_ids)
+        if k == 0:
+            return
+        query_ids = np.asarray(query_ids, np.int64)
+        new_tokens = np.asarray(new_tokens, np.int64)
+        new_end_s = np.asarray(new_end_s, np.float64)
+        assert np.all(new_tokens >= 1), "shrink-to-zero is a release"
+        live = np.flatnonzero(self._tokens > 0)
+        order = np.argsort(self._query[live])
+        pos = np.searchsorted(self._query[live], query_ids, sorter=order)
+        assert np.all(pos < live.size), "resize of an unknown query id"
+        slots = live[order[pos]]
+        assert np.array_equal(self._query[slots], query_ids), \
+            "resize of an expired / unknown lease"
+        delta = int(np.sum(new_tokens - self._tokens[slots]))
+        assert delta <= self.free, (delta, self.free)
+
+        # pad with slot[0] repeated (idempotent duplicate scatter) to a
+        # power-of-two bucket: a bounded compiled-shape set, same policy as
+        # the serving layer's
+        kp = node_bucket(k)
+        slots_p = np.full(kp, slots[0], np.int64)
+        toks_p = np.full(kp, new_tokens[0], np.int64)
+        ends_p = np.full(kp, new_end_s[0], np.float64)
+        slots_p[:k], toks_p[:k], ends_p[:k] = slots, new_tokens, new_end_s
+        with enable_x64():    # end times must keep float64 resolution
+            end_s, tokens = _resize_kernel(
+                jnp.asarray(self._end_s), jnp.asarray(self._tokens),
+                jnp.asarray(slots_p), jnp.asarray(toks_p),
+                jnp.asarray(ends_p))
+        self._end_s = np.asarray(end_s, np.float64).copy()
+        self._tokens = np.asarray(tokens, np.int64).copy()
+        self.in_use += delta
+        assert 0 <= self.in_use <= self.capacity, self.in_use
 
     def acquire_batch(self, query_ids: np.ndarray, tokens: np.ndarray,
                       end_s: np.ndarray) -> None:

@@ -1,17 +1,28 @@
 """Trace-driven cluster simulator (discrete-event, epoch-batched).
 
 Replays a multi-tenant ``Trace`` through an ``AllocationService`` against a
-finite global ``TokenPool`` with admission control and FIFO/priority
-queueing. The inner step is vectorized over event batches:
+finite global ``TokenPool`` with admission control and pluggable queueing
+(``repro.cluster.scheduler``: fifo / priority / EDF-over-SLA-slack). The
+inner step is vectorized over event batches:
 
   * allocation decisions go through the service's jitted batch path — the
     learned model for cold queries, the policy-only ``allocate_params`` twin
-    for queries whose exact PCC is already in the ``PCCCache``;
+    for queries whose exact PCC is already in the ``PCCCache``; under
+    elastic pricing the decision is re-priced per SLA class through the
+    ``allocate_params_priced`` twin (one more jitted call, still batched);
   * true runtimes at the chosen allocation come from one jitted AREPAS call
     over the batch's padded skylines;
-  * pool accounting / lease expiry is one jnp kernel over the lease table;
-  * admission is a vectorized prefix-sum over the (priority, arrival)-sorted
-    queue — no per-query Python in the hot loop.
+  * pool accounting / lease expiry / lease resizing are jnp kernels over the
+    lease table;
+  * admission is a vectorized prefix-sum over the policy-ordered queue — no
+    per-query Python in the hot loop.
+
+Elastic mode adds lease resizing: when queued demand exceeds the free pool,
+running leases are shrunk to their current priced decision and their
+remaining work is re-simulated through AREPAS at the smaller allocation;
+when the queue is empty and tokens are idle, leases grow back toward their
+performance-optimal ask (most-at-risk deadlines first). Cost is accrued
+exactly across resizes (token-seconds actually leased).
 
 Completed queries feed the online refinement loop: their observed skylines
 are run back through AREPAS and fitted into the ``PCCCache`` (the paper's
@@ -30,6 +41,8 @@ import numpy as np
 from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.pcc_cache import PCCCache
 from repro.cluster.pool import TokenPool
+from repro.cluster.scheduler import (PriceSignal, QueueView, deadline_floor,
+                                     make_policy)
 from repro.core.arepas import simulate_runtime_batch_jit
 from repro.core.featurize import batch_graphs, batch_job_features
 from repro.serve.batching import batch_bucket, pad_to
@@ -44,8 +57,16 @@ class ClusterConfig:
     epoch_s: float = 15.0         # decision-batching window
     max_leases: int = 8192
     use_cache: bool = True        # online PCC refinement + cache-hit path
-    admission: str = "priority"   # "priority" (SLA classes) or "fifo"
+    admission: str = "priority"   # scheduler policy: "fifo"|"priority"|"edf"
     max_queue: int = 100_000      # admission control: reject beyond this
+    # elastic: resize running leases under pressure / idleness. Shrink
+    # targets come from the contention PriceSignal even when ``pricing``
+    # is "fixed" (that signal *is* the reclaim mechanism), but admission
+    # decisions and the reported per-query prices stay neutral then.
+    elastic: bool = False
+    pricing: str = "fixed"        # "fixed" | "elastic" per-SLA-class price
+    price_gamma: float = 16.0     # price slope vs class demand share
+    price_cap: float = 16.0       # ceiling on the per-class price
 
 
 @dataclasses.dataclass
@@ -78,9 +99,10 @@ class ClusterSimulator:
     """Discrete-event simulation of one trace against one trained service."""
 
     def __init__(self, service, cfg: ClusterConfig = ClusterConfig()):
-        assert cfg.admission in ("priority", "fifo"), cfg.admission
+        assert cfg.pricing in ("fixed", "elastic"), cfg.pricing
         self.service = service
         self.cfg = cfg
+        self.policy = make_policy(cfg.admission)
         # rebuilt per run(): cache keys are trace-local unique-query indices
         self.cache = PCCCache()
 
@@ -114,9 +136,13 @@ class ClusterSimulator:
         jb_all = cols["job_index"]
         sla_all = cols["sla"]
         tenant_all = cols["tenant"]
+        deadline_all = cols["deadline_s"]
         repeat_all = trace.repeat_mask()
+        n_classes = len(trace.sla_classes)
         priorities = np.array([c.priority for c in trace.sla_classes])
         sla_limits = np.array([c.slowdown_limit for c in trace.sla_classes])
+        priced = cfg.pricing == "elastic"
+        signal = PriceSignal(n_classes, cfg.price_gamma, cfg.price_cap)
 
         # unique-query pool tensors
         U = len(trace.jobs)
@@ -127,6 +153,7 @@ class ClusterSimulator:
             sky[u, :len(s)] = s
             lens[u] = len(s)
         peaks = sky.max(axis=1).astype(np.int64)
+        areas = sky.sum(axis=1, dtype=np.float64)
         defaults = np.array([j.default_tokens for j in trace.jobs], np.int64)
         model_pool = self._pool_inputs(trace)
 
@@ -141,12 +168,19 @@ class ClusterSimulator:
             cfg.capacity).astype(np.int64)
 
         # per-query state, indexed by query id
-        tok_q = np.zeros(n, np.int64)
-        rt_q = np.zeros(n, np.int64)
+        tok_q = np.zeros(n, np.int64)      # currently leased tokens
+        perf_q = np.zeros(n, np.int64)     # performance-optimal (unpriced) ask
+        rt_q = np.zeros(n, np.int64)       # current total-runtime estimate
+        a_q = np.zeros(n, np.float64)      # decision-time PCC params
+        b_q = np.zeros(n, np.float64)
+        price_q = np.ones(n, np.float64)   # price paid at decision time
         err_q = np.zeros(n, np.float64)
         hit_q = np.zeros(n, bool)
         start_q = np.zeros(n, np.float64)
         end_q = np.zeros(n, np.float64)
+        cost_q = np.zeros(n, np.float64)   # token-seconds accrued pre-resize
+        mark_q = np.zeros(n, np.float64)   # last lease-change timestamp
+        done_q = np.zeros(n, np.float64)   # work fraction done at last change
 
         pool = TokenPool(cfg.capacity, cfg.max_leases)
         metrics = ClusterMetrics(cfg.capacity, sla_limits)
@@ -170,20 +204,39 @@ class ClusterSimulator:
             done_ids, _ = pool.expire(now)
             if done_ids.size:
                 jb = jb_all[done_ids]
+                fin = end_q[done_ids]
                 metrics.record_completions(
                     arrival_s=arrival[done_ids], start_s=start_q[done_ids],
-                    finish_s=end_q[done_ids], tokens=tok_q[done_ids],
-                    default_tokens=defaults[jb], runtime_s=rt_q[done_ids],
+                    finish_s=fin, tokens=tok_q[done_ids],
+                    default_tokens=defaults[jb],
+                    runtime_s=np.round(fin - start_q[done_ids]).astype(
+                        np.int64),
                     ideal_runtime_s=lens[jb], sla=sla_all[done_ids],
                     tenant=tenant_all[done_ids], cache_hit=hit_q[done_ids],
-                    repeat=repeat_all[done_ids], alloc_error=err_q[done_ids])
+                    repeat=repeat_all[done_ids], alloc_error=err_q[done_ids],
+                    cost_token_s=(cost_q[done_ids] + tok_q[done_ids]
+                                  * (fin - mark_q[done_ids])),
+                    price=price_q[done_ids],
+                    slack_s=deadline_all[done_ids] - fin)
                 if cfg.use_cache:
-                    fresh = np.unique(jb[[u not in self.cache for u in jb]])
+                    fresh = np.unique(jb[self.cache.missing(jb)])
                     if fresh.size:
                         self.cache.refine_batch(fresh, sky[fresh], lens[fresh],
                                                 defaults[fresh], peaks[fresh])
 
-            # 2. arrivals in this epoch -> batched allocation decisions
+            # 2. per-SLA-class price signal from leased + queued demand
+            #    (the lease-table snapshot is only needed on elastic paths)
+            if priced or cfg.elastic:
+                act_ids, act_tok, act_end = pool.active()
+                leased_cls = np.bincount(sla_all[act_ids], weights=act_tok,
+                                         minlength=n_classes)
+                queued_cls = np.bincount(sla_all[q_ids], weights=tok_q[q_ids],
+                                         minlength=n_classes)
+                prices = signal.prices(leased_cls, cfg.capacity, queued_cls)
+            else:
+                prices = None
+
+            # 3. arrivals in this epoch -> batched allocation decisions
             hi = int(np.searchsorted(arrival, now, side="right"))
             ids = np.arange(next_ev, hi)
             next_ev = hi
@@ -195,42 +248,144 @@ class ClusterSimulator:
                 jb = jb_all[ids]
                 obs = defaults[jb]
                 tokens = np.zeros(ids.size, np.int64)
+                a_dec = np.zeros(ids.size, np.float64)
+                b_dec = np.zeros(ids.size, np.float64)
                 if cfg.use_cache:
-                    hit, a_c, b_c = self.cache.lookup(jb)
+                    hit, a_c, b_c = self.cache.lookup(jb, areas=areas[jb])
                 else:
                     hit = np.zeros(ids.size, bool)
                 if np.any(hit):      # exact-history path: policy twin only
                     tokens[hit] = self.service.allocate_params(
                         a_c[hit], b_c[hit], observed_tokens=obs[hit]).tokens
+                    a_dec[hit] = a_c[hit]
+                    b_dec[hit] = b_c[hit]
                 miss = ~hit
                 if np.any(miss):     # cold path: fused model+policy executable
                     model_in = {k: v[jb[miss]] for k, v in model_pool.items()}
-                    tokens[miss] = self.service.allocate_batch(
-                        model_in, observed_tokens=obs[miss]).tokens
-                tokens = np.minimum(tokens, cfg.capacity)
+                    res = self.service.allocate_batch(
+                        model_in, observed_tokens=obs[miss])
+                    tokens[miss] = res.tokens
+                    a_dec[miss] = res.a
+                    b_dec[miss] = res.b
+                perf = np.minimum(tokens, cfg.capacity)
+                if priced:           # re-price the whole epoch batch at once,
+                    p = prices[sla_all[ids]]
+                    tokens = np.minimum(self.service.allocate_params_priced(
+                        a_dec, b_dec, p, observed_tokens=obs).tokens,
+                        cfg.capacity)
+                    # ... floored so no query is priced into a predicted
+                    # deadline miss (past the performance ask nothing helps)
+                    tokens = np.maximum(tokens, deadline_floor(
+                        a_dec, b_dec, deadline_all[ids] - now, perf))
+                    price_q[ids] = p
+                else:
+                    tokens = perf
                 tok_q[ids] = tokens
+                perf_q[ids] = perf
+                a_q[ids] = a_dec
+                b_q[ids] = b_dec
                 hit_q[ids] = hit
-                err_q[ids] = (np.abs(tokens - oracle[jb])
+                err_q[ids] = (np.abs(perf - oracle[jb])
                               / np.maximum(oracle[jb], 1))
                 rt_q[ids] = self._true_runtimes(sky[jb], lens[jb], tokens)
                 q_ids = np.concatenate([q_ids, ids])
 
-            # 3. admission: vectorized prefix over the sorted queue
+            # 4. elastic shrink: queued demand over the free pool -> reclaim
+            if cfg.elastic and act_ids.size and q_ids.size:
+                demand = int(np.sum(tok_q[q_ids]))
+                if demand > pool.free:
+                    # re-price running leases at current contention; shrink
+                    # the ones whose priced ask fell below their lease
+                    tgt = np.minimum(self.service.allocate_params_priced(
+                        a_q[act_ids], b_q[act_ids], prices[sla_all[act_ids]],
+                        observed_tokens=defaults[jb_all[act_ids]]).tokens,
+                        cfg.capacity)
+                    # deadline guard: the shrunk lease's predicted *total*
+                    # runtime must keep the remaining work inside the slack
+                    done = self._work_done(act_ids, now, done_q, mark_q, rt_q)
+                    rt_budget = ((deadline_all[act_ids] - now) / (1.0 - done))
+                    tgt = np.maximum(tgt, deadline_floor(
+                        a_q[act_ids], b_q[act_ids], rt_budget, act_tok))
+                    sel = (tgt < act_tok) & ((act_end - now) > cfg.epoch_s)
+                    if np.any(sel):
+                        sids = act_ids[sel]
+                        new_tok = tgt[sel]
+                        self._apply_resize(sids, new_tok, now, sky, lens,
+                                           jb_all, tok_q, rt_q, start_q,
+                                           end_q, cost_q, mark_q, done_q,
+                                           pool)
+                        metrics.record_resizes(
+                            shrunk=sids.size,
+                            reclaimed=int(np.sum(act_tok[sel] - new_tok)))
+                        if priced:   # fixed pricing reports neutral prices
+                            price_q[sids] = prices[sla_all[sids]]
+
+            # 5. re-price stale queued decisions: a query that decided at a
+            #    burst-peak (or calm-trough) price keeps neither its starved
+            #    nor its oversized ask once the class price moves materially
+            #    — re-decide tokens and runtime for the changed subset so
+            #    EDF slack and admission see current prices
+            if priced and q_ids.size:
+                pq = prices[sla_all[q_ids]]
+                moved = np.abs(pq - price_q[q_ids]) > 0.25 * price_q[q_ids]
+                if np.any(moved):
+                    rq = q_ids[moved]
+                    p = pq[moved]
+                    toks = np.minimum(self.service.allocate_params_priced(
+                        a_q[rq], b_q[rq], p,
+                        observed_tokens=defaults[jb_all[rq]]).tokens,
+                        cfg.capacity)
+                    toks = np.maximum(toks, deadline_floor(
+                        a_q[rq], b_q[rq], deadline_all[rq] - now, perf_q[rq]))
+                    jb = jb_all[rq]
+                    tok_q[rq] = toks
+                    rt_q[rq] = self._true_runtimes(sky[jb], lens[jb], toks)
+                    price_q[rq] = p
+
+            # 6. admission: vectorized prefix over the policy-ordered queue
             if q_ids.size and pool.free > 0:
-                if cfg.admission == "priority":
-                    order = np.lexsort((arrival[q_ids],
-                                        priorities[sla_all[q_ids]]))
-                else:
-                    order = np.argsort(arrival[q_ids], kind="stable")
-                q_ids = q_ids[order]
+                view = QueueView(
+                    ids=q_ids, arrival_s=arrival[q_ids],
+                    priority=priorities[sla_all[q_ids]],
+                    slack_s=deadline_all[q_ids] - (now + rt_q[q_ids]))
+                q_ids = q_ids[self.policy.order(view)]
                 fits = np.cumsum(tok_q[q_ids]) <= pool.free
                 k = int(np.searchsorted(~fits, True))   # longest True prefix
                 if k:
                     adm = q_ids[:k]
                     q_ids = q_ids[k:]
                     start_q[adm] = now
+                    mark_q[adm] = now
+                    done_q[adm] = 0.0
                     end_q[adm] = now + rt_q[adm]
                     pool.acquire_batch(adm, tok_q[adm], end_q[adm])
+
+            # 7. elastic grow: idle tokens flow back to running leases that
+            #    are projected to miss their deadline (growing anything else
+            #    buys runtime nobody asked for at a strictly higher cost),
+            #    most-at-risk first
+            if cfg.elastic and not q_ids.size and pool.free > 0:
+                act_ids, act_tok, act_end = pool.active()
+                want = perf_q[act_ids] - act_tok
+                cand = ((want > 0) & ((act_end - now) > cfg.epoch_s)
+                        & (act_end > deadline_all[act_ids]))
+                if np.any(cand):
+                    cids, cwant = act_ids[cand], want[cand]
+                    order = np.argsort(deadline_all[cids] - act_end[cand],
+                                       kind="stable")
+                    cids, cwant = cids[order], cwant[order]
+                    fits = np.cumsum(cwant) <= pool.free
+                    k = int(np.searchsorted(~fits, True))
+                    if k:
+                        gids = cids[:k]
+                        new_tok = tok_q[gids] + cwant[:k]
+                        self._apply_resize(gids, new_tok, now, sky, lens,
+                                           jb_all, tok_q, rt_q, start_q,
+                                           end_q, cost_q, mark_q, done_q,
+                                           pool)
+                        metrics.record_resizes(
+                            grown=gids.size,
+                            granted=int(np.sum(cwant[:k])))
 
             epoch_errs = err_q[ids] if ids.size else np.zeros(0)
             metrics.sample_epoch(now, q_ids.size, pool.in_use, epoch_errs)
@@ -247,3 +402,40 @@ class ClusterSimulator:
             service_stats=dict(self.service.stats),
             error_series=metrics.error_series(),
             alloc_errors=err_q, cache_hits=hit_q, repeats=repeat_all)
+
+    # -------------------------------------------------------------- resize --
+    @staticmethod
+    def _work_done(qids: np.ndarray, now: float, done_q: np.ndarray,
+                   mark_q: np.ndarray, rt_q: np.ndarray) -> np.ndarray:
+        """Work fraction completed by ``now``: the fraction banked at the
+        last lease change plus the segment since, run at the *current*
+        allocation's rate (1 / rt_q of the total work per second). Correct
+        across any number of resizes — a wall-clock fraction of the mixed
+        schedule would mis-credit every segment before the last change."""
+        return np.clip(done_q[qids]
+                       + (now - mark_q[qids]) / np.maximum(rt_q[qids], 1),
+                       0.0, 0.999)
+
+    def _apply_resize(self, qids: np.ndarray, new_tok: np.ndarray,
+                      now: float, sky: np.ndarray, lens: np.ndarray,
+                      jb_all: np.ndarray, tok_q: np.ndarray,
+                      rt_q: np.ndarray, start_q: np.ndarray,
+                      end_q: np.ndarray, cost_q: np.ndarray,
+                      mark_q: np.ndarray, done_q: np.ndarray,
+                      pool: TokenPool) -> None:
+        """Resize running leases: AREPAS-resimulate the job at the new
+        allocation, carry the completed work fraction over, accrue the cost
+        of the lease segment that just ended, and scatter the new
+        (tokens, end) into the pool's lease table."""
+        jb = jb_all[qids]
+        rt_new = self._true_runtimes(sky[jb], lens[jb], new_tok)
+        done = self._work_done(qids, now, done_q, mark_q, rt_q)
+        remaining = np.maximum(np.round(rt_new * (1.0 - done)), 1.0)
+        new_end = now + remaining
+        cost_q[qids] += tok_q[qids] * (now - mark_q[qids])
+        done_q[qids] = done
+        mark_q[qids] = now
+        tok_q[qids] = new_tok
+        rt_q[qids] = rt_new
+        end_q[qids] = new_end
+        pool.resize_batch(qids, new_tok, new_end)

@@ -17,6 +17,13 @@ that jit/vmap for the serving hot path and — run in float64 via
 ``jax.experimental.enable_x64`` — return decisions bitwise-equal to the
 scalar oracles (tests/test_alloc_parity.py). ``choose_tokens_batch`` is the
 host-side convenience wrapper.
+
+``choose_tokens_priced`` (+ jnp twin / batch wrapper) is the cost-aware
+variant behind the cluster scheduler's elastic repricing: a per-query
+multiplicative ``price`` (>= 1, set per SLA class from pool contention)
+scales the marginal-gain threshold *and* the slowdown budget, so a
+pressured class slides down its PCC to the cost-optimal point while
+``price == 1`` reproduces ``choose_tokens`` exactly.
 """
 from __future__ import annotations
 
@@ -29,11 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import arepas
-from repro.core.pcc import optimal_tokens, pcc_runtime
+from repro.core.pcc import pcc_runtime
 
 __all__ = ["AllocationPolicy", "choose_tokens", "choose_tokens_jnp",
-           "choose_tokens_batch", "min_tokens_within_slowdown",
-           "min_tokens_within_slowdown_jnp", "token_reduction_cdf"]
+           "choose_tokens_batch", "choose_tokens_priced",
+           "choose_tokens_priced_jnp", "choose_tokens_priced_batch",
+           "min_tokens_within_slowdown", "min_tokens_within_slowdown_jnp",
+           "token_reduction_cdf"]
 
 # Bisection ranges are token counts (< 2^48 by a huge margin); a fixed
 # iteration count makes the search jit-able — extra iterations are no-ops,
@@ -51,22 +60,13 @@ class AllocationPolicy:
 
 def choose_tokens(a: float, b: float, policy: AllocationPolicy,
                   observed_tokens: Optional[int] = None) -> int:
-    """Pick the allocation for a job from its (predicted) PCC parameters."""
-    hi = policy.max_tokens if observed_tokens is None else observed_tokens
-    t_gain = optimal_tokens(a, b, gain_threshold=policy.min_gain,
-                            lo=policy.min_tokens, hi=hi)
-    if policy.max_slowdown <= 0:
-        return t_gain
-    # bounded slowdown relative to the full (observed/max) allocation
-    base = pcc_runtime(a, b, hi)
-    lo, hi_s = policy.min_tokens, hi
-    while lo < hi_s:                      # smallest A with rt <= (1+s) * base
-        mid = (lo + hi_s) // 2
-        if pcc_runtime(a, b, mid) <= (1.0 + policy.max_slowdown) * base:
-            hi_s = mid
-        else:
-            lo = mid + 1
-    return max(min(t_gain, policy.max_tokens), lo)
+    """Pick the allocation for a job from its (predicted) PCC parameters.
+
+    Delegates to ``choose_tokens_priced`` at the neutral price — an exact
+    no-op (every priced operation multiplies by 1.0), so there is a single
+    implementation of the gain cut-off + slowdown bisection to maintain.
+    """
+    return choose_tokens_priced(a, b, policy, 1.0, observed_tokens)
 
 
 def choose_tokens_jnp(a: jax.Array, b: jax.Array, policy: AllocationPolicy,
@@ -77,35 +77,11 @@ def choose_tokens_jnp(a: jax.Array, b: jax.Array, policy: AllocationPolicy,
     The policy is static (branching on ``max_slowdown`` happens at trace
     time); ``observed_tokens`` is an optional (J,) int array. Trace under
     ``enable_x64`` with float64 (a, b) for bitwise parity with the oracle.
+    Same neutral-price delegation as the scalar.
     """
     a = jnp.asarray(a)
-    b = jnp.asarray(b)
-    dt = a.dtype
-    lo0 = policy.min_tokens
-    hi = (jnp.full(a.shape, policy.max_tokens, jnp.int64)
-          if observed_tokens is None
-          else jnp.asarray(observed_tokens).astype(jnp.int64))
-    # marginal-gain cut-off: A* = |a| / min_gain (lo for degenerate curves)
-    a_star = jnp.abs(a) / max(policy.min_gain, 1e-9)
-    t_gain = jnp.clip(jnp.round(a_star), lo0, hi.astype(dt)).astype(jnp.int64)
-    t_gain = jnp.where(a >= 0, jnp.int64(lo0), t_gain)
-    if policy.max_slowdown <= 0:
-        return t_gain
-
-    base = b * hi.astype(dt) ** a
-    limit = (1.0 + policy.max_slowdown) * base
-
-    def body(_, st):
-        lo, hi_s = st
-        cond = lo < hi_s
-        mid = (lo + hi_s) // 2
-        ok = b * mid.astype(dt) ** a <= limit
-        return (jnp.where(cond & ~ok, mid + 1, lo),
-                jnp.where(cond & ok, mid, hi_s))
-
-    lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body,
-                              (jnp.full(a.shape, lo0, jnp.int64), hi))
-    return jnp.maximum(jnp.minimum(t_gain, policy.max_tokens), lo)
+    return choose_tokens_priced_jnp(a, jnp.asarray(b), policy,
+                                    jnp.ones((), a.dtype), observed_tokens)
 
 
 @functools.lru_cache(maxsize=None)
@@ -130,6 +106,101 @@ def choose_tokens_batch(a: np.ndarray, b: np.ndarray,
         fn = _compiled_policy(policy, observed_tokens is not None)
         out = fn(aj, bj, obs)
         return np.asarray(out)
+
+
+def choose_tokens_priced(a: float, b: float, policy: AllocationPolicy,
+                         price: float,
+                         observed_tokens: Optional[int] = None) -> int:
+    """Cost-aware allocation: ``price`` scales both policy knobs.
+
+    The marginal-gain threshold becomes ``min_gain * price`` (each token must
+    buy ``price``-times more runtime to stay worth leasing) and the slowdown
+    budget becomes ``max_slowdown * price`` (a pressured class accepts more
+    stretch). Both shrink the decision monotonically in ``price``;
+    ``price == 1`` is exactly ``choose_tokens``.
+    """
+    hi = policy.max_tokens if observed_tokens is None else observed_tokens
+    eff_gain = max(policy.min_gain, 1e-9) * price
+    if a >= 0:   # degenerate / flat curve: minimum allocation is optimal
+        t_gain = policy.min_tokens
+    else:
+        t_gain = int(np.clip(np.round(abs(a) / eff_gain),
+                             policy.min_tokens, hi))
+    if policy.max_slowdown <= 0:
+        return t_gain
+    base = pcc_runtime(a, b, hi)
+    limit = (1.0 + policy.max_slowdown * price) * base
+    lo, hi_s = policy.min_tokens, hi
+    while lo < hi_s:                      # smallest A with rt <= limit
+        mid = (lo + hi_s) // 2
+        if pcc_runtime(a, b, mid) <= limit:
+            hi_s = mid
+        else:
+            lo = mid + 1
+    return max(min(t_gain, policy.max_tokens), lo)
+
+
+def choose_tokens_priced_jnp(a: jax.Array, b: jax.Array,
+                             policy: AllocationPolicy, price: jax.Array,
+                             observed_tokens: Optional[jax.Array] = None
+                             ) -> jax.Array:
+    """Vectorized jnp twin of ``choose_tokens_priced``: (J,) params and
+    (J,) prices -> (J,) tokens. Same float64 discipline as
+    ``choose_tokens_jnp`` for bitwise parity with the scalar oracle."""
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    price = jnp.asarray(price)
+    dt = a.dtype
+    lo0 = policy.min_tokens
+    hi = (jnp.full(a.shape, policy.max_tokens, jnp.int64)
+          if observed_tokens is None
+          else jnp.asarray(observed_tokens).astype(jnp.int64))
+    eff_gain = max(policy.min_gain, 1e-9) * price
+    a_star = jnp.abs(a) / eff_gain
+    t_gain = jnp.clip(jnp.round(a_star), lo0, hi.astype(dt)).astype(jnp.int64)
+    t_gain = jnp.where(a >= 0, jnp.int64(lo0), t_gain)
+    if policy.max_slowdown <= 0:
+        return t_gain
+
+    base = b * hi.astype(dt) ** a
+    limit = (1.0 + policy.max_slowdown * price) * base
+
+    def body(_, st):
+        lo, hi_s = st
+        cond = lo < hi_s
+        mid = (lo + hi_s) // 2
+        ok = b * mid.astype(dt) ** a <= limit
+        return (jnp.where(cond & ~ok, mid + 1, lo),
+                jnp.where(cond & ok, mid, hi_s))
+
+    lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body,
+                              (jnp.full(a.shape, lo0, jnp.int64), hi))
+    return jnp.maximum(jnp.minimum(t_gain, policy.max_tokens), lo)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_priced_policy(policy: AllocationPolicy, with_observed: bool):
+    def f(a, b, price, hi):
+        return choose_tokens_priced_jnp(a, b, policy, price,
+                                        hi if with_observed else None)
+    return jax.jit(f)
+
+
+def choose_tokens_priced_batch(a: np.ndarray, b: np.ndarray,
+                               policy: AllocationPolicy, price: np.ndarray,
+                               observed_tokens: Optional[np.ndarray] = None
+                               ) -> np.ndarray:
+    """Batched priced decisions, bitwise-equal to a ``choose_tokens_priced``
+    loop: one jitted float64 call over (J,) parameter/price arrays."""
+    from jax.experimental import enable_x64
+    with enable_x64():
+        aj = jnp.asarray(np.asarray(a, np.float64))
+        bj = jnp.asarray(np.asarray(b, np.float64))
+        pj = jnp.asarray(np.asarray(price, np.float64))
+        obs = (None if observed_tokens is None
+               else jnp.asarray(np.asarray(observed_tokens, np.int64)))
+        fn = _compiled_priced_policy(policy, observed_tokens is not None)
+        return np.asarray(fn(aj, bj, pj, obs))
 
 
 def min_tokens_within_slowdown(skyline: np.ndarray, observed_tokens: int,

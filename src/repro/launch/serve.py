@@ -135,12 +135,25 @@ class AllocationFrontend:
         out.update(self.step())
         return out
 
-    def run_cluster(self, trace, cluster_cfg=None) -> "ClusterReport":
+    def run_cluster(self, trace, cluster_cfg=None, *,
+                    admission: Optional[str] = None,
+                    elastic: Optional[bool] = None,
+                    pricing: Optional[str] = None) -> "ClusterReport":
         """Replay a ``repro.workloads.Trace`` through this frontend's service
         inside the trace-driven cluster simulator (``repro.cluster``): finite
-        token pool, admission control, SLA queueing, and online PCC
-        refinement, with every allocation decision going through the same
-        jitted batch path the micro-batcher uses."""
+        token pool, admission control, scheduler-policy SLA queueing
+        (fifo/priority/edf), optional elastic lease resizing + per-class
+        repricing, and online PCC refinement, with every allocation decision
+        going through the same jitted batch path the micro-batcher uses.
+
+        ``admission`` / ``elastic`` / ``pricing`` override the corresponding
+        ``ClusterConfig`` fields without the caller building a config."""
         from repro.cluster import ClusterConfig, ClusterSimulator
-        sim = ClusterSimulator(self.service, cluster_cfg or ClusterConfig())
+        cfg = cluster_cfg or ClusterConfig()
+        overrides = {k: v for k, v in (("admission", admission),
+                                       ("elastic", elastic),
+                                       ("pricing", pricing)) if v is not None}
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        sim = ClusterSimulator(self.service, cfg)
         return sim.run(trace)

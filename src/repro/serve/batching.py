@@ -132,17 +132,25 @@ class MicroBatcher:
 
     def flush(self) -> Dict[int, int]:
         """Drain the queue: one service call per (signature, chunk).
-        Returns {request_id: allocated tokens}."""
-        out: Dict[int, int] = {}
+
+        Returns {request_id: allocated tokens} in global submission order —
+        not signature-group order — so callers that zip results against
+        their submissions see them aligned even when signatures interleave.
+        Also clears the timeout epoch: requests submitted after a flush
+        start a fresh ``max_wait_s`` window, including a request submitted
+        at the exact instant the previous window expired.
+        """
+        queue, self._queue = self._queue, []
+        self._oldest_t = None
         groups: Dict[Tuple, List[AllocationRequest]] = {}
-        for r in self._queue:
+        for r in queue:
             groups.setdefault(self._signature(r), []).append(r)
-        self._queue = []
+        results: Dict[int, int] = {}
         for sig, reqs in groups.items():
             for i in range(0, len(reqs), self.max_batch):
                 chunk = reqs[i:i + self.max_batch]
-                out.update(self._dispatch(sig, chunk))
-        return out
+                results.update(self._dispatch(sig, chunk))
+        return {r.request_id: results[r.request_id] for r in queue}
 
     def _dispatch(self, sig: Tuple, reqs: Sequence[AllocationRequest]
                   ) -> Dict[int, int]:

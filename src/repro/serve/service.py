@@ -26,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
-from repro.core.allocator import AllocationPolicy, choose_tokens_jnp
+from repro.core.allocator import (AllocationPolicy, choose_tokens_jnp,
+                                  choose_tokens_priced_jnp)
 from repro.serve.batching import batch_bucket, pad_to
 
 __all__ = ["AllocationResult", "AllocationService"]
@@ -88,6 +89,21 @@ class AllocationService:
             def decide(a, b, observed):
                 toks = choose_tokens_jnp(a, b, policy,
                                          observed if with_observed else None)
+                return toks, b * toks.astype(a.dtype) ** a
+
+            self._cache[key] = jax.jit(decide)
+        return self._cache[key]
+
+    def _priced_fn(self, n_padded: int, with_observed: bool):
+        key = ("priced", n_padded, with_observed, self.policy)
+        if key not in self._cache:
+            self.stats["compiles"] += 1
+            policy = self.policy
+
+            def decide(a, b, price, observed):
+                toks = choose_tokens_priced_jnp(
+                    a, b, policy, price,
+                    observed if with_observed else None)
                 return toks, b * toks.astype(a.dtype) ** a
 
             self._cache[key] = jax.jit(decide)
@@ -173,6 +189,45 @@ class AllocationService:
         fn = self._policy_fn(Bp, observed_tokens is not None)
         with enable_x64():
             toks, rt = fn(jnp.asarray(a64), jnp.asarray(b64),
+                          None if obs is None else jnp.asarray(obs))
+            toks, rt = np.asarray(toks), np.asarray(rt)
+        return AllocationResult(tokens=toks[:B], a=np.asarray(a)[:B],
+                                b=np.asarray(b)[:B], runtime=rt[:B])
+
+    def allocate_params_priced(self, a: np.ndarray, b: np.ndarray,
+                               price: np.ndarray,
+                               observed_tokens: Optional[np.ndarray] = None
+                               ) -> AllocationResult:
+        """Price-weighted policy-only path: per-query multiplicative prices
+        (>= 1, typically per SLA class from pool contention) scale the
+        marginal-gain threshold and the slowdown budget, landing pressured
+        classes at the cost-optimal rather than performance-optimal point of
+        their PCC. ``price == 1`` rows are bitwise-identical to
+        ``allocate_params``'s oracle (``choose_tokens``)."""
+        B = np.asarray(a).shape[0]
+        if B > self.MAX_BATCH:
+            return self._concat([
+                self.allocate_params_priced(
+                    np.asarray(a)[i:i + self.MAX_BATCH],
+                    np.asarray(b)[i:i + self.MAX_BATCH],
+                    np.asarray(price)[i:i + self.MAX_BATCH],
+                    None if observed_tokens is None
+                    else np.asarray(observed_tokens)[i:i + self.MAX_BATCH])
+                for i in range(0, B, self.MAX_BATCH)])
+        self.stats["calls"] += 1
+        self.stats["queries"] += B
+        Bp = batch_bucket(B, self.batch_floor)
+        a64 = pad_to(np.asarray(a, np.float64), Bp)
+        b64 = pad_to(np.asarray(b, np.float64), Bp)
+        p64 = np.ones(Bp, np.float64)      # neutral price on padded rows
+        p64[:B] = np.asarray(price, np.float64)
+        obs = None
+        if observed_tokens is not None:
+            obs = pad_to(np.asarray(observed_tokens, np.int64), Bp)
+        fn = self._priced_fn(Bp, observed_tokens is not None)
+        with enable_x64():
+            toks, rt = fn(jnp.asarray(a64), jnp.asarray(b64),
+                          jnp.asarray(p64),
                           None if obs is None else jnp.asarray(obs))
             toks, rt = np.asarray(toks), np.asarray(rt)
         return AllocationResult(tokens=toks[:B], a=np.asarray(a)[:B],

@@ -279,6 +279,10 @@ class TraceEvent:
     job_index: int     # index into Trace.jobs (the unique-query pool)
     tenant: int
     sla: int           # index into Trace.sla_classes
+    # absolute completion deadline implied by the SLA: arrival plus the
+    # class's slowdown limit times the query's ideal (observed) runtime —
+    # the quantity EDF admission orders by. inf == no deadline (legacy).
+    deadline_s: float = float("inf")
 
 
 @dataclasses.dataclass
@@ -307,6 +311,7 @@ class Trace:
             "job_index": np.array([e.job_index for e in self.events], np.int64),
             "tenant": np.array([e.tenant for e in self.events], np.int64),
             "sla": np.array([e.sla for e in self.events], np.int64),
+            "deadline_s": np.array([e.deadline_s for e in self.events]),
         }
 
     def repeat_mask(self) -> np.ndarray:
@@ -401,11 +406,16 @@ class TraceGenerator:
                               p=self._popularity())
         tenant_of_job = g_tenant.integers(self.n_tenants, size=self.n_unique)
         sla_of_tenant = np.arange(self.n_tenants) % len(self.sla_classes)
-        events = [TraceEvent(query_id=i, arrival_s=float(arrivals[i]),
-                             job_index=int(picks[i]),
-                             tenant=int(tenant_of_job[picks[i]]),
-                             sla=int(sla_of_tenant[tenant_of_job[picks[i]]]))
-                  for i in range(n_events)]
+        limits = np.array([c.slowdown_limit for c in self.sla_classes])
+        ideal = np.array([len(s) for s in skylines], np.float64)
+        events = []
+        for i in range(n_events):
+            u = int(picks[i])
+            sla = int(sla_of_tenant[tenant_of_job[u]])
+            events.append(TraceEvent(
+                query_id=i, arrival_s=float(arrivals[i]), job_index=u,
+                tenant=int(tenant_of_job[u]), sla=sla,
+                deadline_s=float(arrivals[i] + limits[sla] * ideal[u])))
         return Trace(events=events, jobs=jobs, skylines=skylines,
                      sla_classes=self.sla_classes, seed=self.seed)
 

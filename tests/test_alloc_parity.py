@@ -11,6 +11,8 @@ from repro.core.allocator import (
     AllocationPolicy,
     choose_tokens,
     choose_tokens_batch,
+    choose_tokens_priced,
+    choose_tokens_priced_batch,
     min_tokens_within_slowdown,
     min_tokens_within_slowdown_jnp,
 )
@@ -72,6 +74,56 @@ def test_choose_tokens_zero_slowdown_is_gain_only():
     want = np.array([choose_tokens(float(ai), float(bi), pol)
                      for ai, bi in zip(a, b)])
     np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------- price-weighted policy --
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("with_observed", [False, True])
+def test_choose_tokens_priced_bitwise_parity(policy, with_observed):
+    """The price-weighted jnp policy (the scheduler's elastic-repricing hot
+    path) must match the scalar numpy oracle bitwise in float64, across the
+    same policy grid as the unpriced twin plus a price sweep with edges
+    (neutral 1.0, fractional, and heavy-contention prices)."""
+    a, b = _sweep_params(seed=7)
+    rng = np.random.RandomState(11)
+    price = np.concatenate([
+        np.exp(rng.uniform(0.0, np.log(32.0), a.size - 4)),
+        [1.0, 1.0 + 1e-12, 7.5, 32.0]])
+    obs = (np.random.RandomState(13).randint(1, 7000, a.size)
+           if with_observed else None)
+    got = choose_tokens_priced_batch(a, b, policy, price, obs)
+    want = np.array([
+        choose_tokens_priced(float(ai), float(bi), policy, float(price[i]),
+                             None if obs is None else int(obs[i]))
+        for i, (ai, bi) in enumerate(zip(a, b))])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("with_observed", [False, True])
+def test_priced_at_unit_price_equals_unpriced(with_observed):
+    """price == 1 must reproduce the unpriced policy exactly — the elastic
+    scheduler's neutral price is a bitwise no-op, not an approximation."""
+    pol = AllocationPolicy(max_slowdown=0.05)
+    a, b = _sweep_params(seed=21)
+    obs = (np.random.RandomState(22).randint(1, 7000, a.size)
+           if with_observed else None)
+    got = choose_tokens_priced_batch(a, b, pol, np.ones(a.size), obs)
+    want = choose_tokens_batch(a, b, pol, obs)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_priced_decisions_monotone_in_price():
+    """Higher price never buys more tokens (per query, elementwise)."""
+    pol = AllocationPolicy(max_slowdown=0.05)
+    a, b = _sweep_params(seed=31)
+    obs = np.random.RandomState(32).randint(1, 7000, a.size)
+    prev = None
+    for price in (1.0, 2.0, 4.0, 8.0, 16.0):
+        toks = choose_tokens_priced_batch(a, b, pol, np.full(a.size, price),
+                                          obs)
+        if prev is not None:
+            assert np.all(toks <= prev), price
+        prev = toks
 
 
 @pytest.mark.parametrize("max_slowdown", [0.0, 0.05, 0.3])

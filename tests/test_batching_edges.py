@@ -117,6 +117,59 @@ def test_flush_on_timeout_ordering():
     assert mb.poll() == {12: 12}
 
 
+def test_batch_arriving_exactly_at_max_wait():
+    """Edge case (satellite): a request submitted at the exact instant the
+    oldest request's wait hits ``max_wait_s`` joins that flush (deadline is
+    inclusive), the flush drains both in submission order, and the timeout
+    epoch restarts cleanly — the next submission starts a fresh window
+    instead of inheriting the expired one."""
+    svc = StubService()
+    clock = [0.0]
+    mb = MicroBatcher(svc, max_batch=64, max_wait_s=5.0,
+                      clock=lambda: clock[0])
+    mb.submit(_req(0, value=1))
+    clock[0] = 5.0                       # simultaneous: deadline + arrival
+    mb.submit(_req(1, value=2))
+    assert mb.due()                      # inclusive deadline
+    out = mb.poll()
+    assert list(out) == [0, 1]           # drained together, in order
+    assert svc.batch_sizes == [2]
+    # the window restarts at the *next* submission's clock, not t=0's
+    mb.submit(_req(2, value=3))
+    clock[0] = 9.999
+    assert not mb.due()
+    clock[0] = 10.0
+    assert mb.poll() == {2: 12}
+
+
+def test_timeout_flush_preserves_global_submission_order():
+    """Queue-drain ordering under simultaneous expiry: when requests with
+    interleaved input signatures (flat vs. graph buckets) all expire in one
+    timeout flush, results come back in global submission order — not
+    grouped by signature."""
+    svc = StubService()
+    clock = [0.0]
+    mb = MicroBatcher(svc, max_batch=64, max_wait_s=5.0,
+                      clock=lambda: clock[0])
+
+    def graph_req(i, n_nodes, value):
+        return AllocationRequest(
+            request_id=i,
+            model_in={"features": np.full((n_nodes, 2), value, np.float64),
+                      "adj": np.eye(n_nodes), "mask": np.ones(n_nodes)})
+
+    mb.submit(_req(10, value=1))         # flat
+    mb.submit(graph_req(11, 3, 2.0))     # graph bucket 8
+    mb.submit(_req(12, value=3))         # flat
+    mb.submit(graph_req(13, 20, 4.0))    # graph bucket 32
+    clock[0] = 5.0
+    out = mb.poll()
+    assert list(out) == [10, 11, 12, 13]         # submission order, not
+    assert len(svc.batch_sizes) == 3             # ... the 3 signature groups
+    assert out == {10: 4, 11: 3 * 2 * 2, 12: 12, 13: 20 * 2 * 4}
+    assert len(mb) == 0 and not mb.due()
+
+
 def test_full_queue_is_due_without_timeout():
     svc = StubService()
     mb = MicroBatcher(svc, max_batch=2, max_wait_s=1000.0, clock=lambda: 0.0)

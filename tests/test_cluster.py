@@ -5,6 +5,7 @@ import pytest
 
 from repro.cluster import (
     ClusterConfig,
+    ClusterMetrics,
     ClusterSimulator,
     PCCCache,
     TokenPool,
@@ -123,6 +124,101 @@ def test_pcc_cache_refinement_matches_scalar_fit():
     assert a_l[0] == a[0] and b_l[0] == b[0]
 
 
+def _refine_one(cache, key, sky, tokens):
+    sky = np.asarray(sky, np.float32)
+    return cache.refine_batch(
+        np.array([key]), sky[None, :], np.array([len(sky)], np.int32),
+        np.array([tokens]), np.array([int(sky.max())]))
+
+
+def test_pcc_cache_refits_on_drifted_volume():
+    """Regression (satellite): a recurring template whose data volume drifts
+    must be *refit*, not served from the stale curve — the drifted lookup is
+    a miss, the entry is evicted, and the next refine stores the new fit."""
+    trace = TraceGenerator(seed=9, n_unique=4, rate_qps=2.0).generate(4)
+    sky = trace.skylines[0].astype(np.float32)
+    tok = trace.jobs[0].default_tokens
+    cache = PCCCache(drift_tol=0.25)
+    a0, b0 = _refine_one(cache, 0, sky, tok)
+    # same volume: hit, same curve
+    hit, a_l, _ = cache.lookup(np.array([0]), areas=np.array([sky.sum()]))
+    assert hit.tolist() == [True] and a_l[0] == a0[0]
+    # the fresh day of data is 2x the volume: the cached curve is stale
+    drifted = np.concatenate([sky, sky]).astype(np.float32)
+    hit, _, _ = cache.lookup(np.array([0]),
+                             areas=np.array([float(drifted.sum())]))
+    assert hit.tolist() == [False]
+    assert cache.stats["stale"] == 1 and 0 not in cache
+    a1, b1 = _refine_one(cache, 0, drifted, tok)
+    assert (a1[0], b1[0]) != (a0[0], b0[0])      # refit, not the stale curve
+    hit, a_l, b_l = cache.lookup(np.array([0]),
+                                 areas=np.array([float(drifted.sum())]))
+    assert hit.tolist() == [True]
+    assert a_l[0] == a1[0] and b_l[0] == b1[0]
+    # within-tolerance jitter does not thrash the entry
+    hit, _, _ = cache.lookup(np.array([0]),
+                             areas=np.array([float(drifted.sum()) * 1.1]))
+    assert hit.tolist() == [True]
+
+
+def test_pcc_cache_duplicate_key_divergent_areas():
+    """Regression: one lookup batch referencing the same key twice — once
+    with a stale area, once fresh — must miss on *both* rows after the
+    eviction, never resolve the survivor to a neighboring entry's curve."""
+    trace = TraceGenerator(seed=9, n_unique=4, rate_qps=2.0).generate(4)
+    cache = PCCCache(drift_tol=0.25)
+    for u in (0, 1):
+        _refine_one(cache, u, trace.skylines[u], trace.jobs[u].default_tokens)
+    area1 = float(trace.skylines[1].sum())
+    hit, a_l, _ = cache.lookup(np.array([1, 1]),
+                               areas=np.array([area1 * 10, area1]))
+    assert hit.tolist() == [False, False]
+    assert a_l.tolist() == [0.0, 0.0]
+    assert 1 not in cache and 0 in cache
+
+
+def test_pcc_cache_lru_eviction_bound():
+    trace = TraceGenerator(seed=9, n_unique=4, rate_qps=2.0).generate(4)
+    cache = PCCCache(max_entries=2)
+    for u in (0, 1):
+        _refine_one(cache, u, trace.skylines[u],
+                    trace.jobs[u].default_tokens)
+    cache.lookup(np.array([0]))                  # 0 is now fresher than 1
+    _refine_one(cache, 2, trace.skylines[2], trace.jobs[2].default_tokens)
+    assert len(cache) == 2
+    assert 0 in cache and 2 in cache and 1 not in cache
+    assert cache.stats["evicted"] == 1
+    assert cache.missing(np.array([0, 1, 2])).tolist() == [False, True, False]
+
+
+# ------------------------------------------------------------------ metrics --
+def test_metrics_slack_histogram_and_resize_counters():
+    m = ClusterMetrics(capacity=100, sla_limits=np.array([2.0]))
+    m.record_completions(
+        arrival_s=np.zeros(4), start_s=np.zeros(4),
+        finish_s=np.array([10.0, 20.0, 30.0, 40.0]),
+        tokens=np.array([5, 5, 5, 5]), default_tokens=np.array([8, 8, 8, 8]),
+        runtime_s=np.array([10, 20, 30, 40]),
+        ideal_runtime_s=np.array([10, 10, 10, 10]),
+        sla=np.zeros(4, np.int64), tenant=np.zeros(4, np.int64),
+        cache_hit=np.zeros(4, bool), repeat=np.zeros(4, bool),
+        alloc_error=np.zeros(4),
+        cost_token_s=np.array([50.0, 100.0, 150.0, 200.0]),
+        price=np.array([1.0, 2.0, 3.0, 4.0]),
+        slack_s=np.array([-5.0, 5.0, 15.0, np.inf]))
+    m.record_resizes(shrunk=3, reclaimed=40)
+    m.record_resizes(grown=2, granted=10)
+    rep = m.report()
+    assert rep["cost_token_s"] == 500.0          # accrued, not tokens*runtime
+    assert rep["resize_shrinks"] == 3 and rep["tokens_reclaimed"] == 40
+    assert rep["resize_grows"] == 2 and rep["tokens_granted"] == 10
+    assert rep["mean_price"] == 2.5
+    assert rep["deadline_miss_rate"] == round(1 / 3, 4)       # finite slacks
+    edges, counts = m.slack_histogram(bins=4)
+    assert counts.sum() == 3                     # inf slack excluded
+    assert edges[0] == -5.0 and edges[-1] == 15.0
+
+
 # ---------------------------------------------------------------- simulator --
 @pytest.fixture(scope="module")
 def service():
@@ -210,6 +306,47 @@ def test_frontend_wires_into_simulator(service):
     rep = fe.run_cluster(small, ClusterConfig(capacity=16384))
     assert rep.metrics["n_completed"] == len(small)
     assert "sla_violation_rate" in rep.metrics
+
+
+def test_edf_elastic_scheduler_end_to_end(service, trace):
+    """Tentpole: EDF admission + lease resizing + per-class repricing must
+    complete the trace, actually resize leases, price above neutral under
+    contention, and cut total token-cost vs. the priority/fixed policy."""
+    base = ClusterSimulator(service, ClusterConfig(capacity=4096)).run(trace)
+    edf = ClusterSimulator(service, ClusterConfig(
+        capacity=4096, admission="edf", elastic=True,
+        pricing="elastic")).run(trace)
+    for rep in (base, edf):
+        assert rep.metrics["n_completed"] + rep.metrics["n_rejected"] \
+            == len(trace)
+    m = edf.metrics
+    assert m["resize_shrinks"] > 0               # the pool was pressured
+    assert m["tokens_reclaimed"] > 0
+    assert m["mean_price"] > 1.0                 # contention priced in
+    assert m["cost_token_s"] < base.metrics["cost_token_s"]
+    # slack accounting flows through to the report
+    assert "mean_slack_s" in m and "deadline_miss_rate" in m
+    for cls in (0, 1, 2):
+        assert f"cost_token_s_class{cls}" in m
+
+
+def test_deterministic_replay_same_seed_same_policy(service):
+    """Satellite: same seed + same policy -> identical ClusterMetrics
+    series, for the elastic scheduler as well as the fixed baseline."""
+    trace = TraceGenerator(seed=55, n_unique=16, rate_qps=1.0).generate(300)
+    for cfg in (ClusterConfig(capacity=4096),
+                ClusterConfig(capacity=4096, admission="edf", elastic=True,
+                              pricing="elastic")):
+        r1 = ClusterSimulator(service, cfg).run(trace)
+        r2 = ClusterSimulator(service, cfg).run(trace)
+        m1, m2 = dict(r1.metrics), dict(r2.metrics)
+        assert m1 == m2
+        t1, e1 = r1.error_series
+        t2, e2 = r2.error_series
+        np.testing.assert_array_equal(t1, t2)
+        np.testing.assert_array_equal(e1, e2)
+        np.testing.assert_array_equal(r1.alloc_errors, r2.alloc_errors)
+        np.testing.assert_array_equal(r1.cache_hits, r2.cache_hits)
 
 
 def test_simulator_replays_10k_trace(service):

@@ -38,6 +38,13 @@ def test_cluster_sim():
     assert "queries in" in out and "cache path" in out
 
 
+def test_cluster_sim_edf_elastic():
+    out = _run("cluster_sim.py", "--events", "400", "--n-train", "120",
+               "--n-unique", "32", "--admission", "edf", "--elastic",
+               "--pricing", "elastic")
+    assert "vs priority/fixed baseline" in out and "mean price" in out
+
+
 def test_train_lm_short():
     out = _run("train_lm.py", "--steps", "6", "--seq-len", "32",
                "--global-batch", "2", "--ckpt-dir", "/tmp/tlm_test_ckpt")

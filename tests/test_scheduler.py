@@ -1,0 +1,173 @@
+"""Scheduler layer: admission orderings, price signal, deadline floor, pool
+resize invariants, and trace deadlines (repro.cluster.scheduler / pool).
+
+Randomized trials here are seeded loops that always run; the hypothesis
+property sweeps over the same invariants live in
+tests/test_scheduler_props.py and skip cleanly when hypothesis is absent.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import TokenPool
+from repro.cluster.scheduler import (
+    EdfPolicy,
+    FifoPolicy,
+    PriceSignal,
+    PriorityPolicy,
+    QueueView,
+    deadline_floor,
+    make_policy,
+)
+from repro.workloads import TraceGenerator
+
+
+def _view(rng, q):
+    return QueueView(
+        ids=np.arange(q, dtype=np.int64),
+        arrival_s=rng.integers(0, 5, q).astype(np.float64),
+        priority=rng.integers(0, 3, q),
+        slack_s=rng.integers(-50, 50, q).astype(np.float64))
+
+
+# ----------------------------------------------------------------- policies --
+def test_policy_registry_and_exact_orders():
+    v = QueueView(ids=np.array([0, 1, 2, 3]),
+                  arrival_s=np.array([3.0, 1.0, 1.0, 2.0]),
+                  priority=np.array([0, 2, 1, 0]),
+                  slack_s=np.array([9.0, -4.0, 5.0, 5.0]))
+    assert list(v.ids[FifoPolicy().order(v)]) == [1, 2, 3, 0]
+    assert list(v.ids[PriorityPolicy().order(v)]) == [3, 0, 2, 1]
+    assert list(v.ids[EdfPolicy().order(v)]) == [1, 2, 3, 0]
+    for name in ("fifo", "priority", "edf"):
+        assert make_policy(name).name == name
+    with pytest.raises(AssertionError):
+        make_policy("lifo")
+
+
+def test_edf_never_admits_ahead_of_smaller_slack():
+    """The satellite property: at equal arrival epoch, EDF never places a
+    query ahead of one with strictly smaller slack (and ties stay
+    deterministic), across random queues."""
+    rng = np.random.default_rng(0)
+    edf = EdfPolicy()
+    for _ in range(200):
+        v = _view(rng, int(rng.integers(1, 40)))
+        order = edf.order(v)
+        s = v.slack_s[order]
+        assert np.all(np.diff(s) >= 0)            # smaller slack first, always
+        ties = np.diff(s) == 0
+        assert np.all(np.diff(v.arrival_s[order])[ties] >= 0)
+        # determinism: same queue, same order
+        np.testing.assert_array_equal(order, edf.order(v))
+
+
+def test_edf_equal_arrival_epoch_strict_slack():
+    v = QueueView(ids=np.array([7, 8, 9]),
+                  arrival_s=np.zeros(3),          # one arrival epoch
+                  priority=np.array([2, 0, 1]),
+                  slack_s=np.array([10.0, 3.0, -1.0]))
+    assert list(v.ids[EdfPolicy().order(v)]) == [9, 8, 7]
+
+
+# ------------------------------------------------------------- price signal --
+def test_price_signal_neutral_rising_capped():
+    sig = PriceSignal(n_classes=3, gamma=8.0, cap=16.0)
+    idle = sig.prices(np.zeros(3), 1000)
+    np.testing.assert_array_equal(idle, np.ones(3))   # neutral at zero demand
+    p1 = sig.prices(np.array([100.0, 0.0, 0.0]), 1000)
+    p2 = sig.prices(np.array([300.0, 0.0, 0.0]), 1000)
+    assert p2[0] > p1[0] > 1.0 and p1[1] == 1.0       # per-class, rising
+    q = sig.prices(np.array([100.0, 0.0, 0.0]), 1000,
+                   queued_by_class=np.array([200.0, 0.0, 0.0]))
+    assert q[0] == p2[0]                              # queued demand counts
+    full = sig.prices(np.array([1e9, 0.0, 0.0]), 1000)
+    assert full[0] == 16.0                            # hard ceiling
+
+
+def test_deadline_floor_guards_predicted_miss():
+    a = np.array([-1.0, -1.0, -0.5])
+    b = np.array([100.0, 100.0, 60.0])
+    cap = np.array([50, 50, 40], np.int64)
+    # rt(A) = b * A^a <= slack  requires  A >= (slack/b)^(1/a)
+    floor = deadline_floor(a, b, np.array([10.0, 1e9, 4.0]), cap)
+    assert floor[0] == 10          # needs 10 tokens to finish in 10 s
+    assert floor[1] == 1           # huge slack: no floor
+    assert floor[2] == 40          # infeasible slack: capped at the perf ask
+    rt = b * np.maximum(floor, 1.0) ** a
+    assert rt[0] <= 10.0
+
+
+# ------------------------------------------------------- pool conservation --
+def _pool_invariant(pool):
+    live = pool._tokens[pool._tokens > 0]
+    assert pool.in_use == int(live.sum())
+    assert pool.in_use + pool.free == pool.capacity
+    assert 0 <= pool.in_use <= pool.capacity
+
+
+def test_pool_resize_shrink_grow_exact():
+    pool = TokenPool(100, max_leases=8)
+    pool.acquire_batch(np.array([5, 6]), np.array([60, 30]),
+                       np.array([50.0, 70.0]))
+    _pool_invariant(pool)
+    pool.resize_batch(np.array([5]), np.array([20]), np.array([90.0]))
+    assert pool.free == 50 and pool.n_active == 2
+    _pool_invariant(pool)
+    pool.resize_batch(np.array([6, 5]), np.array([70, 25]),
+                      np.array([40.0, 80.0]))
+    assert pool.free == 5
+    _pool_invariant(pool)
+    qids, toks = pool.expire(45.0)
+    assert list(qids) == [6] and list(toks) == [70]
+    _pool_invariant(pool)
+    with pytest.raises(AssertionError):          # over-grow is a bug
+        pool.resize_batch(np.array([5]), np.array([200]), np.array([99.0]))
+    with pytest.raises(AssertionError):          # resizing a dead lease too
+        pool.resize_batch(np.array([6]), np.array([10]), np.array([99.0]))
+
+
+def test_pool_conservation_under_random_resize_expiry():
+    """The satellite invariant: sum of live leases + free tokens == capacity
+    across random acquire / resize / expire sequences."""
+    rng = np.random.default_rng(42)
+    for trial in range(20):
+        cap = int(rng.integers(50, 500))
+        pool = TokenPool(cap, max_leases=64)
+        now, next_id = 0.0, 0
+        for _ in range(40):
+            op = rng.random()
+            live_ids = pool._query[pool._tokens > 0]
+            if op < 0.45 and pool.free > 0:
+                k = int(rng.integers(1, 4))
+                toks = rng.integers(1, max(pool.free // k, 1) + 1, k)
+                if int(toks.sum()) <= pool.free:
+                    ids = np.arange(next_id, next_id + k)
+                    next_id += k
+                    pool.acquire_batch(ids, toks,
+                                       now + rng.integers(1, 50, k).astype(float))
+            elif op < 0.8 and live_ids.size:
+                k = int(rng.integers(1, live_ids.size + 1))
+                sel = rng.choice(live_ids, size=k, replace=False)
+                cur = pool._tokens[np.isin(pool._query, sel)
+                                   & (pool._tokens > 0)]
+                budget = pool.free + int(cur.sum())
+                new = rng.integers(1, max(budget // k, 1) + 1, k)
+                if int(new.sum()) - int(cur.sum()) <= pool.free:
+                    pool.resize_batch(sel, new,
+                                      now + rng.integers(1, 50, k).astype(float))
+            else:
+                now += float(rng.integers(1, 30))
+                pool.expire(now)
+            _pool_invariant(pool)
+
+
+# -------------------------------------------------------------- trace SLAs --
+def test_trace_deadlines_consistent_with_sla():
+    trace = TraceGenerator(seed=11, n_unique=8, rate_qps=2.0).generate(100)
+    cols = trace.arrays()
+    limits = np.array([c.slowdown_limit for c in trace.sla_classes])
+    ideal = np.array([len(s) for s in trace.skylines], np.float64)
+    np.testing.assert_allclose(
+        cols["deadline_s"],
+        cols["arrival_s"] + limits[cols["sla"]] * ideal[cols["job_index"]])
+    assert np.all(cols["deadline_s"] > cols["arrival_s"])

@@ -1,0 +1,88 @@
+"""Property-based sweeps for the scheduler layer (hypothesis).
+
+The same invariants as the seeded trials in tests/test_scheduler.py —
+EDF admission order and token-pool conservation across resize/expiry —
+driven by hypothesis-generated queues and operation sequences. Skips
+cleanly when hypothesis is absent (see requirements.txt).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.cluster import TokenPool
+from repro.cluster.scheduler import EdfPolicy, QueueView
+
+
+@st.composite
+def queues(draw):
+    q = draw(st.integers(1, 64))
+    arrivals = draw(hnp.arrays(np.float64, q,
+                               elements=st.integers(0, 6).map(float)))
+    slacks = draw(hnp.arrays(np.float64, q,
+                             elements=st.integers(-100, 100).map(float)))
+    prios = draw(hnp.arrays(np.int64, q, elements=st.integers(0, 2)))
+    return QueueView(ids=np.arange(q, dtype=np.int64), arrival_s=arrivals,
+                     priority=prios, slack_s=slacks)
+
+
+@settings(deadline=None, max_examples=200)
+@given(queues())
+def test_edf_never_admits_ahead_of_smaller_slack(view):
+    """EDF property: in admission order, slack is non-decreasing — a query
+    is never placed ahead of one with strictly smaller slack, in particular
+    at equal arrival epoch; equal-slack ties keep arrival order."""
+    order = EdfPolicy().order(view)
+    s = view.slack_s[order]
+    assert np.all(np.diff(s) >= 0)
+    ties = np.diff(s) == 0
+    assert np.all(np.diff(view.arrival_s[order])[ties] >= 0)
+
+
+@st.composite
+def pool_ops(draw):
+    cap = draw(st.integers(10, 400))
+    ops = draw(st.lists(st.tuples(st.sampled_from(["acq", "resize", "exp"]),
+                                  st.integers(0, 2 ** 31 - 1)),
+                        min_size=1, max_size=60))
+    return cap, ops
+
+
+@settings(deadline=None, max_examples=100)
+@given(pool_ops())
+def test_pool_conservation_invariant(case):
+    """Across random acquire / resize / expire sequences: the sum of live
+    leases equals ``in_use`` and ``in_use + free == capacity`` — tokens are
+    neither minted nor leaked by partial release/grow."""
+    cap, ops = case
+    pool = TokenPool(cap, max_leases=128)
+    now, next_id = 0.0, 0
+    for kind, seed in ops:
+        rng = np.random.default_rng(seed)
+        live_ids = pool._query[pool._tokens > 0]
+        if kind == "acq" and pool.free > 0:
+            k = int(rng.integers(1, 4))
+            toks = rng.integers(1, max(pool.free // k, 1) + 1, k)
+            if int(toks.sum()) <= pool.free:
+                pool.acquire_batch(np.arange(next_id, next_id + k), toks,
+                                   now + rng.integers(1, 50, k).astype(float))
+                next_id += k
+        elif kind == "resize" and live_ids.size:
+            k = int(rng.integers(1, live_ids.size + 1))
+            sel = rng.choice(live_ids, size=k, replace=False)
+            cur_total = int(pool._tokens[np.isin(pool._query, sel)
+                                         & (pool._tokens > 0)].sum())
+            new = rng.integers(1, max((pool.free + cur_total) // k, 1) + 1, k)
+            if int(new.sum()) - cur_total <= pool.free:
+                pool.resize_batch(sel, new,
+                                  now + rng.integers(1, 50, k).astype(float))
+        else:
+            now += float(rng.integers(1, 30))
+            pool.expire(now)
+        live = pool._tokens[pool._tokens > 0]
+        assert pool.in_use == int(live.sum())
+        assert pool.in_use + pool.free == pool.capacity
