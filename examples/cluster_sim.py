@@ -11,11 +11,16 @@ serving stack, end to end.
   5. optionally switch the scheduler: --admission edf --elastic
      --pricing elastic replays the same trace under deadline-aware EDF
      admission with lease resizing and per-SLA-class repricing, and prints
-     the cost / SLA delta vs. the priority/fixed baseline.
+     the cost / SLA delta vs. the priority/fixed baseline,
+  6. optionally shard the fabric: --shards K replays through K racks behind
+     consistent-hash routing (--load-factor tunes the router's bounded-load
+     factor) and prints the per-shard utilization / imbalance / spill
+     summary from the fabric metrics columns.
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py [--events 3000]
       PYTHONPATH=src python examples/cluster_sim.py --admission edf \
           --elastic --pricing elastic
+      PYTHONPATH=src python examples/cluster_sim.py --shards 4
 """
 import argparse
 
@@ -41,7 +46,13 @@ def main() -> None:
                     help="resize running leases under pressure / idleness")
     ap.add_argument("--pricing", default="fixed",
                     choices=("fixed", "elastic"))
+    ap.add_argument("--shards", type=int, default=1,
+                    help="replicas in the sharded serving fabric")
+    ap.add_argument("--load-factor", type=float, default=1.25,
+                    help="router bounded-load factor (>= 1)")
     args = ap.parse_args()
+    if args.shards < 1:
+        ap.error("--shards must be >= 1")
 
     print("training the cold-path PCC model ...")
     pipe = TasqPipeline(TasqConfig(n_train=args.n_train, n_eval=60,
@@ -57,15 +68,31 @@ def main() -> None:
 
     service = AllocationService(pipe.models["nn:lf2"],
                                 AllocationPolicy(max_slowdown=0.05))
-    frontend = AllocationFrontend(service)
+    frontend = AllocationFrontend(service, n_shards=args.shards)
+    capacity = 8192 // args.shards * args.shards   # equal per-shard slices
     report = frontend.run_cluster(
-        trace, ClusterConfig(capacity=8192), admission=args.admission,
-        elastic=args.elastic, pricing=args.pricing)
+        trace, ClusterConfig(capacity=capacity, n_shards=args.shards,
+                             load_factor=args.load_factor),
+        admission=args.admission, elastic=args.elastic, pricing=args.pricing)
 
     print(f"\n{report.summary()}")
     m = report.metrics
+    if args.shards > 1:
+        utils = [m.get(f"utilization_shard{k}", 0.0)
+                 for k in range(args.shards)]
+        print(f"  fabric: {args.shards} shards | per-shard util "
+              + " ".join(f"{u:.2f}" for u in utils)
+              + f" | imbalance {m.get('shard_imbalance', 1.0):.2f}x"
+              + f" | spilled {m.get('n_spilled', 0)} "
+              f"({m.get('spill_rate', 0.0):.1%})")
+        shares = [r["queries"] for r in report.replica_stats]
+        print(f"  decisions per replica: {shares}")
     if args.admission != "priority" or args.elastic or args.pricing != "fixed":
-        base = frontend.run_cluster(trace, ClusterConfig(capacity=8192))
+        # same fabric topology, scheduler knobs at defaults: the printed
+        # delta isolates the scheduler change, not the sharding change
+        base = frontend.run_cluster(
+            trace, ClusterConfig(capacity=capacity, n_shards=args.shards,
+                                 load_factor=args.load_factor))
         bm = base.metrics
         print(f"  vs priority/fixed baseline: "
               f"cost cut {1 - m['cost_token_s']/bm['cost_token_s']:.1%}, "

@@ -1,22 +1,28 @@
-"""Cluster layer: trace-driven multi-tenant simulation with online PCC
-refinement.
+"""Cluster layer: trace-driven multi-tenant simulation over a sharded
+serving fabric with online PCC refinement.
 
 ``ClusterSimulator`` replays a ``repro.workloads.Trace`` (bursty arrivals,
 Zipf-repeated queries, per-tenant SLA classes) through a batched
-``AllocationService`` against a finite ``TokenPool`` with admission control
-and pluggable queueing (``scheduler``: fifo / priority / EDF over SLA
-slack), elastic lease resizing (AREPAS re-simulation of running queries'
-remaining work under pool pressure or idleness), and a per-SLA-class price
-signal that slides pressured classes to the cost-optimal point of their
-PCC. Completed queries are AREPAS-refined into a ``PCCCache`` — the paper's
-"past observed" path — so repeat traffic bypasses the learned model;
+``ShardedAllocationService`` against K finite token-pool shards
+(``PoolShards``) with per-shard admission control and pluggable queueing
+(``scheduler``: fifo / priority / EDF over SLA slack), elastic lease
+resizing (AREPAS re-simulation of running queries' remaining work under
+pool pressure or idleness), and a per-(shard, SLA-class) price signal that
+slides pressured classes to the cost-optimal point of their PCC. A
+consistent-hash ``Router`` pins each query template to a home shard —
+repeat traffic keeps hitting the shard whose ``ShardedPCCCache`` already
+holds its exact PCC (the paper's "past observed" path) — and spills to the
+better of two hash choices only when the home rack saturates.
 ``ClusterMetrics`` tracks cost (exact across resizes), utilization, p50/p99
-slowdown, SLA violations, deadline slack, queue depth, and
-model-vs-history allocation error over time.
+slowdown, SLA violations, deadline slack, queue depth, model-vs-history
+allocation error over time, and the fabric columns: per-shard utilization,
+spill rate, and imbalance. The single-pool simulator is the K=1 run of the
+same loop.
 """
 from repro.cluster.metrics import ClusterMetrics
-from repro.cluster.pcc_cache import PCCCache
-from repro.cluster.pool import TokenPool
+from repro.cluster.pcc_cache import PCCCache, ShardedPCCCache
+from repro.cluster.pool import PoolShards, TokenPool
+from repro.cluster.router import Router
 from repro.cluster.scheduler import (
     EdfPolicy,
     FifoPolicy,
@@ -36,10 +42,13 @@ __all__ = [
     "EdfPolicy",
     "FifoPolicy",
     "PCCCache",
+    "PoolShards",
     "PriceSignal",
     "PriorityPolicy",
     "QueueView",
+    "Router",
     "SchedulerPolicy",
+    "ShardedPCCCache",
     "TokenPool",
     "make_policy",
 ]

@@ -12,6 +12,13 @@ it), the decision-time ``price``, and the ``slack_s`` left at finish;
 ``record_resizes`` accumulates shrink/grow counts and reclaimed/granted
 tokens; ``report()`` adds per-class cost and slack aggregates and
 ``slack_histogram()`` exposes the finish-slack distribution.
+
+Fabric-layer accounting (PR 4): completions carry the executing ``shard``
+rank and whether the query was ``spilled`` off its home shard; epoch
+samples carry the (K,) per-shard pool occupancy. With ``n_shards > 1``,
+``report()`` adds per-shard utilization columns, the ``spill_rate``, and
+``shard_imbalance`` (mean over busy epochs of the max/mean occupancy ratio
+— 1.0 is a perfectly balanced fabric).
 """
 from __future__ import annotations
 
@@ -41,20 +48,29 @@ class _Columns:
     cost_token_s: List[float] = dataclasses.field(default_factory=list)
     price: List[float] = dataclasses.field(default_factory=list)
     slack_s: List[float] = dataclasses.field(default_factory=list)
+    shard: List[int] = dataclasses.field(default_factory=list)
+    spilled: List[bool] = dataclasses.field(default_factory=list)
 
 
 class ClusterMetrics:
     """Collects per-query and per-epoch statistics for one simulation run."""
 
     def __init__(self, capacity: int,
-                 sla_limits: Optional[np.ndarray] = None):
+                 sla_limits: Optional[np.ndarray] = None,
+                 n_shards: int = 1,
+                 capacity_per_shard: Optional[int] = None):
         self.capacity = capacity
+        self.n_shards = int(n_shards)
+        self.capacity_per_shard = (capacity // self.n_shards
+                                   if capacity_per_shard is None
+                                   else int(capacity_per_shard))
         self.sla_limits = (None if sla_limits is None
                            else np.asarray(sla_limits, np.float64))
         self._q = _Columns()
         self._epoch_t: List[float] = []
         self._epoch_queue_depth: List[int] = []
         self._epoch_in_use: List[int] = []
+        self._epoch_in_use_shard: List[np.ndarray] = []
         self._epoch_alloc_err: List[float] = []
         self.n_rejected = 0
         self.n_shrunk = 0
@@ -75,12 +91,13 @@ class ClusterMetrics:
                            default_tokens, runtime_s, ideal_runtime_s, sla,
                            tenant, cache_hit, repeat, alloc_error,
                            cost_token_s=None, price=None,
-                           slack_s=None) -> None:
+                           slack_s=None, shard=None, spilled=None) -> None:
         """Append a batch of completed queries (parallel arrays).
 
         ``cost_token_s`` defaults to tokens * runtime (exact when leases are
         never resized); ``price`` defaults to 1 (fixed pricing); ``slack_s``
-        defaults to +inf (no deadline).
+        defaults to +inf (no deadline); ``shard`` (executing shard rank)
+        defaults to 0 and ``spilled`` to False (single-rack).
         """
         c = self._q
         n = np.asarray(arrival_s).size
@@ -91,6 +108,12 @@ class ClusterMetrics:
             price = np.ones(n)
         if slack_s is None:
             slack_s = np.full(n, np.inf)
+        if shard is None:
+            shard = np.zeros(n, np.int64)
+        if spilled is None:
+            spilled = np.zeros(n, bool)
+        c.shard.extend(np.asarray(shard, np.int64).tolist())
+        c.spilled.extend(np.asarray(spilled, bool).tolist())
         c.cost_token_s.extend(np.asarray(cost_token_s, np.float64).tolist())
         c.price.extend(np.asarray(price, np.float64).tolist())
         c.slack_s.extend(np.asarray(slack_s, np.float64).tolist())
@@ -108,10 +131,14 @@ class ClusterMetrics:
         c.alloc_error.extend(np.asarray(alloc_error, np.float64).tolist())
 
     def sample_epoch(self, now: float, queue_depth: int, in_use: int,
-                     epoch_alloc_errors: np.ndarray) -> None:
+                     epoch_alloc_errors: np.ndarray,
+                     in_use_shard: Optional[np.ndarray] = None) -> None:
         self._epoch_t.append(float(now))
         self._epoch_queue_depth.append(int(queue_depth))
         self._epoch_in_use.append(int(in_use))
+        if in_use_shard is not None:
+            self._epoch_in_use_shard.append(
+                np.asarray(in_use_shard, np.int64).copy())
         errs = np.asarray(epoch_alloc_errors, np.float64)
         self._epoch_alloc_err.append(float(np.mean(errs)) if errs.size
                                      else np.nan)
@@ -215,4 +242,32 @@ class ClusterMetrics:
             if np.any(mask):
                 out[f"alloc_error_{name}"] = round(
                     float(np.mean(d["alloc_error"][mask])), 4)
+        if self.n_shards > 1:
+            out.update(self.shard_report(d, makespan))
+        return out
+
+    def shard_report(self, d: Optional[Dict[str, np.ndarray]] = None,
+                     makespan: Optional[float] = None) -> Dict[str, float]:
+        """Fabric columns: per-shard utilization, spill rate, imbalance."""
+        d = self._cols() if d is None else d
+        if makespan is None:
+            makespan = (float(np.max(d["finish_s"])) if d["finish_s"].size
+                        else 0.0)
+        out: Dict[str, float] = {
+            "n_spilled": int(np.sum(d["spilled"])),
+            "spill_rate": round(float(np.mean(d["spilled"]))
+                                if d["spilled"].size else 0.0, 4),
+        }
+        denom = max(self.capacity_per_shard * makespan, 1e-9)
+        for k in range(self.n_shards):
+            m = d["shard"] == k
+            out[f"utilization_shard{k}"] = round(
+                float(np.sum(d["cost_token_s"][m])) / denom, 4)
+        if self._epoch_in_use_shard:
+            occ = np.asarray(self._epoch_in_use_shard, np.float64)  # (E, K)
+            busy = occ.sum(axis=1) > 0
+            if np.any(busy):
+                occ = occ[busy]
+                out["shard_imbalance"] = round(float(np.mean(
+                    occ.max(axis=1) / np.maximum(occ.mean(axis=1), 1e-9))), 3)
         return out

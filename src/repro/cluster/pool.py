@@ -1,15 +1,21 @@
-"""Finite global token pool with lease-based accounting.
+"""Sharded token pools with lease-based accounting.
 
-The cluster's shared resource: a fixed capacity of tokens, out of which each
-admitted query leases its allocation for the duration of its (simulated)
-execution. Lease state lives in fixed-size arrays so the per-epoch expiry
-scan — find every lease that ended by ``now``, return the freed tokens and
-their query ids — is one jitted jnp kernel over the whole table, compiled
-once per table size (the same static-shape discipline as the serving layer).
+The cluster's shared resource, generalized to K racks: each shard owns a
+fixed ``capacity_per_shard`` tokens out of which admitted queries lease
+their allocation for the duration of their (simulated) execution. Lease
+state lives in one stacked (K, max_leases) table per column, so the
+per-epoch expiry scan — find every lease on *any* shard that ended by
+``now`` — is a single jitted jnp kernel over the whole fabric, and
+cross-shard lease resizing is one scatter into the flattened table. Same
+static-shape discipline as the serving layer: one compiled executable per
+table shape, reused every epoch.
+
+``TokenPool`` (the PR-2 single-pool API) is the K=1 special case: a thin
+view over a one-shard ``PoolShards`` — not a parallel implementation.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,18 +24,19 @@ from jax.experimental import enable_x64
 
 from repro.serve.batching import node_bucket
 
-__all__ = ["TokenPool"]
+__all__ = ["PoolShards", "TokenPool"]
 
 
 @jax.jit
 def _expire_kernel(end_s: jax.Array, tokens: jax.Array, now: jax.Array
                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One vectorized expiry scan over the lease table.
+    """One vectorized expiry scan over the stacked (K, L) lease tables.
 
-    Returns (expired mask, freed token total, new end_s, new tokens).
+    Returns (expired mask, per-shard freed token totals, new end_s, new
+    tokens).
     """
     expired = (tokens > 0) & (end_s <= now)
-    freed = jnp.sum(jnp.where(expired, tokens, 0))
+    freed = jnp.sum(jnp.where(expired, tokens, 0), axis=-1)
     return (expired, freed,
             jnp.where(expired, jnp.inf, end_s),
             jnp.where(expired, 0, tokens))
@@ -39,7 +46,8 @@ def _expire_kernel(end_s: jax.Array, tokens: jax.Array, now: jax.Array
 def _resize_kernel(end_s: jax.Array, tokens: jax.Array, slots: jax.Array,
                    new_tokens: jax.Array, new_end_s: jax.Array
                    ) -> Tuple[jax.Array, jax.Array]:
-    """Partial lease release / grow: one scatter over the lease table.
+    """Cross-shard partial lease release / grow: one scatter over the
+    flattened (K*L,) lease table (``slots`` are flat shard*L + slot indices).
 
     ``slots`` may contain duplicates from padding — duplicated slots carry
     identical values, so the scatter is idempotent.
@@ -47,115 +55,222 @@ def _resize_kernel(end_s: jax.Array, tokens: jax.Array, slots: jax.Array,
     return end_s.at[slots].set(new_end_s), tokens.at[slots].set(new_tokens)
 
 
-class TokenPool:
-    """Global token pool: ``capacity`` tokens shared by up to ``max_leases``
-    concurrently running queries."""
+class PoolShards:
+    """K token pools behind one stacked lease table.
 
-    def __init__(self, capacity: int, max_leases: int = 4096):
-        assert capacity >= 1
-        self.capacity = int(capacity)
+    Each shard holds ``capacity_per_shard`` tokens shared by up to
+    ``max_leases`` concurrently running queries. Expiry runs over every
+    shard in one kernel call; acquire/resize take explicit shard *ranks*
+    (0..K-1). ``in_use`` / ``free`` are (K,) vectors.
+    """
+
+    def __init__(self, capacity_per_shard: int, n_shards: int = 1,
+                 max_leases: int = 4096):
+        assert capacity_per_shard >= 1 and n_shards >= 1
+        self.capacity = int(capacity_per_shard)
+        self.n_shards = int(n_shards)
         self.max_leases = int(max_leases)
-        self._end_s = np.full(max_leases, np.inf)
-        self._tokens = np.zeros(max_leases, np.int64)
-        self._query = np.full(max_leases, -1, np.int64)
-        self.in_use = 0
+        K = self.n_shards
+        self._end_s = np.full((K, max_leases), np.inf)
+        self._tokens = np.zeros((K, max_leases), np.int64)
+        self._query = np.full((K, max_leases), -1, np.int64)
+        self.in_use = np.zeros(K, np.int64)
 
     @property
-    def free(self) -> int:
+    def free(self) -> np.ndarray:
+        """(K,) free tokens per shard."""
         return self.capacity - self.in_use
 
     @property
     def n_active(self) -> int:
+        """Live leases across every shard."""
         return int(np.count_nonzero(self._tokens))
 
     def next_expiry(self) -> float:
-        """Earliest lease end time (inf if the pool is idle)."""
+        """Earliest lease end time on any shard (inf if the fabric is idle)."""
         return float(np.min(self._end_s))
 
-    def expire(self, now: float) -> Tuple[np.ndarray, np.ndarray]:
-        """Release every lease that ended by ``now``.
+    def expire(self, now: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Release every lease on every shard that ended by ``now``.
 
-        Returns (query ids, token counts) of the released leases.
+        One kernel over the stacked tables. Returns (shard ranks, query
+        ids, token counts) of the released leases, in (shard, slot) order.
         """
         with enable_x64():    # end times must keep float64 resolution
             expired, freed, end_s, tokens = _expire_kernel(
                 jnp.asarray(self._end_s), jnp.asarray(self._tokens),
                 jnp.asarray(float(now)))
         expired = np.asarray(expired)
-        qids = self._query[expired]
-        toks = self._tokens[expired]
+        sh, slot = np.nonzero(expired)
+        qids = self._query[sh, slot]
+        toks = self._tokens[sh, slot]
         # copies: jax buffers are read-only; dtypes pinned against downcasts
         self._end_s = np.asarray(end_s, np.float64).copy()
         self._tokens = np.asarray(tokens, np.int64).copy()
-        self._query[expired] = -1
-        self.in_use -= int(freed)
-        assert self.in_use >= 0, self.in_use
-        return qids, toks
+        self._query[sh, slot] = -1
+        self.in_use -= np.asarray(freed, np.int64)
+        assert np.all(self.in_use >= 0), self.in_use
+        return sh, qids, toks
 
-    def active(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Live leases as (query ids, tokens, end times), slot order."""
-        m = self._tokens > 0
-        return self._query[m].copy(), self._tokens[m].copy(), self._end_s[m].copy()
+    def active(self, shard: Optional[int] = None
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Live leases as (query ids, tokens, end times), slot order.
 
-    def resize_batch(self, query_ids: np.ndarray, new_tokens: np.ndarray,
-                     new_end_s: np.ndarray) -> None:
-        """Shrink or grow live leases in place (partial release / regrant).
+        ``shard`` restricts the view to one shard; ``None`` spans the fabric
+        in (shard, slot) order.
+        """
+        if shard is None:
+            m = self._tokens > 0
+            return (self._query[m].copy(), self._tokens[m].copy(),
+                    self._end_s[m].copy())
+        m = self._tokens[shard] > 0
+        return (self._query[shard, m].copy(), self._tokens[shard, m].copy(),
+                self._end_s[shard, m].copy())
 
-        ``new_tokens[i]`` (>= 1) replaces query ``query_ids[i]``'s lease and
-        its end time becomes ``new_end_s[i]`` — one scatter kernel over the
-        lease table, padded to a power-of-two bucket so repeat resizes reuse
-        a bounded set of compiled shapes. Net growth must fit the free pool;
+    def _slots_of(self, shard_of: np.ndarray, query_ids: np.ndarray
+                  ) -> np.ndarray:
+        """Flat (shard*L + slot) index of each live (shard, query) lease."""
+        flat = np.empty(query_ids.size, np.int64)
+        for s in np.unique(shard_of):
+            m = shard_of == s
+            live = np.flatnonzero(self._tokens[s] > 0)
+            order = np.argsort(self._query[s][live])
+            pos = np.searchsorted(self._query[s][live], query_ids[m],
+                                  sorter=order)
+            assert np.all(pos < live.size), "resize of an unknown query id"
+            slots = live[order[pos]]
+            assert np.array_equal(self._query[s][slots], query_ids[m]), \
+                "resize of an expired / unknown lease"
+            flat[m] = s * self.max_leases + slots
+        return flat
+
+    def resize_batch(self, shard_of: np.ndarray, query_ids: np.ndarray,
+                     new_tokens: np.ndarray, new_end_s: np.ndarray) -> None:
+        """Shrink or grow live leases in place across shards.
+
+        ``new_tokens[i]`` (>= 1) replaces query ``query_ids[i]``'s lease on
+        shard ``shard_of[i]`` and its end time becomes ``new_end_s[i]`` —
+        one scatter kernel over the flattened fabric table, padded to a
+        power-of-two bucket so repeat resizes reuse a bounded set of
+        compiled shapes. Net growth must fit each shard's free pool;
         resizing an id with no live lease is a caller bug.
         """
         k = len(query_ids)
         if k == 0:
             return
+        shard_of = np.asarray(shard_of, np.int64)
         query_ids = np.asarray(query_ids, np.int64)
         new_tokens = np.asarray(new_tokens, np.int64)
         new_end_s = np.asarray(new_end_s, np.float64)
         assert np.all(new_tokens >= 1), "shrink-to-zero is a release"
-        live = np.flatnonzero(self._tokens > 0)
-        order = np.argsort(self._query[live])
-        pos = np.searchsorted(self._query[live], query_ids, sorter=order)
-        assert np.all(pos < live.size), "resize of an unknown query id"
-        slots = live[order[pos]]
-        assert np.array_equal(self._query[slots], query_ids), \
-            "resize of an expired / unknown lease"
-        delta = int(np.sum(new_tokens - self._tokens[slots]))
-        assert delta <= self.free, (delta, self.free)
+        flat = self._slots_of(shard_of, query_ids)
+        old = self._tokens.reshape(-1)[flat]
+        delta = np.bincount(shard_of, weights=new_tokens - old,
+                            minlength=self.n_shards).astype(np.int64)
+        assert np.all(delta <= self.free), (delta, self.free)
 
-        # pad with slot[0] repeated (idempotent duplicate scatter) to a
+        # pad with flat[0] repeated (idempotent duplicate scatter) to a
         # power-of-two bucket: a bounded compiled-shape set, same policy as
         # the serving layer's
         kp = node_bucket(k)
-        slots_p = np.full(kp, slots[0], np.int64)
+        slots_p = np.full(kp, flat[0], np.int64)
         toks_p = np.full(kp, new_tokens[0], np.int64)
         ends_p = np.full(kp, new_end_s[0], np.float64)
-        slots_p[:k], toks_p[:k], ends_p[:k] = slots, new_tokens, new_end_s
+        slots_p[:k], toks_p[:k], ends_p[:k] = flat, new_tokens, new_end_s
         with enable_x64():    # end times must keep float64 resolution
             end_s, tokens = _resize_kernel(
-                jnp.asarray(self._end_s), jnp.asarray(self._tokens),
+                jnp.asarray(self._end_s.reshape(-1)),
+                jnp.asarray(self._tokens.reshape(-1)),
                 jnp.asarray(slots_p), jnp.asarray(toks_p),
                 jnp.asarray(ends_p))
-        self._end_s = np.asarray(end_s, np.float64).copy()
-        self._tokens = np.asarray(tokens, np.int64).copy()
+        shape = (self.n_shards, self.max_leases)
+        self._end_s = np.asarray(end_s, np.float64).reshape(shape).copy()
+        self._tokens = np.asarray(tokens, np.int64).reshape(shape).copy()
         self.in_use += delta
-        assert 0 <= self.in_use <= self.capacity, self.in_use
+        assert np.all((0 <= self.in_use) & (self.in_use <= self.capacity)), \
+            self.in_use
 
-    def acquire_batch(self, query_ids: np.ndarray, tokens: np.ndarray,
-                      end_s: np.ndarray) -> None:
-        """Lease ``tokens[i]`` for query ``query_ids[i]`` until ``end_s[i]``.
+    def acquire_batch(self, shard: int, query_ids: np.ndarray,
+                      tokens: np.ndarray, end_s: np.ndarray) -> None:
+        """Lease ``tokens[i]`` for query ``query_ids[i]`` until ``end_s[i]``
+        on shard rank ``shard``.
 
-        The caller guarantees the batch fits (sum(tokens) <= free).
+        The caller guarantees the batch fits (sum(tokens) <= free[shard]).
         """
         k = len(query_ids)
         if k == 0:
             return
         total = int(np.sum(tokens))
-        assert total <= self.free, (total, self.free)
-        slots = np.flatnonzero(self._tokens == 0)[:k]
+        assert total <= self.free[shard], (total, self.free[shard])
+        slots = np.flatnonzero(self._tokens[shard] == 0)[:k]
         assert len(slots) == k, "lease table full; raise max_leases"
-        self._end_s[slots] = end_s
-        self._tokens[slots] = tokens
-        self._query[slots] = query_ids
-        self.in_use += total
+        self._end_s[shard, slots] = end_s
+        self._tokens[shard, slots] = tokens
+        self._query[shard, slots] = query_ids
+        self.in_use[shard] += total
+
+
+class TokenPool:
+    """Single global token pool — the K=1 view over ``PoolShards``.
+
+    Keeps the PR-2 scalar API (``free``/``in_use`` ints, two-tuple
+    ``expire``) for callers that think in one rack.
+    """
+
+    def __init__(self, capacity: int, max_leases: int = 4096):
+        assert capacity >= 1
+        self._shards = PoolShards(capacity, 1, max_leases)
+
+    @property
+    def capacity(self) -> int:
+        return self._shards.capacity
+
+    @property
+    def max_leases(self) -> int:
+        return self._shards.max_leases
+
+    @property
+    def in_use(self) -> int:
+        return int(self._shards.in_use[0])
+
+    @property
+    def free(self) -> int:
+        return self._shards.capacity - int(self._shards.in_use[0])
+
+    @property
+    def n_active(self) -> int:
+        return self._shards.n_active
+
+    @property
+    def _tokens(self) -> np.ndarray:
+        """(max_leases,) lease-table view (invariant checks in tests)."""
+        return self._shards._tokens[0]
+
+    @property
+    def _end_s(self) -> np.ndarray:
+        return self._shards._end_s[0]
+
+    @property
+    def _query(self) -> np.ndarray:
+        return self._shards._query[0]
+
+    def next_expiry(self) -> float:
+        return self._shards.next_expiry()
+
+    def expire(self, now: float) -> Tuple[np.ndarray, np.ndarray]:
+        """Release every lease that ended by ``now`` -> (query ids, tokens)."""
+        _, qids, toks = self._shards.expire(now)
+        return qids, toks
+
+    def active(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self._shards.active(0)
+
+    def resize_batch(self, query_ids: np.ndarray, new_tokens: np.ndarray,
+                     new_end_s: np.ndarray) -> None:
+        self._shards.resize_batch(
+            np.zeros(len(query_ids), np.int64), query_ids, new_tokens,
+            new_end_s)
+
+    def acquire_batch(self, query_ids: np.ndarray, tokens: np.ndarray,
+                      end_s: np.ndarray) -> None:
+        self._shards.acquire_batch(0, query_ids, tokens, end_s)

@@ -99,6 +99,11 @@ class PriceSignal:
     wall-clock for no extra saving, cost is already at its floor there).
     Queued demand is included so the signal leads the burst instead of
     trailing the lease table.
+
+    The signal is shard-local: each rack prices its own contention. Demand
+    arrays take any leading shape — ``(C,)`` for one pool, ``(K, C)`` for
+    the sharded fabric — and the whole fabric's prices come out of one
+    vectorized call per epoch.
     """
     n_classes: int
     gamma: float = 4.0
@@ -109,7 +114,7 @@ class PriceSignal:
         demand = np.asarray(leased_by_class, np.float64)
         if queued_by_class is not None:
             demand = demand + np.asarray(queued_by_class, np.float64)
-        assert demand.shape == (self.n_classes,), demand.shape
+        assert demand.shape[-1] == self.n_classes, demand.shape
         return 1.0 + np.minimum(self.gamma * demand / max(capacity, 1),
                                 self.cap - 1.0)
 

@@ -1,51 +1,59 @@
-"""Trace-driven cluster simulator (discrete-event, epoch-batched).
+"""Trace-driven cluster simulator (discrete-event, epoch-batched, sharded).
 
-Replays a multi-tenant ``Trace`` through an ``AllocationService`` against a
-finite global ``TokenPool`` with admission control and pluggable queueing
-(``repro.cluster.scheduler``: fifo / priority / EDF-over-SLA-slack). The
-inner step is vectorized over event batches:
+Replays a multi-tenant ``Trace`` through a sharded serving fabric: K racks,
+each with its own slice of the token pool (``PoolShards``), its own PCC
+cache shard (``ShardedPCCCache``), its own admission queue and per-SLA-class
+price signal, behind one ``ShardedAllocationService``. A consistent-hash
+``Router`` pins every query template to a home shard — so repeat traffic
+keeps hitting the shard whose cache already holds its exact PCC — and
+spills to the better of two hash choices only when the home rack is
+saturated. The single-pool simulator of PR 2/3 is exactly the K=1 run of
+this loop, not a separate code path.
 
-  * allocation decisions go through the service's jitted batch path — the
-    learned model for cold queries, the policy-only ``allocate_params`` twin
-    for queries whose exact PCC is already in the ``PCCCache``; under
-    elastic pricing the decision is re-priced per SLA class through the
-    ``allocate_params_priced`` twin (one more jitted call, still batched);
+The inner step stays vectorized over event batches:
+
+  * allocation decisions for the whole epoch — every shard's arrivals —
+    go through the fabric's one compiled (K, Bp) call: the learned model
+    for cold queries, the policy-only twin for queries whose exact PCC is
+    already cached at their home shard, the priced twin under elastic
+    pricing (per-shard, per-class prices from one vectorized signal call);
   * true runtimes at the chosen allocation come from one jitted AREPAS call
     over the batch's padded skylines;
-  * pool accounting / lease expiry / lease resizing are jnp kernels over the
-    lease table;
-  * admission is a vectorized prefix-sum over the policy-ordered queue — no
-    per-query Python in the hot loop.
+  * pool accounting / cross-shard lease expiry / cross-shard lease resizing
+    are jnp kernels over the stacked (K, L) lease tables;
+  * admission is a vectorized prefix-sum over each shard's policy-ordered
+    queue — no per-query Python in the hot loop.
 
-Elastic mode adds lease resizing: when queued demand exceeds the free pool,
-running leases are shrunk to their current priced decision and their
-remaining work is re-simulated through AREPAS at the smaller allocation;
-when the queue is empty and tokens are idle, leases grow back toward their
-performance-optimal ask (most-at-risk deadlines first). Cost is accrued
+Elastic mode adds lease resizing per rack: when a shard's queued demand
+exceeds its free pool, its running leases are shrunk to their current
+priced decision (remaining work re-simulated through AREPAS); when a shard
+is idle, tokens flow back to its deadline-risk leases. Cost is accrued
 exactly across resizes (token-seconds actually leased).
 
-Completed queries feed the online refinement loop: their observed skylines
-are run back through AREPAS and fitted into the ``PCCCache`` (the paper's
-"past observed" path), so repeat traffic progressively bypasses the model
-and the simulator can measure model-vs-history allocation error converging.
+Completed queries feed the online refinement loop of their *home* shard's
+cache — the paper's "past observed" path — so repeat traffic progressively
+bypasses the model wherever it lands, and per-shard utilization, spill
+rate, and imbalance land in ``ClusterMetrics``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.metrics import ClusterMetrics
-from repro.cluster.pcc_cache import PCCCache
-from repro.cluster.pool import TokenPool
+from repro.cluster.pcc_cache import ShardedPCCCache
+from repro.cluster.pool import PoolShards
+from repro.cluster.router import Router
 from repro.cluster.scheduler import (PriceSignal, QueueView, deadline_floor,
                                      make_policy)
 from repro.core.arepas import simulate_runtime_batch_jit
 from repro.core.featurize import batch_graphs, batch_job_features
 from repro.serve.batching import batch_bucket, pad_to
+from repro.serve.service import ShardedAllocationService
 from repro.workloads.generator import Trace
 
 __all__ = ["ClusterConfig", "ClusterReport", "ClusterSimulator"]
@@ -53,7 +61,7 @@ __all__ = ["ClusterConfig", "ClusterReport", "ClusterSimulator"]
 
 @dataclasses.dataclass(frozen=True)
 class ClusterConfig:
-    capacity: int = 8192          # global token pool size
+    capacity: int = 8192          # fabric-wide token capacity (split over K)
     epoch_s: float = 15.0         # decision-batching window
     max_leases: int = 8192
     use_cache: bool = True        # online PCC refinement + cache-hit path
@@ -67,6 +75,13 @@ class ClusterConfig:
     pricing: str = "fixed"        # "fixed" | "elastic" per-SLA-class price
     price_gamma: float = 16.0     # price slope vs class demand share
     price_cap: float = 16.0       # ceiling on the per-class price
+    # sharded fabric: K racks, each owning capacity/K tokens, routed by
+    # template-consistent hashing with power-of-two spill under saturation
+    n_shards: int = 1
+    load_factor: float = 1.25     # router bounded-load factor
+    spill_threshold: float = 1.0  # home-load fraction that allows spilling
+    router_vnodes: int = 64
+    router_seed: int = 0
 
 
 @dataclasses.dataclass
@@ -82,29 +97,49 @@ class ClusterReport:
     alloc_errors: np.ndarray          # (n_events,) per-decision error
     cache_hits: np.ndarray            # (n_events,) decision used the cache
     repeats: np.ndarray               # (n_events,) query seen earlier
+    replica_stats: Optional[List[Dict[str, int]]] = None  # per-shard traffic
 
     def summary(self) -> str:
         m = self.metrics
-        return (f"{self.n_events} queries in {self.n_epochs} epochs "
-                f"({self.events_per_s:.0f} ev/s wall) | "
-                f"util {m.get('utilization', 0):.2f} "
-                f"p50/p99 slowdown {m.get('p50_slowdown', 0):.2f}/"
-                f"{m.get('p99_slowdown', 0):.2f} | "
-                f"SLA viol {m.get('sla_violation_rate', 0):.1%} | "
-                f"cost saving {m.get('cost_saving_frac', 0):.1%} | "
-                f"cache hit {m.get('cache_hit_rate', 0):.1%}")
+        s = (f"{self.n_events} queries in {self.n_epochs} epochs "
+             f"({self.events_per_s:.0f} ev/s wall) | "
+             f"util {m.get('utilization', 0):.2f} "
+             f"p50/p99 slowdown {m.get('p50_slowdown', 0):.2f}/"
+             f"{m.get('p99_slowdown', 0):.2f} | "
+             f"SLA viol {m.get('sla_violation_rate', 0):.1%} | "
+             f"cost saving {m.get('cost_saving_frac', 0):.1%} | "
+             f"cache hit {m.get('cache_hit_rate', 0):.1%}")
+        if "spill_rate" in m:
+            s += f" | spill {m['spill_rate']:.1%}"
+        return s
 
 
 class ClusterSimulator:
-    """Discrete-event simulation of one trace against one trained service."""
+    """Discrete-event simulation of one trace against one trained service,
+    replicated across ``cfg.n_shards`` racks."""
 
-    def __init__(self, service, cfg: ClusterConfig = ClusterConfig()):
+    def __init__(self, service, cfg: ClusterConfig = ClusterConfig(),
+                 mesh=None, fabric: Optional[ShardedAllocationService] = None):
         assert cfg.pricing in ("fixed", "elastic"), cfg.pricing
+        assert cfg.capacity % cfg.n_shards == 0, \
+            (cfg.capacity, cfg.n_shards)
         self.service = service
         self.cfg = cfg
         self.policy = make_policy(cfg.admission)
+        self.router = Router(cfg.n_shards, n_vnodes=cfg.router_vnodes,
+                             load_factor=cfg.load_factor,
+                             spill_threshold=cfg.spill_threshold,
+                             seed=cfg.router_seed)
+        # reuse a caller-built fabric (e.g. AllocationFrontend's) when its
+        # shard count matches; otherwise build one over the given mesh
+        if fabric is not None and fabric.n_shards == cfg.n_shards \
+                and fabric.service is service:
+            self.fabric = fabric
+        else:
+            self.fabric = ShardedAllocationService(service, cfg.n_shards,
+                                                   mesh)
         # rebuilt per run(): cache keys are trace-local unique-query indices
-        self.cache = PCCCache()
+        self.cache = ShardedPCCCache(cfg.n_shards)
 
     # ---------------------------------------------------------- precompute --
     def _pool_inputs(self, trace: Trace) -> Dict[str, np.ndarray]:
@@ -128,7 +163,15 @@ class ClusterSimulator:
     # ----------------------------------------------------------------- run --
     def run(self, trace: Trace) -> ClusterReport:
         cfg = self.cfg
-        self.cache = PCCCache()   # keys are indices into *this* trace's pool
+        K = cfg.n_shards
+        cap_shard = cfg.capacity // K
+        # keys are indices into *this* trace's pool
+        self.cache = ShardedPCCCache(K)
+        # the fabric (and its wrapped service) may be shared across runs —
+        # AllocationFrontend reuse, shared test fixtures — so report both
+        # counter families as this run's delta, not the lifetime totals
+        replica_stats0 = self.fabric.replica_stats()
+        service_stats0 = dict(self.service.stats)
         t_wall = time.time()
         n = len(trace)
         cols = trace.arrays()
@@ -156,16 +199,19 @@ class ClusterSimulator:
         areas = sky.sum(axis=1, dtype=np.float64)
         defaults = np.array([j.default_tokens for j in trace.jobs], np.int64)
         model_pool = self._pool_inputs(trace)
+        # home shard rank of every template: the consistent-hash assignment
+        # that pins a recurring script to one cache shard for the whole run
+        home_u = self.router.rank(self.router.home(np.arange(U)))
 
         # exact-history oracle: the decision the policy makes from the true
         # per-query PCC (what a fully warmed cache converges to)
-        oracle_cache = PCCCache()
+        oracle_cache = ShardedPCCCache(K)
         a_ex, b_ex = oracle_cache.refine_batch(
-            np.arange(U), sky, lens, defaults, peaks)
+            home_u, np.arange(U), sky, lens, defaults, peaks)
         oracle = np.minimum(
             self.service.allocate_params(a_ex, b_ex,
                                          observed_tokens=defaults).tokens,
-            cfg.capacity).astype(np.int64)
+            cap_shard).astype(np.int64)
 
         # per-query state, indexed by query id
         tok_q = np.zeros(n, np.int64)      # currently leased tokens
@@ -181,16 +227,23 @@ class ClusterSimulator:
         cost_q = np.zeros(n, np.float64)   # token-seconds accrued pre-resize
         mark_q = np.zeros(n, np.float64)   # last lease-change timestamp
         done_q = np.zeros(n, np.float64)   # work fraction done at last change
+        shard_q = np.zeros(n, np.int64)    # executing shard rank
+        spill_q = np.zeros(n, bool)        # routed off the home shard
 
-        pool = TokenPool(cfg.capacity, cfg.max_leases)
-        metrics = ClusterMetrics(cfg.capacity, sla_limits)
-        # pending queue (columnar): query ids + sort keys + token asks
-        q_ids = np.zeros(0, np.int64)
+        pool = PoolShards(cap_shard, K, cfg.max_leases)
+        metrics = ClusterMetrics(cfg.capacity, sla_limits, n_shards=K,
+                                 capacity_per_shard=cap_shard)
+        # per-shard pending queues (columnar): query ids in arrival order
+        queues: List[np.ndarray] = [np.zeros(0, np.int64) for _ in range(K)]
         next_ev = 0
         now = 0.0
         n_epochs = 0
 
-        while next_ev < n or q_ids.size or pool.n_active:
+        def queued_tokens() -> np.ndarray:
+            return np.array([int(np.sum(tok_q[q])) for q in queues],
+                            np.float64)
+
+        while next_ev < n or any(q.size for q in queues) or pool.n_active:
             # advance: one epoch, or jump an idle gap to the next event
             targets = []
             if next_ev < n:
@@ -200,8 +253,9 @@ class ClusterSimulator:
             now = max(now + cfg.epoch_s, min(targets) if targets else now)
             n_epochs += 1
 
-            # 1. lease expiry (jnp kernel) -> completions -> refinement
-            done_ids, _ = pool.expire(now)
+            # 1. lease expiry (one kernel over every shard) -> completions
+            #    -> refinement into each template's *home* cache shard
+            done_sh, done_ids, _ = pool.expire(now)
             if done_ids.size:
                 jb = jb_all[done_ids]
                 fin = end_q[done_ids]
@@ -217,62 +271,81 @@ class ClusterSimulator:
                     cost_token_s=(cost_q[done_ids] + tok_q[done_ids]
                                   * (fin - mark_q[done_ids])),
                     price=price_q[done_ids],
-                    slack_s=deadline_all[done_ids] - fin)
+                    slack_s=deadline_all[done_ids] - fin,
+                    shard=done_sh, spilled=spill_q[done_ids])
                 if cfg.use_cache:
-                    fresh = np.unique(jb[self.cache.missing(jb)])
+                    fresh = np.unique(
+                        jb[self.cache.missing(home_u[jb], jb)])
                     if fresh.size:
-                        self.cache.refine_batch(fresh, sky[fresh], lens[fresh],
-                                                defaults[fresh], peaks[fresh])
+                        self.cache.refine_batch(
+                            home_u[fresh], fresh, sky[fresh], lens[fresh],
+                            defaults[fresh], peaks[fresh])
 
-            # 2. per-SLA-class price signal from leased + queued demand
-            #    (the lease-table snapshot is only needed on elastic paths)
+            # 2. per-(shard, SLA-class) price signal from leased + queued
+            #    demand — one vectorized call over the whole fabric (the
+            #    lease-table snapshots are only needed on elastic paths)
             if priced or cfg.elastic:
-                act_ids, act_tok, act_end = pool.active()
-                leased_cls = np.bincount(sla_all[act_ids], weights=act_tok,
-                                         minlength=n_classes)
-                queued_cls = np.bincount(sla_all[q_ids], weights=tok_q[q_ids],
-                                         minlength=n_classes)
-                prices = signal.prices(leased_cls, cfg.capacity, queued_cls)
+                act = [pool.active(k) for k in range(K)]
+                leased_cls = np.stack([
+                    np.bincount(sla_all[act[k][0]], weights=act[k][1],
+                                minlength=n_classes) for k in range(K)])
+                queued_cls = np.stack([
+                    np.bincount(sla_all[queues[k]], weights=tok_q[queues[k]],
+                                minlength=n_classes) for k in range(K)])
+                prices = signal.prices(leased_cls, cap_shard, queued_cls)
             else:
-                prices = None
+                act, prices = None, None
 
-            # 3. arrivals in this epoch -> batched allocation decisions
+            # 3. arrivals in this epoch -> routing -> one fabric-wide batch
+            #    of allocation decisions
             hi = int(np.searchsorted(arrival, now, side="right"))
             ids = np.arange(next_ev, hi)
             next_ev = hi
-            if ids.size and q_ids.size + ids.size > cfg.max_queue:
-                keep = max(cfg.max_queue - q_ids.size, 0)
+            total_queued = int(sum(q.size for q in queues))
+            if ids.size and total_queued + ids.size > cfg.max_queue:
+                keep = max(cfg.max_queue - total_queued, 0)
                 metrics.n_rejected += ids.size - keep
                 ids = ids[:keep]
             if ids.size:
                 jb = jb_all[ids]
                 obs = defaults[jb]
+                # placement: home-consistent hashing; a saturated home rack
+                # (projected demand over capacity) spills to the less loaded
+                # of two choices — cross-shard spill is the exception, cache
+                # affinity the rule
+                load = (pool.in_use + queued_tokens()) / cap_shard
+                exec_sh, spilled = self.router.route(jb, load)
+                exec_r = self.router.rank(exec_sh)
+                shard_q[ids] = exec_r
+                spill_q[ids] = spilled
                 tokens = np.zeros(ids.size, np.int64)
                 a_dec = np.zeros(ids.size, np.float64)
                 b_dec = np.zeros(ids.size, np.float64)
                 if cfg.use_cache:
-                    hit, a_c, b_c = self.cache.lookup(jb, areas=areas[jb])
+                    hit, a_c, b_c = self.cache.lookup(home_u[jb], jb,
+                                                      areas=areas[jb])
                 else:
                     hit = np.zeros(ids.size, bool)
                 if np.any(hit):      # exact-history path: policy twin only
-                    tokens[hit] = self.service.allocate_params(
-                        a_c[hit], b_c[hit], observed_tokens=obs[hit]).tokens
+                    tokens[hit] = self.fabric.allocate_params(
+                        exec_r[hit], a_c[hit], b_c[hit],
+                        observed_tokens=obs[hit]).tokens
                     a_dec[hit] = a_c[hit]
                     b_dec[hit] = b_c[hit]
                 miss = ~hit
-                if np.any(miss):     # cold path: fused model+policy executable
+                if np.any(miss):     # cold path: fused model+policy kernel
                     model_in = {k: v[jb[miss]] for k, v in model_pool.items()}
-                    res = self.service.allocate_batch(
-                        model_in, observed_tokens=obs[miss])
+                    res = self.fabric.allocate_batch(
+                        exec_r[miss], model_in, observed_tokens=obs[miss])
                     tokens[miss] = res.tokens
                     a_dec[miss] = res.a
                     b_dec[miss] = res.b
-                perf = np.minimum(tokens, cfg.capacity)
+                perf = np.minimum(tokens, cap_shard)
                 if priced:           # re-price the whole epoch batch at once,
-                    p = prices[sla_all[ids]]
-                    tokens = np.minimum(self.service.allocate_params_priced(
-                        a_dec, b_dec, p, observed_tokens=obs).tokens,
-                        cfg.capacity)
+                    p = prices[exec_r, sla_all[ids]]
+                    tokens = np.minimum(self.fabric.allocate_params_priced(
+                        exec_r, a_dec, b_dec, p,
+                        observed_tokens=obs).tokens, cap_shard)
                     # ... floored so no query is priced into a predicted
                     # deadline miss (past the performance ask nothing helps)
                     tokens = np.maximum(tokens, deadline_floor(
@@ -288,53 +361,69 @@ class ClusterSimulator:
                 err_q[ids] = (np.abs(perf - oracle[jb])
                               / np.maximum(oracle[jb], 1))
                 rt_q[ids] = self._true_runtimes(sky[jb], lens[jb], tokens)
-                q_ids = np.concatenate([q_ids, ids])
+                for k in np.unique(exec_r):
+                    queues[k] = np.concatenate([queues[k], ids[exec_r == k]])
 
-            # 4. elastic shrink: queued demand over the free pool -> reclaim
-            if cfg.elastic and act_ids.size and q_ids.size:
-                demand = int(np.sum(tok_q[q_ids]))
-                if demand > pool.free:
+            # 4. elastic shrink: shards whose queued demand exceeds their
+            #    free pool reclaim from running leases — one priced fabric
+            #    call and one cross-shard resize kernel for all of them
+            if cfg.elastic:
+                rows_ids, rows_sh = [], []
+                for k in range(K):
+                    act_ids = act[k][0]
+                    if act_ids.size and queues[k].size \
+                            and int(np.sum(tok_q[queues[k]])) > pool.free[k]:
+                        rows_ids.append(act_ids)
+                        rows_sh.append(np.full(act_ids.size, k, np.int64))
+                if rows_ids:
+                    cand = np.concatenate(rows_ids)
+                    cand_sh = np.concatenate(rows_sh)
+                    cand_tok = tok_q[cand]
+                    cand_end = end_q[cand]
                     # re-price running leases at current contention; shrink
                     # the ones whose priced ask fell below their lease
-                    tgt = np.minimum(self.service.allocate_params_priced(
-                        a_q[act_ids], b_q[act_ids], prices[sla_all[act_ids]],
-                        observed_tokens=defaults[jb_all[act_ids]]).tokens,
-                        cfg.capacity)
+                    tgt = np.minimum(self.fabric.allocate_params_priced(
+                        cand_sh, a_q[cand], b_q[cand],
+                        prices[cand_sh, sla_all[cand]],
+                        observed_tokens=defaults[jb_all[cand]]).tokens,
+                        cap_shard)
                     # deadline guard: the shrunk lease's predicted *total*
                     # runtime must keep the remaining work inside the slack
-                    done = self._work_done(act_ids, now, done_q, mark_q, rt_q)
-                    rt_budget = ((deadline_all[act_ids] - now) / (1.0 - done))
+                    done = self._work_done(cand, now, done_q, mark_q, rt_q)
+                    rt_budget = ((deadline_all[cand] - now) / (1.0 - done))
                     tgt = np.maximum(tgt, deadline_floor(
-                        a_q[act_ids], b_q[act_ids], rt_budget, act_tok))
-                    sel = (tgt < act_tok) & ((act_end - now) > cfg.epoch_s)
+                        a_q[cand], b_q[cand], rt_budget, cand_tok))
+                    sel = (tgt < cand_tok) & ((cand_end - now) > cfg.epoch_s)
                     if np.any(sel):
-                        sids = act_ids[sel]
+                        sids = cand[sel]
                         new_tok = tgt[sel]
-                        self._apply_resize(sids, new_tok, now, sky, lens,
-                                           jb_all, tok_q, rt_q, start_q,
-                                           end_q, cost_q, mark_q, done_q,
-                                           pool)
+                        self._apply_resize(cand_sh[sel], sids, new_tok, now,
+                                           sky, lens, jb_all, tok_q, rt_q,
+                                           start_q, end_q, cost_q, mark_q,
+                                           done_q, pool)
                         metrics.record_resizes(
                             shrunk=sids.size,
-                            reclaimed=int(np.sum(act_tok[sel] - new_tok)))
+                            reclaimed=int(np.sum(cand_tok[sel] - new_tok)))
                         if priced:   # fixed pricing reports neutral prices
-                            price_q[sids] = prices[sla_all[sids]]
+                            price_q[sids] = prices[cand_sh[sel],
+                                                   sla_all[sids]]
 
             # 5. re-price stale queued decisions: a query that decided at a
             #    burst-peak (or calm-trough) price keeps neither its starved
             #    nor its oversized ask once the class price moves materially
             #    — re-decide tokens and runtime for the changed subset so
             #    EDF slack and admission see current prices
-            if priced and q_ids.size:
-                pq = prices[sla_all[q_ids]]
-                moved = np.abs(pq - price_q[q_ids]) > 0.25 * price_q[q_ids]
+            if priced and any(q.size for q in queues):
+                all_q = np.concatenate([q for q in queues if q.size])
+                pq = prices[shard_q[all_q], sla_all[all_q]]
+                moved = np.abs(pq - price_q[all_q]) > 0.25 * price_q[all_q]
                 if np.any(moved):
-                    rq = q_ids[moved]
+                    rq = all_q[moved]
                     p = pq[moved]
-                    toks = np.minimum(self.service.allocate_params_priced(
-                        a_q[rq], b_q[rq], p,
+                    toks = np.minimum(self.fabric.allocate_params_priced(
+                        shard_q[rq], a_q[rq], b_q[rq], p,
                         observed_tokens=defaults[jb_all[rq]]).tokens,
-                        cfg.capacity)
+                        cap_shard)
                     toks = np.maximum(toks, deadline_floor(
                         a_q[rq], b_q[rq], deadline_all[rq] - now, perf_q[rq]))
                     jb = jb_all[rq]
@@ -342,53 +431,67 @@ class ClusterSimulator:
                     rt_q[rq] = self._true_runtimes(sky[jb], lens[jb], toks)
                     price_q[rq] = p
 
-            # 6. admission: vectorized prefix over the policy-ordered queue
-            if q_ids.size and pool.free > 0:
-                view = QueueView(
-                    ids=q_ids, arrival_s=arrival[q_ids],
-                    priority=priorities[sla_all[q_ids]],
-                    slack_s=deadline_all[q_ids] - (now + rt_q[q_ids]))
-                q_ids = q_ids[self.policy.order(view)]
-                fits = np.cumsum(tok_q[q_ids]) <= pool.free
-                k = int(np.searchsorted(~fits, True))   # longest True prefix
-                if k:
-                    adm = q_ids[:k]
-                    q_ids = q_ids[k:]
-                    start_q[adm] = now
-                    mark_q[adm] = now
-                    done_q[adm] = 0.0
-                    end_q[adm] = now + rt_q[adm]
-                    pool.acquire_batch(adm, tok_q[adm], end_q[adm])
+            # 6. admission: per shard, a vectorized prefix over its
+            #    policy-ordered queue
+            for k in range(K):
+                if queues[k].size and pool.free[k] > 0:
+                    q_ids = queues[k]
+                    view = QueueView(
+                        ids=q_ids, arrival_s=arrival[q_ids],
+                        priority=priorities[sla_all[q_ids]],
+                        slack_s=deadline_all[q_ids] - (now + rt_q[q_ids]))
+                    q_ids = q_ids[self.policy.order(view)]
+                    fits = np.cumsum(tok_q[q_ids]) <= pool.free[k]
+                    j = int(np.searchsorted(~fits, True))  # True prefix
+                    if j:
+                        adm = q_ids[:j]
+                        start_q[adm] = now
+                        mark_q[adm] = now
+                        done_q[adm] = 0.0
+                        end_q[adm] = now + rt_q[adm]
+                        pool.acquire_batch(k, adm, tok_q[adm], end_q[adm])
+                    queues[k] = q_ids[j:]
 
-            # 7. elastic grow: idle tokens flow back to running leases that
-            #    are projected to miss their deadline (growing anything else
-            #    buys runtime nobody asked for at a strictly higher cost),
-            #    most-at-risk first
-            if cfg.elastic and not q_ids.size and pool.free > 0:
-                act_ids, act_tok, act_end = pool.active()
-                want = perf_q[act_ids] - act_tok
-                cand = ((want > 0) & ((act_end - now) > cfg.epoch_s)
-                        & (act_end > deadline_all[act_ids]))
-                if np.any(cand):
+            # 7. elastic grow: a shard with an empty queue and idle tokens
+            #    feeds running leases projected to miss their deadline
+            #    (growing anything else buys runtime nobody asked for at a
+            #    strictly higher cost), most-at-risk first — the resizes of
+            #    every shard land in one cross-shard kernel
+            if cfg.elastic:
+                g_sh, g_ids, g_tok = [], [], []
+                for k in range(K):
+                    if queues[k].size or pool.free[k] <= 0:
+                        continue
+                    act_ids, act_tok, act_end = pool.active(k)
+                    want = perf_q[act_ids] - act_tok
+                    cand = ((want > 0) & ((act_end - now) > cfg.epoch_s)
+                            & (act_end > deadline_all[act_ids]))
+                    if not np.any(cand):
+                        continue
                     cids, cwant = act_ids[cand], want[cand]
                     order = np.argsort(deadline_all[cids] - act_end[cand],
                                        kind="stable")
                     cids, cwant = cids[order], cwant[order]
-                    fits = np.cumsum(cwant) <= pool.free
-                    k = int(np.searchsorted(~fits, True))
-                    if k:
-                        gids = cids[:k]
-                        new_tok = tok_q[gids] + cwant[:k]
-                        self._apply_resize(gids, new_tok, now, sky, lens,
-                                           jb_all, tok_q, rt_q, start_q,
-                                           end_q, cost_q, mark_q, done_q,
-                                           pool)
-                        metrics.record_resizes(
-                            grown=gids.size,
-                            granted=int(np.sum(cwant[:k])))
+                    fits = np.cumsum(cwant) <= pool.free[k]
+                    j = int(np.searchsorted(~fits, True))
+                    if j:
+                        g_sh.append(np.full(j, k, np.int64))
+                        g_ids.append(cids[:j])
+                        g_tok.append(tok_q[cids[:j]] + cwant[:j])
+                if g_ids:
+                    gids = np.concatenate(g_ids)
+                    new_tok = np.concatenate(g_tok)
+                    granted = int(np.sum(new_tok - tok_q[gids]))
+                    self._apply_resize(np.concatenate(g_sh), gids, new_tok,
+                                       now, sky, lens, jb_all, tok_q, rt_q,
+                                       start_q, end_q, cost_q, mark_q,
+                                       done_q, pool)
+                    metrics.record_resizes(grown=gids.size, granted=granted)
 
             epoch_errs = err_q[ids] if ids.size else np.zeros(0)
-            metrics.sample_epoch(now, q_ids.size, pool.in_use, epoch_errs)
+            metrics.sample_epoch(now, int(sum(q.size for q in queues)),
+                                 int(pool.in_use.sum()), epoch_errs,
+                                 in_use_shard=pool.in_use)
 
         wall = time.time() - t_wall
         report = metrics.report()
@@ -399,9 +502,14 @@ class ClusterSimulator:
             wall_s=round(wall, 3),
             events_per_s=round(n_processed / max(wall, 1e-9), 1),
             cache_stats=dict(self.cache.stats),
-            service_stats=dict(self.service.stats),
+            service_stats={k: v - service_stats0[k]
+                           for k, v in self.service.stats.items()},
             error_series=metrics.error_series(),
-            alloc_errors=err_q, cache_hits=hit_q, repeats=repeat_all)
+            alloc_errors=err_q, cache_hits=hit_q, repeats=repeat_all,
+            replica_stats=[
+                {k: r[k] - r0[k] for k in r}
+                for r, r0 in zip(self.fabric.replica_stats(),
+                                 replica_stats0)])
 
     # -------------------------------------------------------------- resize --
     @staticmethod
@@ -416,17 +524,18 @@ class ClusterSimulator:
                        + (now - mark_q[qids]) / np.maximum(rt_q[qids], 1),
                        0.0, 0.999)
 
-    def _apply_resize(self, qids: np.ndarray, new_tok: np.ndarray,
-                      now: float, sky: np.ndarray, lens: np.ndarray,
-                      jb_all: np.ndarray, tok_q: np.ndarray,
-                      rt_q: np.ndarray, start_q: np.ndarray,
-                      end_q: np.ndarray, cost_q: np.ndarray,
-                      mark_q: np.ndarray, done_q: np.ndarray,
-                      pool: TokenPool) -> None:
-        """Resize running leases: AREPAS-resimulate the job at the new
-        allocation, carry the completed work fraction over, accrue the cost
-        of the lease segment that just ended, and scatter the new
-        (tokens, end) into the pool's lease table."""
+    def _apply_resize(self, shard_of: np.ndarray, qids: np.ndarray,
+                      new_tok: np.ndarray, now: float, sky: np.ndarray,
+                      lens: np.ndarray, jb_all: np.ndarray,
+                      tok_q: np.ndarray, rt_q: np.ndarray,
+                      start_q: np.ndarray, end_q: np.ndarray,
+                      cost_q: np.ndarray, mark_q: np.ndarray,
+                      done_q: np.ndarray, pool: PoolShards) -> None:
+        """Resize running leases (possibly spanning shards): AREPAS-
+        resimulate each job at its new allocation, carry the completed work
+        fraction over, accrue the cost of the lease segment that just
+        ended, and scatter the new (tokens, end) into the stacked lease
+        tables in one cross-shard kernel."""
         jb = jb_all[qids]
         rt_new = self._true_runtimes(sky[jb], lens[jb], new_tok)
         done = self._work_done(qids, now, done_q, mark_q, rt_q)
@@ -438,4 +547,4 @@ class ClusterSimulator:
         tok_q[qids] = new_tok
         rt_q[qids] = rt_new
         end_q[qids] = new_end
-        pool.resize_batch(qids, new_tok, new_end)
+        pool.resize_batch(shard_of, qids, new_tok, new_end)

@@ -20,7 +20,8 @@ from typing import Optional, Tuple
 
 import jax
 
-__all__ = ["make_production_mesh", "make_smoke_mesh", "mesh_chips"]
+__all__ = ["make_allocation_mesh", "make_production_mesh", "make_smoke_mesh",
+           "mesh_chips"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -33,6 +34,18 @@ def make_smoke_mesh(shape: Tuple[int, ...] = (1, 1),
                     axes: Tuple[str, ...] = ("data", "model")):
     """Tiny mesh over however many devices the test process has."""
     return jax.make_mesh(shape, axes)
+
+
+def make_allocation_mesh(n_shards: int):
+    """Mesh for the sharded allocation fabric: a 1-D ``("shard",)`` axis
+    with one device per replica when the host has that many, else a
+    ``make_smoke_mesh``-style 1-device mesh. The sharded service runs its
+    batched kernels under ``jax.shard_map`` only when the mesh really
+    carries ``n_shards`` devices; on smaller hosts it falls back to
+    ``vmap`` over the shard axis (same math, one device)."""
+    if n_shards >= 1 and len(jax.devices()) >= n_shards:
+        return jax.make_mesh((n_shards,), ("shard",))
+    return make_smoke_mesh((1,), ("shard",))
 
 
 def mesh_chips(mesh) -> int:

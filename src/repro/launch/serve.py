@@ -105,10 +105,22 @@ class AllocationFrontend:
     The allocation analogue of ``Server``: requests queue up, ``step()``
     drains them through the service's jitted batch path. Closed sets of
     requests go through ``run()`` like the LM server.
+
+    ``n_shards > 1`` turns the frontend into the sharded fabric's entry
+    point: it builds the allocation mesh (``launch.mesh`` — one device per
+    replica when the host has them, the 1-device smoke mesh otherwise) and
+    wraps the service in a ``ShardedAllocationService``, which
+    ``run_cluster`` threads into the sharded simulator.
     """
 
-    def __init__(self, service, max_batch: int = 256):
+    def __init__(self, service, max_batch: int = 256, n_shards: int = 1,
+                 mesh=None):
+        from repro.launch.mesh import make_allocation_mesh
+        from repro.serve.service import ShardedAllocationService
         self.service = service
+        self.n_shards = int(n_shards)
+        self.mesh = make_allocation_mesh(n_shards) if mesh is None else mesh
+        self.fabric = ShardedAllocationService(service, n_shards, self.mesh)
         self._batcher = MicroBatcher(service, max_batch=max_batch)
 
     @property
@@ -138,22 +150,37 @@ class AllocationFrontend:
     def run_cluster(self, trace, cluster_cfg=None, *,
                     admission: Optional[str] = None,
                     elastic: Optional[bool] = None,
-                    pricing: Optional[str] = None) -> "ClusterReport":
+                    pricing: Optional[str] = None,
+                    n_shards: Optional[int] = None,
+                    load_factor: Optional[float] = None) -> "ClusterReport":
         """Replay a ``repro.workloads.Trace`` through this frontend's service
-        inside the trace-driven cluster simulator (``repro.cluster``): finite
-        token pool, admission control, scheduler-policy SLA queueing
-        (fifo/priority/edf), optional elastic lease resizing + per-class
-        repricing, and online PCC refinement, with every allocation decision
-        going through the same jitted batch path the micro-batcher uses.
+        inside the trace-driven cluster simulator (``repro.cluster``): K
+        token-pool shards behind consistent-hash routing, per-shard
+        admission control, scheduler-policy SLA queueing (fifo/priority/
+        edf), optional elastic lease resizing + per-class repricing, and
+        online PCC refinement into each template's home cache shard, with
+        every allocation decision going through the sharded fabric's
+        compiled (K, Bp) batch path.
 
-        ``admission`` / ``elastic`` / ``pricing`` override the corresponding
-        ``ClusterConfig`` fields without the caller building a config."""
+        ``admission`` / ``elastic`` / ``pricing`` / ``n_shards`` /
+        ``load_factor`` override the corresponding ``ClusterConfig`` fields
+        without the caller building a config. An explicit ``cluster_cfg``
+        is authoritative (its ``n_shards`` is honored as written); only
+        when no config is passed does ``n_shards`` default to the
+        frontend's own shard count."""
         from repro.cluster import ClusterConfig, ClusterSimulator
         cfg = cluster_cfg or ClusterConfig()
+        if n_shards is None and cluster_cfg is None:
+            n_shards = self.n_shards
         overrides = {k: v for k, v in (("admission", admission),
                                        ("elastic", elastic),
-                                       ("pricing", pricing)) if v is not None}
+                                       ("pricing", pricing),
+                                       ("n_shards", n_shards),
+                                       ("load_factor", load_factor))
+                     if v is not None}
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
-        sim = ClusterSimulator(self.service, cfg)
+        mesh = self.mesh if cfg.n_shards == self.n_shards else None
+        sim = ClusterSimulator(self.service, cfg, mesh=mesh,
+                               fabric=self.fabric)
         return sim.run(trace)

@@ -4,6 +4,10 @@
 allocator: features -> scaled params -> decode -> allocation policy in one
 compiled call per (model, batch bucket). ``MicroBatcher`` queues single-job
 requests and drains them through the service in padded batches.
+``ShardedAllocationService`` serves N replicas of one model behind the same
+API — shard-tagged rows are stacked into (K, Bp) blocks and decided in one
+compiled call under ``jax.shard_map`` (``vmap`` on 1-device hosts), with
+``ReplicaState`` keeping per-replica counters observable.
 """
 from repro.serve.batching import (
     AllocationRequest,
@@ -11,15 +15,24 @@ from repro.serve.batching import (
     batch_bucket,
     node_bucket,
     pad_to,
+    shard_positions,
 )
-from repro.serve.service import AllocationResult, AllocationService
+from repro.serve.service import (
+    AllocationResult,
+    AllocationService,
+    ReplicaState,
+    ShardedAllocationService,
+)
 
 __all__ = [
     "AllocationRequest",
     "AllocationResult",
     "AllocationService",
     "MicroBatcher",
+    "ReplicaState",
+    "ShardedAllocationService",
     "batch_bucket",
     "node_bucket",
     "pad_to",
+    "shard_positions",
 ]

@@ -23,7 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = ["AllocationRequest", "MicroBatcher", "batch_bucket", "node_bucket",
-           "pad_to"]
+           "pad_to", "shard_positions"]
 
 
 def _next_pow2(n: int, floor: int) -> int:
@@ -51,6 +51,27 @@ def pad_to(x: np.ndarray, size: int, axis: int = 0) -> np.ndarray:
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, size - x.shape[axis])
     return np.pad(x, widths)
+
+
+def shard_positions(shard_of: np.ndarray, n_shards: int, floor: int = 8
+                    ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Row placement for stacking a flat batch into (K, Bp) shard blocks.
+
+    Row ``i`` of the flat batch lands at block position
+    ``(shard_of[i], pos[i])``, rows of one shard keeping their relative
+    input order. Returns (pos, per-shard counts, Bp) where ``Bp`` is the
+    common padded block width: the batch bucket of the fullest shard, so
+    the whole fabric shares one compiled (K, Bp) executable per epoch.
+    """
+    shard_of = np.asarray(shard_of, np.int64)
+    counts = np.bincount(shard_of, minlength=n_shards)
+    assert counts.size == n_shards, (counts.size, n_shards)
+    order = np.argsort(shard_of, kind="stable")
+    pos_sorted = np.arange(shard_of.size) - np.repeat(
+        np.cumsum(counts) - counts, counts)
+    pos = np.empty(shard_of.size, np.int64)
+    pos[order] = pos_sorted
+    return pos, counts, batch_bucket(int(counts.max(initial=1)), floor)
 
 
 def pad_graph_inputs(model_in: Dict[str, np.ndarray], n_nodes: int

@@ -15,22 +15,37 @@ the compiled policy stage.
 Compiled functions are cached on (model.cache_key, shape signature,
 observed?, policy); ``stats["compiles"]`` exposes cache behavior to tests
 and benchmarks.
+
+Sharded fabric (PR 4): the mutable serving state — compiled-executable
+cache plus decision counters — lives in a ``ReplicaState``, of which a
+plain ``AllocationService`` owns exactly one. ``ShardedAllocationService``
+puts N replicas of one trained model behind the same API: callers tag
+each row with a shard rank, per-shard rows are stacked into one (K, Bp)
+block, and the fused features -> decode -> policy stage runs across every
+replica in a single compiled call — under ``jax.shard_map`` when the mesh
+really has one device per shard, falling back to ``vmap`` over the shard
+axis on 1-device hosts. Per-shard blocks keep single-shard shapes, so
+decisions stay bitwise-equal to K independent single-shard services fed
+the same routed partitions (tests/test_alloc_parity.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.allocator import (AllocationPolicy, choose_tokens_jnp,
                                   choose_tokens_priced_jnp)
-from repro.serve.batching import batch_bucket, pad_to
+from repro.serve.batching import batch_bucket, pad_to, shard_positions
 
-__all__ = ["AllocationResult", "AllocationService"]
+__all__ = ["AllocationResult", "AllocationService", "ReplicaState",
+           "ShardedAllocationService"]
 
 
 @dataclasses.dataclass
@@ -39,6 +54,23 @@ class AllocationResult:
     a: np.ndarray             # (B,) decoded PCC exponent
     b: np.ndarray             # (B,) decoded PCC coefficient
     runtime: np.ndarray       # (B,) predicted runtime at the chosen tokens
+
+
+class ReplicaState:
+    """Mutable serving state of one model replica.
+
+    A plain ``AllocationService`` owns exactly one (its compiled-executable
+    cache and decision counters); a ``ShardedAllocationService`` owns one
+    per shard, so per-replica traffic and compile behavior stay observable
+    after the fabric batches decisions across shards.
+    """
+
+    __slots__ = ("shard", "stats", "compiled")
+
+    def __init__(self, shard: int = 0):
+        self.shard = int(shard)
+        self.stats: Dict[str, int] = {"compiles": 0, "calls": 0, "queries": 0}
+        self.compiled: Dict[Tuple, callable] = {}
 
 
 class AllocationService:
@@ -52,8 +84,15 @@ class AllocationService:
         self.model = model
         self.policy = policy
         self.batch_floor = batch_floor
-        self._cache: Dict[Tuple, callable] = {}
-        self.stats = {"compiles": 0, "calls": 0, "queries": 0}
+        self.replica = ReplicaState()
+
+    @property
+    def _cache(self) -> Dict[Tuple, callable]:
+        return self.replica.compiled
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.replica.stats
 
     # ------------------------------------------------------------ jit cache --
     def _shape_sig(self, model_in: Dict[str, np.ndarray]) -> Tuple:
@@ -240,3 +279,235 @@ class AllocationService:
                else None)
         return self.allocate_batch(self.model.batch_inputs(ds),
                                    observed_tokens=obs)
+
+
+class ShardedAllocationService:
+    """N replicas of one trained model behind a single batched API.
+
+    Wraps an ``AllocationService`` (whose compiled cache and counters keep
+    serving single-shard traffic) and adds shard-tagged entry points: every
+    row of a batch carries a shard rank in [0, K); rows are stacked into a
+    (K, Bp) block — ``Bp`` the batch bucket of the fullest shard — and one
+    compiled call computes every replica's decisions. With a mesh that has
+    one device per shard the per-shard stage runs under ``jax.shard_map``
+    (each device sees exactly the single-shard shapes); on smaller hosts it
+    falls back to ``vmap`` over the shard axis. Either way the per-shard
+    math is the single-shard math, so decisions are bitwise-equal to K
+    independent ``AllocationService`` instances fed the routed partitions.
+
+    Fabric-level counters accrue into the wrapped service's ``stats``;
+    per-replica traffic lands in ``replicas[k].stats``.
+    """
+
+    def __init__(self, service: AllocationService, n_shards: int = 1,
+                 mesh=None):
+        assert n_shards >= 1
+        self.service = service
+        self.model = service.model
+        self.policy = service.policy
+        self.n_shards = int(n_shards)
+        self.replicas = [ReplicaState(k) for k in range(n_shards)]
+        # shard_map needs exactly one device per shard; anything else (and
+        # in particular the 1-device smoke mesh) means vmap over the axis
+        self.mesh = (mesh if mesh is not None
+                     and dict(mesh.shape).get("shard") == n_shards
+                     and n_shards > 1 else None)
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return self.service.stats
+
+    def replica_stats(self) -> List[Dict[str, int]]:
+        """Per-shard decision counters, shard-rank order."""
+        return [dict(r.stats) for r in self.replicas]
+
+    # ------------------------------------------------------------ kernels --
+    def _map_over_shards(self, per_shard, n_args: int, with_params: bool):
+        """Lift a per-shard block function over the (K, ...) shard axis.
+
+        ``per_shard`` sees exactly the single-shard shapes (Bp, ...). Under
+        ``shard_map`` each device's block keeps a size-1 shard dim, which is
+        squeezed before and restored after so both modes run the same math.
+        """
+        if self.mesh is not None:
+            def block_fn(*args):
+                squeeze = lambda t: jax.tree.map(lambda v: v[0], t)
+                if with_params:
+                    out = per_shard(args[0], *map(squeeze, args[1:]))
+                else:
+                    out = per_shard(*map(squeeze, args))
+                return jax.tree.map(lambda v: v[None], out)
+
+            specs = ((jax.tree.map(lambda _: P(), self.model.params),)
+                     if with_params else ())
+            specs += (P("shard"),) * n_args
+            return shard_map(block_fn, mesh=self.mesh, in_specs=specs,
+                             out_specs=P("shard"))
+        in_axes = ((None,) if with_params else ()) + (0,) * n_args
+        return jax.vmap(per_shard, in_axes=in_axes)
+
+    def _sharded_policy_fn(self, Bp: int, with_observed: bool, priced: bool):
+        key = ("sharded_policy", self.n_shards, Bp, with_observed, priced,
+               self.policy, self.mesh is not None)
+        cache = self.service._cache
+        if key not in cache:
+            self.stats["compiles"] += 1
+            policy = self.policy
+
+            def per_shard(a, b, price, obs):
+                # exactly the single-shard policy stage on a (Bp,) block
+                if priced:
+                    toks = choose_tokens_priced_jnp(
+                        a, b, policy, price, obs if with_observed else None)
+                else:
+                    toks = choose_tokens_jnp(
+                        a, b, policy, obs if with_observed else None)
+                return toks, b * toks.astype(a.dtype) ** a
+
+            cache[key] = jax.jit(self._map_over_shards(per_shard, 4, False))
+        return cache[key]
+
+    def _sharded_fused_fn(self, sig: Tuple, with_observed: bool):
+        key = ("sharded_fused", self.n_shards, self.model.cache_key, sig,
+               with_observed, self.policy, self.mesh is not None)
+        cache = self.service._cache
+        if key not in cache:
+            self.stats["compiles"] += 1
+            model, policy, scaler = self.model, self.policy, self.model.scaler
+
+            def per_shard(params, model_in, obs):
+                # the single-shard fused stage on one replica's (Bp, ...)
+                # block: identical shapes, identical math
+                z = model.serve_apply(params, model_in)
+                a, b = scaler.decode(z)
+                a64 = a.astype(jnp.float64)
+                b64 = b.astype(jnp.float64)
+                toks = choose_tokens_jnp(a64, b64, policy,
+                                         obs if with_observed else None)
+                rt = b64 * toks.astype(jnp.float64) ** a64
+                return toks, a, b, rt
+
+            cache[key] = jax.jit(self._map_over_shards(per_shard, 2, True))
+        return cache[key]
+
+    # ------------------------------------------------------------ stacking --
+    def _place(self, shard_of: np.ndarray):
+        shard_of = np.asarray(shard_of, np.int64)
+        assert shard_of.size == 0 or (0 <= shard_of.min()
+                                      and shard_of.max() < self.n_shards)
+        pos, counts, Bp = shard_positions(shard_of, self.n_shards,
+                                          self.service.batch_floor)
+        for k, r in enumerate(self.replicas):
+            if counts[k]:
+                r.stats["calls"] += 1
+                r.stats["queries"] += int(counts[k])
+        self.stats["calls"] += 1
+        self.stats["queries"] += int(shard_of.size)
+        return shard_of, pos, Bp
+
+    def _stack(self, shard_of, pos, Bp, x, dtype, fill=0) -> np.ndarray:
+        """Scatter a flat (B, ...) array into its (K, Bp, ...) block."""
+        x = np.asarray(x, dtype)
+        out = np.full((self.n_shards, Bp) + x.shape[1:], fill, dtype)
+        out[shard_of, pos] = x
+        return out
+
+    def _chunks(self, B: int):
+        cap = self.service.MAX_BATCH
+        return [slice(i, min(i + cap, B)) for i in range(0, B, cap)]
+
+    @staticmethod
+    def _concat(results) -> AllocationResult:
+        return AllocationService._concat(results)
+
+    # ------------------------------------------------------------- serving --
+    def allocate_params(self, shard_of: np.ndarray, a: np.ndarray,
+                        b: np.ndarray,
+                        observed_tokens: Optional[np.ndarray] = None,
+                        price: Optional[np.ndarray] = None
+                        ) -> AllocationResult:
+        """Policy-only decisions for rows tagged with shard ranks.
+
+        One compiled (K, Bp) call decides for every replica at once;
+        results come back in input order. ``price`` switches the kernel to
+        the priced policy twin (None == unpriced, not merely price 1 —
+        bitwise the same fn the single-shard service runs)."""
+        a = np.asarray(a)
+        B = a.shape[0]
+        if B > self.service.MAX_BATCH:
+            return self._concat([
+                self.allocate_params(
+                    np.asarray(shard_of)[s], a[s], np.asarray(b)[s],
+                    None if observed_tokens is None
+                    else np.asarray(observed_tokens)[s],
+                    None if price is None else np.asarray(price)[s])
+                for s in self._chunks(B)])
+        shard_of, pos, Bp = self._place(shard_of)
+        a2 = self._stack(shard_of, pos, Bp, a, np.float64)
+        b2 = self._stack(shard_of, pos, Bp, b, np.float64)
+        p2 = (np.ones((self.n_shards, Bp), np.float64) if price is None
+              else self._stack(shard_of, pos, Bp, price, np.float64, fill=1))
+        obs2 = (np.zeros((self.n_shards, Bp), np.int64)
+                if observed_tokens is None
+                else self._stack(shard_of, pos, Bp, observed_tokens,
+                                 np.int64))
+        fn = self._sharded_policy_fn(Bp, observed_tokens is not None,
+                                     price is not None)
+        with enable_x64():
+            toks, rt = fn(jnp.asarray(a2), jnp.asarray(b2), jnp.asarray(p2),
+                          jnp.asarray(obs2))
+            toks, rt = np.asarray(toks), np.asarray(rt)
+        return AllocationResult(
+            tokens=toks[shard_of, pos], a=np.asarray(a),
+            b=np.asarray(b), runtime=rt[shard_of, pos])
+
+    def allocate_params_priced(self, shard_of: np.ndarray, a: np.ndarray,
+                               b: np.ndarray, price: np.ndarray,
+                               observed_tokens: Optional[np.ndarray] = None
+                               ) -> AllocationResult:
+        """Price-weighted twin of ``allocate_params`` (sharded)."""
+        return self.allocate_params(shard_of, a, b, observed_tokens,
+                                    price=np.asarray(price, np.float64))
+
+    def allocate_batch(self, shard_of: np.ndarray,
+                       model_in: Dict[str, np.ndarray],
+                       observed_tokens: Optional[np.ndarray] = None
+                       ) -> AllocationResult:
+        """Fused model+policy decisions for shard-tagged rows: stack each
+        replica's inputs, run features -> decode -> policy across all K
+        replicas in one compiled call, unstack to input order."""
+        if not self.model.supports_jit:
+            # host models (GBDT): host (a, b) prediction, sharded policy
+            ref = (observed_tokens if observed_tokens is not None
+                   else np.full(next(iter(model_in.values())).shape[0],
+                                self.policy.max_tokens, np.int64))
+            a, b = self.model.predict_params_batch(model_in, np.asarray(ref))
+            return self.allocate_params(shard_of, a, b, observed_tokens)
+        B = next(iter(model_in.values())).shape[0]
+        if B > self.service.MAX_BATCH:
+            return self._concat([
+                self.allocate_batch(
+                    np.asarray(shard_of)[s],
+                    {k: v[s] for k, v in model_in.items()},
+                    None if observed_tokens is None
+                    else np.asarray(observed_tokens)[s])
+                for s in self._chunks(B)])
+        shard_of, pos, Bp = self._place(shard_of)
+        stacked = {k: self._stack(shard_of, pos, Bp, v, np.asarray(v).dtype)
+                   for k, v in model_in.items()}
+        obs2 = (np.zeros((self.n_shards, Bp), np.int64)
+                if observed_tokens is None
+                else self._stack(shard_of, pos, Bp, observed_tokens,
+                                 np.int64))
+        sig = tuple(sorted((k, v.shape) for k, v in stacked.items()))
+        fn = self._sharded_fused_fn(sig, observed_tokens is not None)
+        with enable_x64():
+            toks, a, b, rt = fn(
+                self.model.params,
+                {k: jnp.asarray(v) for k, v in stacked.items()},
+                jnp.asarray(obs2))
+            toks, a, b, rt = (np.asarray(toks), np.asarray(a),
+                              np.asarray(b), np.asarray(rt))
+        return AllocationResult(
+            tokens=toks[shard_of, pos], a=a[shard_of, pos],
+            b=b[shard_of, pos], runtime=rt[shard_of, pos])

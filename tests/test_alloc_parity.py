@@ -1,12 +1,16 @@
 """Numeric parity: the jnp allocation policies must match the numpy oracles
 bitwise — the serving hot path may be compiled, but it is not allowed to
-make different decisions than the paper's reference policies."""
+make different decisions than the paper's reference policies. The sharded
+fabric inherits the same contract: a K-shard ``ShardedAllocationService``
+must decide bitwise-identically to K independent single-shard services fed
+the routed partitions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.experimental import enable_x64
 
+from repro.cluster.router import Router
 from repro.core.allocator import (
     AllocationPolicy,
     choose_tokens,
@@ -16,6 +20,7 @@ from repro.core.allocator import (
     min_tokens_within_slowdown,
     min_tokens_within_slowdown_jnp,
 )
+from repro.serve import AllocationService, ShardedAllocationService
 
 POLICIES = [
     AllocationPolicy(),                                       # defaults
@@ -124,6 +129,73 @@ def test_priced_decisions_monotone_in_price():
         if prev is not None:
             assert np.all(toks <= prev), price
         prev = toks
+
+
+# ------------------------------------------------------- sharded fabric --
+class _PolicyOnlyModel:
+    """Stub for policy-only service paths (never applied)."""
+    cache_key = "stub#parity"
+    supports_jit = True
+    scaler = params = None
+    family = "stub"
+
+
+def _routed_partitions(n, n_shards, seed=0):
+    rng = np.random.RandomState(seed)
+    a = np.concatenate([rng.uniform(-3.0, -1e-4, n), [-1e-4, -1.0, -2.9]])
+    b = np.concatenate([np.exp(rng.uniform(-1.0, 9.0, n)), [1.0, 7.0, 1e4]])
+    obs = rng.randint(1, 7000, a.size)
+    price = np.exp(rng.uniform(0.0, np.log(16.0), a.size))
+    router = Router(n_shards, seed=3)
+    shard_of = router.rank(router.assign(rng.randint(0, 10_000, a.size)))
+    return a, b, obs, price, shard_of
+
+
+@pytest.mark.parametrize("n_shards", [1, 3, 8])
+@pytest.mark.parametrize("with_observed", [False, True])
+def test_sharded_service_bitwise_matches_per_shard_oracles(n_shards,
+                                                           with_observed):
+    """The fabric's one compiled (K, Bp) policy call must decide bitwise
+    like K independent single-shard services — and therefore like the
+    scalar numpy oracle — on the routed partitions."""
+    pol = AllocationPolicy(max_slowdown=0.05)
+    a, b, obs, price, shard_of = _routed_partitions(120, n_shards)
+    obs_in = obs if with_observed else None
+    fabric = ShardedAllocationService(
+        AllocationService(_PolicyOnlyModel(), pol), n_shards=n_shards)
+    got = fabric.allocate_params(shard_of, a, b, observed_tokens=obs_in)
+    got_priced = fabric.allocate_params_priced(shard_of, a, b, price,
+                                               observed_tokens=obs_in)
+    for k in range(n_shards):
+        m = shard_of == k
+        solo = AllocationService(_PolicyOnlyModel(), pol)
+        want = solo.allocate_params(a[m], b[m],
+                                    None if obs_in is None else obs_in[m])
+        np.testing.assert_array_equal(got.tokens[m], want.tokens)
+        np.testing.assert_array_equal(got.runtime[m], want.runtime)
+        want_p = solo.allocate_params_priced(
+            a[m], b[m], price[m], None if obs_in is None else obs_in[m])
+        np.testing.assert_array_equal(got_priced.tokens[m], want_p.tokens)
+    # ... and the single-shard services themselves are oracle-parity, so
+    # the fabric is transitively bitwise-equal to the scalar policy
+    want_np = choose_tokens_batch(a, b, pol, obs_in)
+    np.testing.assert_array_equal(got.tokens, want_np)
+
+
+def test_sharded_service_empty_and_lopsided_shards():
+    """Shards with zero rows must not perturb the loaded shards, and the
+    block bucket follows the fullest shard."""
+    pol = AllocationPolicy(max_slowdown=0.05)
+    a, b, obs, _, _ = _routed_partitions(64, 1, seed=5)
+    shard_of = np.zeros(a.size, np.int64)       # everything on shard 0 of 4
+    fabric = ShardedAllocationService(
+        AllocationService(_PolicyOnlyModel(), pol), n_shards=4)
+    got = fabric.allocate_params(shard_of, a, b, observed_tokens=obs)
+    np.testing.assert_array_equal(got.tokens, choose_tokens_batch(a, b, pol,
+                                                                  obs))
+    stats = fabric.replica_stats()
+    assert stats[0]["queries"] == a.size
+    assert all(s["queries"] == 0 for s in stats[1:])
 
 
 @pytest.mark.parametrize("max_slowdown", [0.0, 0.05, 0.3])

@@ -8,6 +8,8 @@ from repro.cluster import (
     ClusterMetrics,
     ClusterSimulator,
     PCCCache,
+    PoolShards,
+    Router,
     TokenPool,
 )
 from repro.core.allocator import AllocationPolicy
@@ -95,6 +97,49 @@ def test_token_pool_lease_cycle():
         pool.acquire_batch(np.array([9]), np.array([101]), np.array([1.0]))
 
 
+def test_pool_shards_cross_shard_expiry_and_resize():
+    """The stacked-table kernels: expiry spanning shards in one call, and a
+    resize batch that scatters into two shards' tables at once."""
+    pool = PoolShards(capacity_per_shard=100, n_shards=3, max_leases=8)
+    pool.acquire_batch(0, np.array([1, 2]), np.array([40, 30]),
+                       np.array([10.0, 50.0]))
+    pool.acquire_batch(2, np.array([3]), np.array([70]), np.array([10.0]))
+    assert pool.free.tolist() == [30, 100, 30]
+    assert pool.next_expiry() == 10.0
+    sh, qids, toks = pool.expire(15.0)
+    assert sorted(zip(sh.tolist(), qids.tolist())) == [(0, 1), (2, 3)]
+    assert sorted(toks.tolist()) == [40, 70]
+    assert pool.free.tolist() == [70, 100, 100]
+    # cross-shard resize in one kernel call
+    pool.acquire_batch(1, np.array([7]), np.array([50]), np.array([90.0]))
+    pool.resize_batch(np.array([0, 1]), np.array([2, 7]),
+                      np.array([10, 80]), np.array([60.0, 95.0]))
+    assert pool.free.tolist() == [90, 20, 100]
+    assert pool.n_active == 2
+    with pytest.raises(AssertionError):          # per-shard over-commit
+        pool.acquire_batch(1, np.array([9]), np.array([21]),
+                           np.array([1.0]))
+
+
+# ------------------------------------------------------------------- router --
+def test_router_seeded_contracts():
+    """Seeded twin of the hypothesis sweep (tests/test_router.py), so the
+    router's three contracts hold even where hypothesis is absent."""
+    keys = np.arange(4000)
+    r = Router(8, load_factor=1.25, seed=1)
+    np.testing.assert_array_equal(r.home(keys), r.home(keys))
+    counts = np.bincount(r.rank(r.assign(keys)), minlength=8)
+    assert counts.max() <= int(np.ceil(1.25 * keys.size / 8))
+    grown = Router(9, seed=1).home(keys)
+    moved = r.home(keys) != grown
+    assert np.all(grown[moved] == 8) and 0 < moved.mean() < 0.5
+    minus = Router(shard_ids=[0, 1, 2, 3, 4, 5, 6], seed=1).home(keys)
+    kept = r.home(keys) != 7
+    np.testing.assert_array_equal(r.home(keys)[kept], minus[kept])
+    second = r.second(keys)
+    assert np.all(second != r.home(keys))
+
+
 # -------------------------------------------------------------------- cache --
 def test_pcc_cache_refinement_matches_scalar_fit():
     trace = TraceGenerator(seed=9, n_unique=4, rate_qps=2.0).generate(4)
@@ -175,6 +220,28 @@ def test_pcc_cache_duplicate_key_divergent_areas():
     assert hit.tolist() == [False, False]
     assert a_l.tolist() == [0.0, 0.0]
     assert 1 not in cache and 0 in cache
+
+
+def test_pcc_cache_dense_view_not_rebuilt_on_unchanged_lookups():
+    """Regression (satellite): the sorted columnar view must be rebuilt only
+    when entries change — the sharded hot path probes K caches every epoch
+    and must not re-densify untouched shards."""
+    trace = TraceGenerator(seed=9, n_unique=4, rate_qps=2.0).generate(4)
+    cache = PCCCache()
+    for u in (0, 1):
+        _refine_one(cache, u, trace.skylines[u], trace.jobs[u].default_tokens)
+    assert cache.stats["dense_rebuilds"] == 0     # nothing looked up yet
+    cache.lookup(np.array([0, 1]))
+    assert cache.stats["dense_rebuilds"] == 1
+    for _ in range(5):                            # steady-state epochs: no
+        cache.lookup(np.array([1, 0, 3]))         # mutation, no rebuild
+        cache.missing(np.array([2, 3]))
+    assert cache.stats["dense_rebuilds"] == 1
+    _refine_one(cache, 2, trace.skylines[2], trace.jobs[2].default_tokens)
+    cache.lookup(np.array([2]))                   # mutation -> one rebuild
+    assert cache.stats["dense_rebuilds"] == 2
+    cache.lookup(np.array([2]))
+    assert cache.stats["dense_rebuilds"] == 2
 
 
 def test_pcc_cache_lru_eviction_bound():
@@ -347,6 +414,89 @@ def test_deterministic_replay_same_seed_same_policy(service):
         np.testing.assert_array_equal(e1, e2)
         np.testing.assert_array_equal(r1.alloc_errors, r2.alloc_errors)
         np.testing.assert_array_equal(r1.cache_hits, r2.cache_hits)
+
+
+def test_sharded_k1_reproduces_legacy_single_pool_replay(service):
+    """Satellite regression: the sharded simulator at K=1 *is* the legacy
+    single-pool path. A default-config replay (the pre-fabric construction)
+    must be bitwise-identical in every metric to an explicit K=1 run, and
+    the routing knobs must be inert at K=1 — turning them must not perturb
+    a single decision, completion, or epoch sample.
+
+    (The same equality was verified against the captured pre-refactor
+    ClusterReport on the seeded 10k trace before this refactor landed.)
+    """
+    trace = TraceGenerator(seed=55, n_unique=16, rate_qps=1.0).generate(400)
+    for base_cfg, k1_cfg in (
+            (ClusterConfig(capacity=4096),
+             ClusterConfig(capacity=4096, n_shards=1, load_factor=2.0,
+                           router_vnodes=16, router_seed=9)),
+            (ClusterConfig(capacity=4096, admission="edf", elastic=True,
+                           pricing="elastic"),
+             ClusterConfig(capacity=4096, admission="edf", elastic=True,
+                           pricing="elastic", n_shards=1,
+                           spill_threshold=0.1))):
+        legacy = ClusterSimulator(service, base_cfg).run(trace)
+        k1 = ClusterSimulator(service, k1_cfg).run(trace)
+        assert dict(legacy.metrics) == dict(k1.metrics)
+        np.testing.assert_array_equal(legacy.alloc_errors, k1.alloc_errors)
+        np.testing.assert_array_equal(legacy.cache_hits, k1.cache_hits)
+        t1, e1 = legacy.error_series
+        t2, e2 = k1.error_series
+        np.testing.assert_array_equal(t1, t2)
+        np.testing.assert_array_equal(e1, e2)
+        assert legacy.metrics.get("n_spilled", 0) == 0
+        assert "utilization_shard0" not in legacy.metrics  # K=1 report clean
+
+
+def test_sharded_fabric_replay_end_to_end(service):
+    """Tentpole: a K-shard replay must conserve completions, keep cache
+    affinity (hit rate within 2 points of single-shard on the same
+    Zipf-repeat trace), account spills, and report per-shard columns."""
+    trace = TraceGenerator(seed=33, n_unique=40, rate_qps=1.0).generate(800)
+    K = 4
+    one = ClusterSimulator(service, ClusterConfig(capacity=16384)).run(trace)
+    rep = ClusterSimulator(service, ClusterConfig(
+        capacity=16384, n_shards=K)).run(trace)
+    m = rep.metrics
+    assert m["n_completed"] + m["n_rejected"] == len(trace)
+    assert abs(m["cache_hit_rate"] - one.metrics["cache_hit_rate"]) <= 0.02
+    assert "spill_rate" in m and "shard_imbalance" in m
+    for k in range(K):
+        assert f"utilization_shard{k}" in m
+    # per-shard utilization decomposes fabric utilization (equal shares)
+    per_shard = np.array([m[f"utilization_shard{k}"] for k in range(K)])
+    assert np.isclose(per_shard.mean(), m["utilization"], atol=2e-3)
+    # every decision was computed by a replica, and replicas saw real load
+    stats = rep.replica_stats
+    assert sum(s["queries"] for s in stats) >= len(trace)
+    assert sum(s["queries"] > 0 for s in stats) == K
+    # deterministic replay holds for the sharded loop too
+    rep2 = ClusterSimulator(service, ClusterConfig(
+        capacity=16384, n_shards=K)).run(trace)
+    assert dict(rep.metrics) == dict(rep2.metrics)
+
+
+def test_sharded_decisions_match_single_shard_oracles(service):
+    """Fabric decisions on a replay are bitwise the per-shard oracles': the
+    cache-hit rows of one epoch batch re-decided by a plain single-shard
+    service on the routed partition give identical tokens. (The fused cold
+    path has the same guarantee — tests/test_alloc_parity.py and
+    test_serve.py cover it at the service level.)"""
+    from repro.serve import AllocationService, ShardedAllocationService
+    rng = np.random.RandomState(4)
+    a = rng.uniform(-2.5, -0.01, 200)
+    b = np.exp(rng.uniform(0.0, 8.0, 200))
+    obs = rng.randint(1, 7000, 200)
+    router = Router(4, seed=2)
+    shard_of = router.rank(router.home(rng.randint(0, 500, 200)))
+    fabric = ShardedAllocationService(service, n_shards=4)
+    got = fabric.allocate_params(shard_of, a, b, observed_tokens=obs)
+    for k in range(4):
+        m = shard_of == k
+        solo = AllocationService(service.model, service.policy)
+        want = solo.allocate_params(a[m], b[m], observed_tokens=obs[m])
+        np.testing.assert_array_equal(got.tokens[m], want.tokens)
 
 
 def test_simulator_replays_10k_trace(service):

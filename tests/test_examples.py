@@ -45,6 +45,12 @@ def test_cluster_sim_edf_elastic():
     assert "vs priority/fixed baseline" in out and "mean price" in out
 
 
+def test_cluster_sim_sharded():
+    out = _run("cluster_sim.py", "--events", "400", "--n-train", "120",
+               "--n-unique", "32", "--shards", "2", "--load-factor", "1.5")
+    assert "fabric: 2 shards" in out and "decisions per replica" in out
+
+
 def test_train_lm_short():
     out = _run("train_lm.py", "--steps", "6", "--seq-len", "32",
                "--global-batch", "2", "--ckpt-dir", "/tmp/tlm_test_ckpt")

@@ -16,8 +16,10 @@ from repro.core.models import (
 )
 from repro.core.pipeline import TasqConfig, TasqPipeline
 from repro.launch.serve import AllocationFrontend
-from repro.serve import AllocationRequest, AllocationService, MicroBatcher
-from repro.serve.batching import batch_bucket, node_bucket, pad_to
+from repro.serve import (AllocationRequest, AllocationService, MicroBatcher,
+                         ShardedAllocationService)
+from repro.serve.batching import (batch_bucket, node_bucket, pad_to,
+                                  shard_positions)
 
 
 # ----------------------------------------------------------------- registry --
@@ -193,6 +195,91 @@ def test_allocation_frontend_closed_set(pipeline):
     assert set(out) == set(range(12))
     assert all(t >= 1 for t in out.values())
     assert fe.pending == 0
+
+
+def test_shard_positions_places_rows_in_order():
+    shard_of = np.array([2, 0, 2, 1, 0, 2])
+    pos, counts, Bp = shard_positions(shard_of, 4)
+    assert counts.tolist() == [2, 1, 3, 0]
+    assert Bp == 8                                  # bucket of fullest shard
+    # rows of one shard keep their relative input order
+    assert pos[shard_of == 2].tolist() == [0, 1, 2]
+    assert pos[shard_of == 0].tolist() == [0, 1]
+    # (shard, pos) pairs are unique slots
+    assert len({(s, p) for s, p in zip(shard_of, pos)}) == shard_of.size
+
+
+@pytest.mark.parametrize("key", ("nn:lf2", "gnn:lf2", "gbdt"))
+def test_sharded_fused_path_matches_per_shard_services(pipeline, key):
+    """The fabric's stacked (K, Bp) fused call — model apply, decode, and
+    policy in one executable spanning every replica — must decide bitwise
+    like independent single-shard services fed the same partitions, for
+    the jit families and the host (GBDT) family alike."""
+    ds = pipeline.eval_set
+    model = pipeline.models[key]
+    pol = AllocationPolicy(max_slowdown=0.05)
+    K = 3
+    fabric = ShardedAllocationService(AllocationService(model, pol),
+                                      n_shards=K)
+    inputs = model.batch_inputs(ds)
+    obs = ds.observed_alloc.astype(np.int64)
+    shard_of = np.arange(len(ds)) % K
+    got = fabric.allocate_batch(shard_of, inputs, observed_tokens=obs)
+    for k in range(K):
+        m = shard_of == k
+        solo = AllocationService(model, pol)
+        want = solo.allocate_batch({n: v[m] for n, v in inputs.items()},
+                                   observed_tokens=obs[m])
+        np.testing.assert_array_equal(got.tokens[m], want.tokens)
+        np.testing.assert_array_equal(got.a[m], want.a)
+        np.testing.assert_array_equal(got.b[m], want.b)
+
+
+def test_sharded_service_shard_map_mode_parity():
+    """With one device per shard (subprocess, forced host devices) the
+    fabric must take the ``jax.shard_map`` path and still match the
+    per-shard oracles bitwise."""
+    import os
+    import subprocess
+    import sys
+    script = r"""
+import numpy as np
+from repro.core.allocator import AllocationPolicy, choose_tokens_batch
+from repro.serve import AllocationService, ShardedAllocationService
+from repro.launch.mesh import make_allocation_mesh
+
+class Stub:
+    cache_key = "stub#sm"
+    supports_jit = True
+    scaler = params = None
+    family = "stub"
+
+K = 4
+mesh = make_allocation_mesh(K)
+fab = ShardedAllocationService(AllocationService(Stub(),
+    AllocationPolicy(max_slowdown=0.05)), n_shards=K, mesh=mesh)
+assert fab.mesh is not None, "expected the shard_map path"
+rng = np.random.RandomState(0)
+a = rng.uniform(-3.0, -1e-4, 200)
+b = np.exp(rng.uniform(-1.0, 9.0, 200))
+obs = rng.randint(1, 7000, 200)
+shard_of = rng.randint(0, K, 200)
+got = fab.allocate_params(shard_of, a, b, observed_tokens=obs)
+want = choose_tokens_batch(a, b, fab.policy, obs)
+assert np.array_equal(got.tokens, want), "shard_map decisions diverge"
+print("SHARD_MAP_PARITY_OK")
+"""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.pathsep.join(
+                   filter(None, ["src", os.environ.get("PYTHONPATH")])))
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=300,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHARD_MAP_PARITY_OK" in proc.stdout
 
 
 def test_gbdt_host_path_through_service(pipeline):
