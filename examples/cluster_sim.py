@@ -1,10 +1,13 @@
 """Cluster simulation quickstart: a multi-tenant query stream through the
 serving stack, end to end.
 
-  1. train a small NN PCC model (the cold-path allocator),
+  1. build the whole serving stack declaratively — pipeline, NN PCC model,
+     policy, mesh, fabric, router — from one AllocatorConfig
+     (repro.api.Allocator.from_config),
   2. synthesize a bursty, Zipf-repeated, SLA-tagged trace (TraceGenerator),
-  3. replay it through the AllocationFrontend's service against a finite
-     token pool with priority admission (repro.cluster),
+  3. replay it through the allocator's fabric against a finite token pool
+     with priority admission (repro.cluster) — every decision flows through
+     the typed AllocationRequest -> decide() -> AllocationDecision protocol,
   4. watch the online PCC refinement loop: repeat queries graduate from the
      learned model to their exact-history PCCCache entry, and the
      allocation error vs the exact-PCC oracle collapses,
@@ -26,12 +29,10 @@ import argparse
 
 import numpy as np
 
+from repro.api import Allocator, AllocatorConfig
 from repro.cluster import ClusterConfig
-from repro.core.allocator import AllocationPolicy
 from repro.core.models import NNConfig
-from repro.core.pipeline import TasqConfig, TasqPipeline
-from repro.launch.serve import AllocationFrontend
-from repro.serve import AllocationService
+from repro.core.pipeline import TasqConfig
 from repro.workloads import TraceGenerator
 
 
@@ -55,9 +56,11 @@ def main() -> None:
         ap.error("--shards must be >= 1")
 
     print("training the cold-path PCC model ...")
-    pipe = TasqPipeline(TasqConfig(n_train=args.n_train, n_eval=60,
-                                   nn=NNConfig(epochs=15))).build()
-    pipe.train_nn("lf2")
+    allocator = Allocator.from_config(AllocatorConfig(
+        family="nn", loss="lf2", policy="bounded_slowdown",
+        n_shards=args.shards, load_factor=args.load_factor,
+        pipeline=TasqConfig(n_train=args.n_train, n_eval=60,
+                            nn=NNConfig(epochs=15))))
 
     gen = TraceGenerator(seed=23, n_unique=args.n_unique, n_tenants=6,
                          rate_qps=0.5)
@@ -66,11 +69,8 @@ def main() -> None:
           f"scripts, {trace.events[-1].arrival_s/60:.0f} min of arrivals, "
           f"{np.mean(trace.repeat_mask()):.0%} repeats")
 
-    service = AllocationService(pipe.models["nn:lf2"],
-                                AllocationPolicy(max_slowdown=0.05))
-    frontend = AllocationFrontend(service, n_shards=args.shards)
     capacity = 8192 // args.shards * args.shards   # equal per-shard slices
-    report = frontend.run_cluster(
+    report = allocator.run_cluster(
         trace, ClusterConfig(capacity=capacity, n_shards=args.shards,
                              load_factor=args.load_factor),
         admission=args.admission, elastic=args.elastic, pricing=args.pricing)
@@ -90,7 +90,7 @@ def main() -> None:
     if args.admission != "priority" or args.elastic or args.pricing != "fixed":
         # same fabric topology, scheduler knobs at defaults: the printed
         # delta isolates the scheduler change, not the sharding change
-        base = frontend.run_cluster(
+        base = allocator.run_cluster(
             trace, ClusterConfig(capacity=capacity, n_shards=args.shards,
                                  load_factor=args.load_factor))
         bm = base.metrics

@@ -1,0 +1,43 @@
+"""``repro.api`` — the typed allocation protocol and its facade.
+
+One stable request/decision protocol for every allocation scenario:
+
+    from repro.api import Allocator, AllocatorConfig, AllocationRequest
+    allocator = Allocator.from_config(AllocatorConfig(family="nn"))
+    decision = allocator.decide(AllocationRequest(model_in=...,
+                                                  observed_tokens=...))
+
+``AllocationRequest -> decide(DecisionContext) -> AllocationDecision``
+replaces the pre-PR-5 2x2x2 method matrix (``allocate_params`` /
+``allocate_params_priced`` / ``allocate_batch`` / ``allocate_dataset``,
+each doubled on the sharded fabric): priced/unpriced, sharded/unsharded,
+and observed/unobserved are *fields on the context*, not method variants —
+and new scenarios (priced SLA tiers, cost-aware knobs, preempted
+remainders, refit triggers) plug in the same way.
+
+The protocol types import light (numpy + jax pytree registration only);
+the ``Allocator`` facade — which pulls the serve/cluster/launch stack —
+loads lazily on first attribute access, so ``repro.serve`` importing the
+types never cycles back through the facade.
+"""
+from repro.api._compat import reset_deprecation_warnings, warn_deprecated
+from repro.api.types import (AllocationDecision, AllocationRequest,
+                             DecisionContext, Provenance)
+
+__all__ = [
+    "AllocationDecision",
+    "AllocationRequest",
+    "Allocator",
+    "AllocatorConfig",
+    "DecisionContext",
+    "Provenance",
+    "reset_deprecation_warnings",
+    "warn_deprecated",
+]
+
+
+def __getattr__(name: str):
+    if name in ("Allocator", "AllocatorConfig"):
+        from repro.api import allocator as _allocator
+        return getattr(_allocator, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

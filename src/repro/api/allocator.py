@@ -1,0 +1,142 @@
+"""``Allocator``: the one user-facing object over the serving stack.
+
+``Allocator.from_config(AllocatorConfig(...))`` builds, declaratively, what
+used to take hand-wiring pipeline -> model -> policy -> service -> mesh ->
+fabric across five modules:
+
+  * the training pipeline (``TasqPipeline``) and the requested model family
+    via the ``repro.core.models`` registry (``build_model``);
+  * the allocation policy via the symmetric ``build_policy`` registry;
+  * the ``AllocationService``, the allocation mesh, and the K-shard
+    ``ShardedAllocationService`` fabric (through ``AllocationFrontend``);
+  * the consistent-hash ``Router`` that places templates on shards.
+
+Everything then flows through the typed protocol: ``decide()`` takes an
+``AllocationRequest`` (+ optional ``DecisionContext``) and returns an
+``AllocationDecision`` — the single entry point that replaced the
+priced/unpriced x sharded/unsharded x observed/unobserved method matrix.
+Decisions run the same compiled kernels as the legacy methods, so they are
+bitwise-equal to every pre-protocol path (tests/test_alloc_parity.py,
+tests/test_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.api.types import (AllocationDecision, AllocationRequest,
+                             DecisionContext)
+from repro.core.allocator import AllocationPolicy, build_policy
+from repro.core.pipeline import TasqConfig, TasqPipeline
+
+__all__ = ["Allocator", "AllocatorConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocatorConfig:
+    """Declarative recipe for a full serving stack.
+
+    ``family``/``loss`` name the model through the ``build_model`` registry;
+    ``policy`` (+ ``policy_overrides``) names the allocation policy through
+    ``build_policy``; the sharding/router fields size the fabric. New
+    scenarios extend this config (and ``DecisionContext``), not the method
+    surface.
+    """
+    family: str = "nn"                 # build_model registry key
+    loss: str = "lf2"                  # lf1 | lf2 | lf3 (parameter heads)
+    policy: str = "bounded_slowdown"   # build_policy registry key
+    policy_overrides: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    n_shards: int = 1                  # replicas in the serving fabric
+    max_batch: int = 256               # micro-batcher flush size
+    load_factor: float = 1.25          # router bounded-load factor
+    router_vnodes: int = 64
+    router_seed: int = 0
+    pipeline: TasqConfig = TasqConfig()
+
+
+class Allocator:
+    """Facade over service + fabric + router + frontend.
+
+    Build it from a config (trains the model) or wrap an already-trained
+    service (``Allocator(service, n_shards=...)``). ``decide`` dispatches on
+    the context: ``shard_of`` set routes through the fabric's one compiled
+    (K, Bp) call, otherwise the single-replica service decides.
+    """
+
+    def __init__(self, service, *, n_shards: int = 1, max_batch: int = 256,
+                 mesh=None, load_factor: float = 1.25,
+                 router_vnodes: int = 64, router_seed: int = 0,
+                 pipeline: Optional[TasqPipeline] = None,
+                 config: Optional[AllocatorConfig] = None):
+        from repro.cluster.router import Router
+        from repro.launch.serve import AllocationFrontend
+        self.frontend = AllocationFrontend(service, max_batch=max_batch,
+                                           n_shards=n_shards, mesh=mesh)
+        self.service = service
+        self.fabric = self.frontend.fabric
+        self.mesh = self.frontend.mesh
+        self.n_shards = int(n_shards)
+        self.router = Router(n_shards, n_vnodes=router_vnodes,
+                             load_factor=load_factor, seed=router_seed)
+        self.pipeline = pipeline
+        self.config = config
+
+    @classmethod
+    def from_config(cls, config: AllocatorConfig = AllocatorConfig()
+                    ) -> "Allocator":
+        """Build the whole stack from one declarative config: pipeline ->
+        model (registry) -> policy (registry) -> service -> mesh + fabric +
+        router."""
+        from repro.serve.service import AllocationService
+        pipeline = TasqPipeline(config.pipeline).build()
+        model = pipeline.train(config.family, loss=config.loss)
+        policy = build_policy(config.policy, **config.policy_overrides)
+        service = AllocationService(model, policy)
+        return cls(service, n_shards=config.n_shards,
+                   max_batch=config.max_batch,
+                   load_factor=config.load_factor,
+                   router_vnodes=config.router_vnodes,
+                   router_seed=config.router_seed,
+                   pipeline=pipeline, config=config)
+
+    # ------------------------------------------------------------- surface --
+    @property
+    def model(self):
+        return self.service.model
+
+    @property
+    def policy(self) -> AllocationPolicy:
+        return self.service.policy
+
+    def decide(self, request: AllocationRequest,
+               context: Optional[DecisionContext] = None
+               ) -> AllocationDecision:
+        """One typed entry point for every allocation decision (the
+        frontend dispatches: shard placement -> fabric, else service)."""
+        return self.frontend.decide(request, context)
+
+    def place(self, template_id: np.ndarray) -> np.ndarray:
+        """Home shard rank per template (consistent hashing) — ready to use
+        as ``DecisionContext.shard_of``. Load-aware spill routing lives on
+        ``self.router.route``."""
+        tid = np.asarray(template_id)
+        return self.router.rank(self.router.home(tid))
+
+    # ------------------------------------------------------ queued serving --
+    def submit(self, request_id: int, model_in: Dict[str, np.ndarray],
+               observed_tokens: Optional[int] = None) -> None:
+        self.frontend.submit(request_id, model_in, observed_tokens)
+
+    def step(self) -> Dict[int, int]:
+        return self.frontend.step()
+
+    def run(self, requests: Sequence[AllocationRequest]) -> Dict[int, int]:
+        return self.frontend.run(requests)
+
+    def run_cluster(self, trace, cluster_cfg=None, **overrides):
+        """Replay a trace through the cluster simulator over this
+        allocator's fabric (see ``AllocationFrontend.run_cluster``)."""
+        return self.frontend.run_cluster(trace, cluster_cfg, **overrides)

@@ -28,8 +28,8 @@ from typing import Dict, Optional, Protocol, Type
 import numpy as np
 
 __all__ = ["QueueView", "SchedulerPolicy", "FifoPolicy", "PriorityPolicy",
-           "EdfPolicy", "make_policy", "PriceSignal", "deadline_floor",
-           "SCHEDULER_POLICIES"]
+           "EdfPolicy", "make_policy", "register_scheduler_policy",
+           "PriceSignal", "deadline_floor", "SCHEDULER_POLICIES"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +53,19 @@ class SchedulerPolicy(Protocol):
         ...
 
 
+SCHEDULER_POLICIES: Dict[str, Type] = {}
+
+
+def register_scheduler_policy(cls):
+    """Class decorator: expose a ``SchedulerPolicy`` to ``make_policy`` by
+    its ``name`` — the admission analogue of ``register_model`` /
+    ``register_policy``, so new orderings (fairness weights, starvation
+    aging) plug in without touching the simulator."""
+    SCHEDULER_POLICIES[cls.name] = cls
+    return cls
+
+
+@register_scheduler_policy
 class FifoPolicy:
     name = "fifo"
 
@@ -60,6 +73,7 @@ class FifoPolicy:
         return np.argsort(queue.arrival_s, kind="stable")
 
 
+@register_scheduler_policy
 class PriorityPolicy:
     name = "priority"
 
@@ -67,6 +81,7 @@ class PriorityPolicy:
         return np.lexsort((queue.arrival_s, queue.priority))
 
 
+@register_scheduler_policy
 class EdfPolicy:
     """EDF over SLA slack: strictly smaller slack is always admitted first;
     arrival time (then id) breaks ties, so simultaneous arrivals with equal
@@ -75,10 +90,6 @@ class EdfPolicy:
 
     def order(self, queue: QueueView) -> np.ndarray:
         return np.lexsort((queue.ids, queue.arrival_s, queue.slack_s))
-
-
-SCHEDULER_POLICIES: Dict[str, Type] = {
-    p.name: p for p in (FifoPolicy, PriorityPolicy, EdfPolicy)}
 
 
 def make_policy(name: str) -> SchedulerPolicy:

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.types import AllocationRequest, DecisionContext
 from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.pcc_cache import ShardedPCCCache
 from repro.cluster.pool import PoolShards
@@ -209,8 +210,8 @@ class ClusterSimulator:
         a_ex, b_ex = oracle_cache.refine_batch(
             home_u, np.arange(U), sky, lens, defaults, peaks)
         oracle = np.minimum(
-            self.service.allocate_params(a_ex, b_ex,
-                                         observed_tokens=defaults).tokens,
+            self.service.decide(AllocationRequest(
+                a=a_ex, b=b_ex, observed_tokens=defaults)).tokens,
             cap_shard).astype(np.int64)
 
         # per-query state, indexed by query id
@@ -327,25 +328,30 @@ class ClusterSimulator:
                 else:
                     hit = np.zeros(ids.size, bool)
                 if np.any(hit):      # exact-history path: policy twin only
-                    tokens[hit] = self.fabric.allocate_params(
-                        exec_r[hit], a_c[hit], b_c[hit],
-                        observed_tokens=obs[hit]).tokens
+                    tokens[hit] = self.fabric.decide(
+                        AllocationRequest(a=a_c[hit], b=b_c[hit],
+                                          observed_tokens=obs[hit]),
+                        DecisionContext(shard_of=exec_r[hit])).tokens
                     a_dec[hit] = a_c[hit]
                     b_dec[hit] = b_c[hit]
                 miss = ~hit
                 if np.any(miss):     # cold path: fused model+policy kernel
                     model_in = {k: v[jb[miss]] for k, v in model_pool.items()}
-                    res = self.fabric.allocate_batch(
-                        exec_r[miss], model_in, observed_tokens=obs[miss])
+                    res = self.fabric.decide(
+                        AllocationRequest(model_in=model_in,
+                                          observed_tokens=obs[miss]),
+                        DecisionContext(shard_of=exec_r[miss]))
                     tokens[miss] = res.tokens
                     a_dec[miss] = res.a
                     b_dec[miss] = res.b
                 perf = np.minimum(tokens, cap_shard)
                 if priced:           # re-price the whole epoch batch at once,
                     p = prices[exec_r, sla_all[ids]]
-                    tokens = np.minimum(self.fabric.allocate_params_priced(
-                        exec_r, a_dec, b_dec, p,
-                        observed_tokens=obs).tokens, cap_shard)
+                    tokens = np.minimum(self.fabric.decide(
+                        AllocationRequest(a=a_dec, b=b_dec,
+                                          observed_tokens=obs),
+                        DecisionContext(price=p, shard_of=exec_r)
+                        ).tokens, cap_shard)
                     # ... floored so no query is priced into a predicted
                     # deadline miss (past the performance ask nothing helps)
                     tokens = np.maximum(tokens, deadline_floor(
@@ -382,10 +388,12 @@ class ClusterSimulator:
                     cand_end = end_q[cand]
                     # re-price running leases at current contention; shrink
                     # the ones whose priced ask fell below their lease
-                    tgt = np.minimum(self.fabric.allocate_params_priced(
-                        cand_sh, a_q[cand], b_q[cand],
-                        prices[cand_sh, sla_all[cand]],
-                        observed_tokens=defaults[jb_all[cand]]).tokens,
+                    tgt = np.minimum(self.fabric.decide(
+                        AllocationRequest(
+                            a=a_q[cand], b=b_q[cand],
+                            observed_tokens=defaults[jb_all[cand]]),
+                        DecisionContext(price=prices[cand_sh, sla_all[cand]],
+                                        shard_of=cand_sh)).tokens,
                         cap_shard)
                     # deadline guard: the shrunk lease's predicted *total*
                     # runtime must keep the remaining work inside the slack
@@ -420,10 +428,12 @@ class ClusterSimulator:
                 if np.any(moved):
                     rq = all_q[moved]
                     p = pq[moved]
-                    toks = np.minimum(self.fabric.allocate_params_priced(
-                        shard_q[rq], a_q[rq], b_q[rq], p,
-                        observed_tokens=defaults[jb_all[rq]]).tokens,
-                        cap_shard)
+                    toks = np.minimum(self.fabric.decide(
+                        AllocationRequest(
+                            a=a_q[rq], b=b_q[rq],
+                            observed_tokens=defaults[jb_all[rq]]),
+                        DecisionContext(price=p, shard_of=shard_q[rq])
+                        ).tokens, cap_shard)
                     toks = np.maximum(toks, deadline_floor(
                         a_q[rq], b_q[rq], deadline_all[rq] - now, perf_q[rq]))
                     jb = jb_all[rq]

@@ -38,11 +38,12 @@ import numpy as np
 from repro.core import arepas
 from repro.core.pcc import pcc_runtime
 
-__all__ = ["AllocationPolicy", "choose_tokens", "choose_tokens_jnp",
+__all__ = ["AllocationPolicy", "available_policies", "build_policy",
+           "choose_tokens", "choose_tokens_jnp",
            "choose_tokens_batch", "choose_tokens_priced",
            "choose_tokens_priced_jnp", "choose_tokens_priced_batch",
            "min_tokens_within_slowdown", "min_tokens_within_slowdown_jnp",
-           "token_reduction_cdf"]
+           "register_policy", "token_reduction_cdf"]
 
 # Bisection ranges are token counts (< 2^48 by a huge margin); a fixed
 # iteration count makes the search jit-able — extra iterations are no-ops,
@@ -56,6 +57,55 @@ class AllocationPolicy:
     max_slowdown: float = 0.0       # acceptable runtime increase vs full alloc
     min_tokens: int = 1
     max_tokens: int = 6287
+
+
+# ---------------------------------------------------------- policy registry --
+# Symmetric to repro.core.models.build_model: a string key resolves a policy
+# builder, so AllocatorConfig (repro.api) and any declarative caller can name
+# the allocation policy the way they name the model family.
+_POLICY_REGISTRY: dict = {}
+
+
+def register_policy(name: str):
+    """``@register_policy("bounded_slowdown")`` exposes a builder —
+    ``(**overrides) -> AllocationPolicy`` — to ``build_policy``."""
+    def deco(fn):
+        _POLICY_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def build_policy(name: str = "default", **overrides) -> AllocationPolicy:
+    """Construct an ``AllocationPolicy`` by registered name; keyword
+    overrides win over the preset's fields."""
+    if name not in _POLICY_REGISTRY:
+        raise KeyError(f"unknown allocation policy {name!r}; "
+                       f"known: {sorted(_POLICY_REGISTRY)}")
+    return _POLICY_REGISTRY[name](**overrides)
+
+
+def available_policies() -> Tuple[str, ...]:
+    return tuple(sorted(_POLICY_REGISTRY))
+
+
+@register_policy("default")
+def _default_policy(**overrides) -> AllocationPolicy:
+    """Paper defaults: marginal-gain cut-off only."""
+    return AllocationPolicy(**overrides)
+
+
+@register_policy("marginal_gain")
+def _marginal_gain_policy(**overrides) -> AllocationPolicy:
+    """§2.1 gain cut-off alone (explicitly no slowdown bisection)."""
+    overrides.setdefault("max_slowdown", 0.0)
+    return AllocationPolicy(**overrides)
+
+
+@register_policy("bounded_slowdown")
+def _bounded_slowdown_policy(**overrides) -> AllocationPolicy:
+    """Figure 2's "5% performance loss" operating point."""
+    overrides.setdefault("max_slowdown", 0.05)
+    return AllocationPolicy(**overrides)
 
 
 def choose_tokens(a: float, b: float, policy: AllocationPolicy,

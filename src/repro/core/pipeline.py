@@ -22,6 +22,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from repro.api._compat import warn_deprecated
 from repro.core.dataset import TasqDataset, build_dataset
 from repro.core.evaluate import CurveEval, eval_pcc_model, eval_xgb_curves
 from repro.core.featurize import Standardizer
@@ -95,29 +96,60 @@ class TasqPipeline:
         return model
 
     def _lf3_teacher(self, loss: str) -> Optional[np.ndarray]:
-        """LF3 distills the GBDT's runtime predictions (paper §4.5)."""
+        """LF3 distills the GBDT's runtime predictions (paper §4.5); the
+        teacher is trained on demand."""
         if loss != "lf3":
             return None
+        if "gbdt" not in self.models:
+            self.train("gbdt")
         return self.models["gbdt"].runtime_at(self.train_set)
 
+    def train(self, family: str, loss: str = "lf2") -> PCCModel:
+        """Train one registry family — the single entry point behind the
+        legacy per-family ``train_xgb/train_nn/train_gnn`` trio.
+
+        ``family`` is a ``repro.core.models`` registry key ("gbdt" | "nn" |
+        "gnn"); ``loss`` picks the loss function for the parameter-head
+        families (ignored by gbdt). Models land in ``self.models`` under
+        the established keys ("gbdt", "nn:<loss>", "gnn:<loss>") and the
+        trained model is returned for direct use (e.g. by
+        ``repro.api.Allocator.from_config``).
+        """
+        if family == "gbdt":
+            model = self._fit("gbdt", build_model("gbdt", cfg=self.cfg.gbdt))
+            # keep the legacy timing key for Table 7 consumers
+            self.timings["xgb_train_s"] = self.timings["gbdt_train_s"]
+            return model
+        if family == "nn":
+            cfg = dataclasses.replace(self.cfg.nn, loss=loss)
+            return self._fit(f"nn:{loss}", build_model("nn", cfg=cfg),
+                             self._lf3_teacher(loss))
+        if family == "gnn":
+            train_cfg = dataclasses.replace(self.cfg.nn, loss=loss,
+                                            epochs=self.cfg.gnn_epochs,
+                                            batch_size=64)
+            return self._fit(f"gnn:{loss}",
+                             build_model("gnn", cfg=self.cfg.gnn_cfg,
+                                         train_cfg=train_cfg),
+                             self._lf3_teacher(loss))
+        raise KeyError(f"unknown PCC model family {family!r}; "
+                       f"known: ('gbdt', 'gnn', 'nn')")
+
+    # ------------------------------------------- legacy shims (one release) --
     def train_xgb(self) -> None:
-        self._fit("gbdt", build_model("gbdt", cfg=self.cfg.gbdt))
-        # keep the legacy timing key for Table 7 consumers
-        self.timings["xgb_train_s"] = self.timings["gbdt_train_s"]
+        """Deprecated: use ``train("gbdt")``."""
+        warn_deprecated("TasqPipeline.train_xgb", 'train("gbdt")')
+        self.train("gbdt")
 
     def train_nn(self, loss: str = "lf2") -> None:
-        cfg = dataclasses.replace(self.cfg.nn, loss=loss)
-        self._fit(f"nn:{loss}", build_model("nn", cfg=cfg),
-                  self._lf3_teacher(loss))
+        """Deprecated: use ``train("nn", loss=...)``."""
+        warn_deprecated("TasqPipeline.train_nn", 'train("nn", loss=...)')
+        self.train("nn", loss=loss)
 
     def train_gnn(self, loss: str = "lf2") -> None:
-        train_cfg = dataclasses.replace(self.cfg.nn, loss=loss,
-                                        epochs=self.cfg.gnn_epochs,
-                                        batch_size=64)
-        self._fit(f"gnn:{loss}",
-                  build_model("gnn", cfg=self.cfg.gnn_cfg,
-                              train_cfg=train_cfg),
-                  self._lf3_teacher(loss))
+        """Deprecated: use ``train("gnn", loss=...)``."""
+        warn_deprecated("TasqPipeline.train_gnn", 'train("gnn", loss=...)')
+        self.train("gnn", loss=loss)
 
     # ------------------------------------------------------------ inference --
     def predict_params(self, key: str, ds: TasqDataset

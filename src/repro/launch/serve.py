@@ -10,10 +10,13 @@ Runs for real on CPU with smoke configs (examples/serve_lm.py); lowers
 against the production mesh for the decode-shape dry-run cells.
 
 ``AllocationFrontend`` is the same request-queue pattern for the paper's
-allocation decisions: single-query PCC allocation requests are micro-batched
-through a ``repro.serve.AllocationService`` — padded/bucketed batches, one
-compiled call per (model, bucket) — mirroring how the LM server keeps its
-decode shapes static.
+allocation decisions: single-query PCC allocation requests
+(``repro.api.AllocationRequest``) are micro-batched through a
+``repro.serve.AllocationService`` — padded/bucketed batches, one compiled
+call per (model, bucket) — mirroring how the LM server keeps its decode
+shapes static. Columnar batches go straight through the typed protocol:
+``decide(AllocationRequest, DecisionContext) -> AllocationDecision``,
+routed to the sharded fabric whenever the context carries shard placement.
 """
 from __future__ import annotations
 
@@ -24,9 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.types import (AllocationDecision, AllocationRequest,
+                             DecisionContext)
 from repro.configs.base import ModelConfig
 from repro.models import model_api
-from repro.serve.batching import AllocationRequest, MicroBatcher
+from repro.serve.batching import MicroBatcher
 from repro.train.steps import make_decode_step, make_prefill_step
 
 __all__ = ["ServeConfig", "Server", "Request", "AllocationFrontend"]
@@ -136,6 +141,16 @@ class AllocationFrontend:
     def step(self) -> Dict[int, int]:
         """Drain the queue: {request_id: allocated tokens}."""
         return self._batcher.flush()
+
+    def decide(self, request: AllocationRequest,
+               context: Optional[DecisionContext] = None
+               ) -> AllocationDecision:
+        """Synchronous protocol entry: a columnar request decided in one
+        compiled call — through the fabric when the context carries shard
+        placement, the single-replica service otherwise."""
+        if context is not None and context.shard_of is not None:
+            return self.fabric.decide(request, context)
+        return self.service.decide(request, context)
 
     def run(self, requests: Sequence[AllocationRequest]) -> Dict[int, int]:
         """Serve a closed set of allocation requests to completion."""

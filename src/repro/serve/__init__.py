@@ -1,16 +1,26 @@
 """Serving layer: batched, jit-compiled PCC allocation decisions.
 
 ``AllocationService`` turns any registered ``PCCModel`` into an online
-allocator: features -> scaled params -> decode -> allocation policy in one
-compiled call per (model, batch bucket). ``MicroBatcher`` queues single-job
-requests and drains them through the service in padded batches.
-``ShardedAllocationService`` serves N replicas of one model behind the same
-API — shard-tagged rows are stacked into (K, Bp) blocks and decided in one
-compiled call under ``jax.shard_map`` (``vmap`` on 1-device hosts), with
-``ReplicaState`` keeping per-replica counters observable.
+allocator behind the typed protocol (``repro.api``):
+``decide(AllocationRequest, DecisionContext) -> AllocationDecision`` runs
+features -> scaled params -> decode -> allocation policy in one compiled
+call per (model, batch bucket), with priced/unpriced, sharded/unsharded,
+and observed/unobserved selected by context *fields* rather than separate
+methods (the legacy method matrix survives as deprecation shims for one
+release). ``MicroBatcher`` queues single-job requests and drains them
+through ``decide`` in padded batches. ``ShardedAllocationService`` serves
+N replicas of one model behind the same protocol — shard-tagged rows are
+stacked into (K, Bp) blocks and decided in one compiled call under
+``jax.shard_map`` (``vmap`` on 1-device hosts), with ``ReplicaState``
+keeping per-replica counters observable.
 """
-from repro.serve.batching import (
+from repro.api.types import (
+    AllocationDecision,
     AllocationRequest,
+    DecisionContext,
+    Provenance,
+)
+from repro.serve.batching import (
     MicroBatcher,
     batch_bucket,
     node_bucket,
@@ -25,10 +35,13 @@ from repro.serve.service import (
 )
 
 __all__ = [
+    "AllocationDecision",
     "AllocationRequest",
     "AllocationResult",
     "AllocationService",
+    "DecisionContext",
     "MicroBatcher",
+    "Provenance",
     "ReplicaState",
     "ShardedAllocationService",
     "batch_bucket",

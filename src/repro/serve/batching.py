@@ -12,15 +12,21 @@ XLA wants a small, fixed set of shapes. Two levers:
 ``MicroBatcher`` is the request queue: submit single-job requests, then
 ``flush()`` groups them by input signature (same node bucket -> same
 compiled fn), pads each group to its batch bucket, and issues one
-``AllocationService.allocate_batch`` call per group.
+``AllocationService.decide`` call per group.
+
+``AllocationRequest`` here IS the typed protocol request
+(``repro.api.types.AllocationRequest``, re-exported for compatibility):
+the micro-batcher's single-query submissions are scalar-field instances of
+the same dataclass the columnar ``decide`` batches use.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.api.types import AllocationRequest
 
 __all__ = ["AllocationRequest", "MicroBatcher", "batch_bucket", "node_bucket",
            "pad_to", "shard_positions"]
@@ -91,14 +97,6 @@ def pad_graph_inputs(model_in: Dict[str, np.ndarray], n_nodes: int
         # node axis is second-to-last: (N, P) single job, (B, N, P) batched
         out["features"] = pad_to(out["features"], n_nodes, axis=-2)
     return out
-
-
-@dataclasses.dataclass
-class AllocationRequest:
-    """One serving query: a single job's model inputs (no batch dim)."""
-    request_id: int
-    model_in: Dict[str, np.ndarray]
-    observed_tokens: Optional[int] = None
 
 
 class MicroBatcher:
@@ -175,6 +173,8 @@ class MicroBatcher:
 
     def _dispatch(self, sig: Tuple, reqs: Sequence[AllocationRequest]
                   ) -> Dict[int, int]:
+        """Stack single-query requests into one columnar protocol request
+        and decide it in one compiled call."""
         if sig[0] == "graph":
             n_nodes = sig[1]
             padded = [pad_graph_inputs(r.model_in, n_nodes) for r in reqs]
@@ -188,5 +188,7 @@ class MicroBatcher:
             observed = np.array(
                 [r.observed_tokens if r.observed_tokens is not None
                  else self.service.policy.max_tokens for r in reqs], np.int64)
-        res = self.service.allocate_batch(stacked, observed_tokens=observed)
-        return {r.request_id: int(t) for r, t in zip(reqs, res.tokens)}
+        decision = self.service.decide(AllocationRequest(
+            model_in=stacked, observed_tokens=observed))
+        return {r.request_id: int(t)
+                for r, t in zip(reqs, decision.tokens)}

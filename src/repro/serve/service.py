@@ -16,17 +16,31 @@ Compiled functions are cached on (model.cache_key, shape signature,
 observed?, policy); ``stats["compiles"]`` exposes cache behavior to tests
 and benchmarks.
 
+Typed protocol (PR 5): the one entry point is
+
+    decide(AllocationRequest, DecisionContext) -> AllocationDecision
+
+(``repro.api.types``). A request carries raw model inputs (the fused cold
+path) or known PCC parameters (the policy-only history path); the context
+carries the price vector, shard placement, and observed-mode switch that
+used to be separate methods. The pre-protocol method matrix
+(``allocate_params`` / ``allocate_params_priced`` / ``allocate_batch`` /
+``allocate_dataset``, plus the sharded twins) survives as thin deprecation
+shims over ``decide`` for one release — same compiled kernels underneath,
+decisions bitwise-equal by construction.
+
 Sharded fabric (PR 4): the mutable serving state — compiled-executable
 cache plus decision counters — lives in a ``ReplicaState``, of which a
 plain ``AllocationService`` owns exactly one. ``ShardedAllocationService``
-puts N replicas of one trained model behind the same API: callers tag
-each row with a shard rank, per-shard rows are stacked into one (K, Bp)
-block, and the fused features -> decode -> policy stage runs across every
-replica in a single compiled call — under ``jax.shard_map`` when the mesh
-really has one device per shard, falling back to ``vmap`` over the shard
-axis on 1-device hosts. Per-shard blocks keep single-shard shapes, so
-decisions stay bitwise-equal to K independent single-shard services fed
-the same routed partitions (tests/test_alloc_parity.py).
+puts N replicas of one trained model behind the same ``decide`` protocol:
+``DecisionContext.shard_of`` tags each row with a shard rank, per-shard
+rows are stacked into one (K, Bp) block, and the fused
+features -> decode -> policy stage runs across every replica in a single
+compiled call — under ``jax.shard_map`` when the mesh really has one
+device per shard, falling back to ``vmap`` over the shard axis on 1-device
+hosts. Per-shard blocks keep single-shard shapes, so decisions stay
+bitwise-equal to K independent single-shard services fed the same routed
+partitions (tests/test_alloc_parity.py).
 """
 from __future__ import annotations
 
@@ -40,6 +54,9 @@ from jax.experimental import enable_x64
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.api._compat import warn_deprecated
+from repro.api.types import (AllocationDecision, AllocationRequest,
+                             DecisionContext, Provenance)
 from repro.core.allocator import (AllocationPolicy, choose_tokens_jnp,
                                   choose_tokens_priced_jnp)
 from repro.serve.batching import batch_bucket, pad_to, shard_positions
@@ -50,10 +67,64 @@ __all__ = ["AllocationResult", "AllocationService", "ReplicaState",
 
 @dataclasses.dataclass
 class AllocationResult:
+    """Legacy result type of the pre-protocol method matrix (the shims still
+    return it); new code consumes ``repro.api.AllocationDecision``."""
     tokens: np.ndarray        # (B,) int64 allocation decisions
     a: np.ndarray             # (B,) decoded PCC exponent
     b: np.ndarray             # (B,) decoded PCC coefficient
     runtime: np.ndarray       # (B,) predicted runtime at the chosen tokens
+
+
+def _as_result(decision: AllocationDecision) -> AllocationResult:
+    return AllocationResult(tokens=decision.tokens, a=decision.a,
+                            b=decision.b, runtime=decision.runtime)
+
+
+def _protocol_dispatch(engine, request: AllocationRequest,
+                       ctx: DecisionContext, decide_params, decide_fused
+                       ) -> AllocationDecision:
+    """The one ``decide()`` dispatch, shared by the single-replica service
+    and the sharded fabric (which differ only in the kernels passed in):
+
+      * validate the request — exactly one of ``model_in`` or ``(a, b)``;
+      * apply the observed-mode switch;
+      * route (a, b) to the policy-only path, host models (no jit surface)
+        to host prediction + the compiled policy, jit models to the fused
+        kernel — with the priced re-decide on decoded parameters when the
+        context carries prices (exactly the legacy two-step).
+
+    New ``DecisionContext`` fields (preempted remainders, refit triggers,
+    ...) belong here, once, not in per-engine copies.
+    """
+    B = request.batch_size()
+    obs = request.observed_tokens if ctx.observed else None
+    if request.a is not None or request.b is not None:
+        if request.a is None or request.b is None:
+            raise ValueError("AllocationRequest needs both a and b for the "
+                             "policy-only path")
+        if request.model_in:
+            raise ValueError("ambiguous AllocationRequest: set model_in "
+                             "or (a, b), not both")
+        return decide_params(request.a, request.b, ctx.price, obs)
+    if not request.model_in:
+        raise ValueError("AllocationRequest needs model_in or (a, b)")
+    if not engine.model.supports_jit:
+        # host models (GBDT): host (a, b) prediction + compiled policy
+        ref = (obs if obs is not None
+               else np.full(B, engine.policy.max_tokens, np.int64))
+        a, b = engine.model.predict_params_batch(request.model_in,
+                                                 np.asarray(ref))
+        return dataclasses.replace(
+            decide_params(a, b, ctx.price, obs),
+            provenance=np.full(B, Provenance.MODEL, np.int8))
+    d = decide_fused(request.model_in, obs)
+    if ctx.price is not None:
+        # priced re-decide on the decoded parameters — identical to the
+        # fused-then-priced two-step the cluster loop runs
+        d = dataclasses.replace(
+            decide_params(d.a, d.b, ctx.price, obs),
+            provenance=np.full(B, Provenance.MODEL, np.int8))
+    return d
 
 
 class ReplicaState:
@@ -79,10 +150,12 @@ class AllocationService:
     # largest single compiled batch; bigger requests are served in chunks
     MAX_BATCH = 4096
 
-    def __init__(self, model, policy: AllocationPolicy = AllocationPolicy(),
+    def __init__(self, model, policy: Optional[AllocationPolicy] = None,
                  batch_floor: int = 8):
         self.model = model
-        self.policy = policy
+        # per-instance default: a shared module-level AllocationPolicy()
+        # instance would alias every service built without an explicit one
+        self.policy = AllocationPolicy() if policy is None else policy
         self.batch_floor = batch_floor
         self.replica = ReplicaState()
 
@@ -148,152 +221,159 @@ class AllocationService:
             self._cache[key] = jax.jit(decide)
         return self._cache[key]
 
-    @staticmethod
-    def _concat(results) -> AllocationResult:
-        return AllocationResult(
-            tokens=np.concatenate([r.tokens for r in results]),
-            a=np.concatenate([r.a for r in results]),
-            b=np.concatenate([r.b for r in results]),
-            runtime=np.concatenate([r.runtime for r in results]))
+    def _chunks(self, B: int) -> List[slice]:
+        return [slice(i, min(i + self.MAX_BATCH, B))
+                for i in range(0, B, self.MAX_BATCH)]
 
-    # ------------------------------------------------------------- serving --
-    def allocate_batch(self, model_in: Dict[str, np.ndarray],
-                       observed_tokens: Optional[np.ndarray] = None
-                       ) -> AllocationResult:
-        """Allocate for a batch of queries. Inputs are raw model arrays
-        (batch-leading); the batch dimension is padded to a power-of-two
-        bucket so repeated traffic reuses one compiled executable. Batches
-        beyond ``MAX_BATCH`` are served in MAX_BATCH-sized chunks."""
-        B = next(iter(model_in.values())).shape[0]
+    # ------------------------------------------------------------ protocol --
+    def decide(self, request: AllocationRequest,
+               context: Optional[DecisionContext] = None
+               ) -> AllocationDecision:
+        """The one entry point: a typed request + context in, a typed
+        decision out. Dispatch is by request/context *fields*:
+
+          * ``request.a/b`` set      -> policy-only history path;
+          * ``request.model_in`` set -> fused model path (host models
+            predict (a, b) on the host and share the compiled policy);
+          * ``context.price``        -> the priced policy twin;
+          * ``context.observed``     -> honor ``request.observed_tokens``.
+
+        Batches beyond ``MAX_BATCH`` are served in MAX_BATCH-sized chunks;
+        each chunk's batch dimension is padded to a power-of-two bucket so
+        repeated traffic reuses one compiled executable per shape.
+
+        ``stats["calls"]`` counts compiled-kernel batch invocations, not
+        protocol entries: a priced fused decision runs two kernel stages
+        (fused model+policy, then the priced policy twin on the decoded
+        parameters — exactly the legacy two-step) and accrues two calls.
+        """
+        ctx = DecisionContext() if context is None else context
+        if ctx.shard_of is not None:
+            raise ValueError(
+                "AllocationService is single-replica; shard placement "
+                "(DecisionContext.shard_of) needs a ShardedAllocationService "
+                "or an Allocator")
+        B = request.batch_size()
         if B > self.MAX_BATCH:
-            return self._concat([
-                self.allocate_batch(
-                    {k: v[i:i + self.MAX_BATCH] for k, v in model_in.items()},
-                    None if observed_tokens is None
-                    else observed_tokens[i:i + self.MAX_BATCH])
-                for i in range(0, B, self.MAX_BATCH)])
-        if not self.model.supports_jit:
-            return self._allocate_host(model_in, observed_tokens)
-        self.stats["calls"] += 1
-        self.stats["queries"] += B
+            return AllocationDecision.concat(
+                self.decide(request.narrow(s), ctx.narrow(s))
+                for s in self._chunks(B))
+        return _protocol_dispatch(self, request, ctx,
+                                  self._decide_params, self._decide_fused)
 
-        Bp = batch_bucket(B, self.batch_floor)
-        padded = {k: pad_to(np.asarray(v), Bp) for k, v in model_in.items()}
-        obs = None
-        if observed_tokens is not None:
-            # zero-padded rows are harmless: the bisection degenerates and
-            # their outputs are sliced off below
-            obs = pad_to(np.asarray(observed_tokens, np.int64), Bp)
-        fn = self._fused_fn(self._shape_sig(padded), observed_tokens is not None)
-        with enable_x64():
-            toks, a, b, rt = fn(
-                self.model.params,
-                {k: jnp.asarray(v) for k, v in padded.items()},
-                None if obs is None else jnp.asarray(obs))
-            toks, a, b, rt = (np.asarray(toks), np.asarray(a),
-                              np.asarray(b), np.asarray(rt))
-        return AllocationResult(tokens=toks[:B], a=a[:B], b=b[:B],
-                                runtime=rt[:B])
-
-    def _allocate_host(self, model_in, observed_tokens) -> AllocationResult:
-        """GBDT path: host (a, b) prediction + the shared compiled policy."""
-        ref = (observed_tokens if observed_tokens is not None
-               else np.full(next(iter(model_in.values())).shape[0],
-                            self.policy.max_tokens, np.int64))
-        a, b = self.model.predict_params_batch(model_in, np.asarray(ref))
-        return self.allocate_params(a, b, observed_tokens)
-
-    def allocate_params(self, a: np.ndarray, b: np.ndarray,
-                        observed_tokens: Optional[np.ndarray] = None
-                        ) -> AllocationResult:
-        """Policy-only path: decisions straight from (a, b) arrays — used by
-        host models and non-query PCCs (e.g. chip-count curves)."""
-        B = np.asarray(a).shape[0]
-        if B > self.MAX_BATCH:
-            return self._concat([
-                self.allocate_params(
-                    np.asarray(a)[i:i + self.MAX_BATCH],
-                    np.asarray(b)[i:i + self.MAX_BATCH],
-                    None if observed_tokens is None
-                    else np.asarray(observed_tokens)[i:i + self.MAX_BATCH])
-                for i in range(0, B, self.MAX_BATCH)])
+    def _decide_params(self, a: np.ndarray, b: np.ndarray,
+                       price: Optional[np.ndarray],
+                       obs: Optional[np.ndarray]) -> AllocationDecision:
+        a = np.asarray(a)
+        B = a.shape[0]
         self.stats["calls"] += 1
         self.stats["queries"] += B
         Bp = batch_bucket(B, self.batch_floor)
         a64 = pad_to(np.asarray(a, np.float64), Bp)
         b64 = pad_to(np.asarray(b, np.float64), Bp)
-        obs = None
-        if observed_tokens is not None:
-            obs = pad_to(np.asarray(observed_tokens, np.int64), Bp)
-        fn = self._policy_fn(Bp, observed_tokens is not None)
+        obs_p = None if obs is None else pad_to(np.asarray(obs, np.int64), Bp)
+        obs_j = None if obs_p is None else jnp.asarray(obs_p)
+        if price is None:
+            fn = self._policy_fn(Bp, obs is not None)
+            with enable_x64():
+                toks, rt = fn(jnp.asarray(a64), jnp.asarray(b64), obs_j)
+                toks, rt = np.asarray(toks), np.asarray(rt)
+            price_out = np.ones(B, np.float64)
+        else:
+            p64 = np.ones(Bp, np.float64)      # neutral price on padded rows
+            p64[:B] = np.asarray(price, np.float64)
+            fn = self._priced_fn(Bp, obs is not None)
+            with enable_x64():
+                toks, rt = fn(jnp.asarray(a64), jnp.asarray(b64),
+                              jnp.asarray(p64), obs_j)
+                toks, rt = np.asarray(toks), np.asarray(rt)
+            price_out = np.asarray(price, np.float64)
+        toks, rt = toks[:B], rt[:B]
+        return AllocationDecision(
+            tokens=toks, runtime=rt, a=a, b=np.asarray(b),
+            cost=toks.astype(np.float64) * rt, price=price_out,
+            shard=np.zeros(B, np.int64),
+            provenance=np.full(B, Provenance.HISTORY, np.int8))
+
+    def _decide_fused(self, model_in: Dict[str, np.ndarray],
+                      obs: Optional[np.ndarray]) -> AllocationDecision:
+        B = next(iter(model_in.values())).shape[0]
+        self.stats["calls"] += 1
+        self.stats["queries"] += B
+        Bp = batch_bucket(B, self.batch_floor)
+        padded = {k: pad_to(np.asarray(v), Bp) for k, v in model_in.items()}
+        # zero-padded observed rows are harmless: the bisection degenerates
+        # and their outputs are sliced off below
+        obs_p = None if obs is None else pad_to(np.asarray(obs, np.int64), Bp)
+        fn = self._fused_fn(self._shape_sig(padded), obs is not None)
         with enable_x64():
-            toks, rt = fn(jnp.asarray(a64), jnp.asarray(b64),
-                          None if obs is None else jnp.asarray(obs))
-            toks, rt = np.asarray(toks), np.asarray(rt)
-        return AllocationResult(tokens=toks[:B], a=np.asarray(a)[:B],
-                                b=np.asarray(b)[:B], runtime=rt[:B])
+            toks, a, b, rt = fn(
+                self.model.params,
+                {k: jnp.asarray(v) for k, v in padded.items()},
+                None if obs_p is None else jnp.asarray(obs_p))
+            toks, a, b, rt = (np.asarray(toks), np.asarray(a),
+                              np.asarray(b), np.asarray(rt))
+        toks, rt = toks[:B], rt[:B]
+        return AllocationDecision(
+            tokens=toks, runtime=rt, a=a[:B], b=b[:B],
+            cost=toks.astype(np.float64) * rt, price=np.ones(B, np.float64),
+            shard=np.zeros(B, np.int64),
+            provenance=np.full(B, Provenance.MODEL, np.int8))
+
+    # ----------------------------------------------- legacy shims (one rel) --
+    def allocate_batch(self, model_in: Dict[str, np.ndarray],
+                       observed_tokens: Optional[np.ndarray] = None
+                       ) -> AllocationResult:
+        """Deprecated: use ``decide(AllocationRequest(model_in=...))``."""
+        warn_deprecated("AllocationService.allocate_batch",
+                        "decide(AllocationRequest(model_in=...))")
+        return _as_result(self.decide(AllocationRequest(
+            model_in=model_in, observed_tokens=observed_tokens)))
+
+    def allocate_params(self, a: np.ndarray, b: np.ndarray,
+                        observed_tokens: Optional[np.ndarray] = None
+                        ) -> AllocationResult:
+        """Deprecated: use ``decide(AllocationRequest(a=..., b=...))``."""
+        warn_deprecated("AllocationService.allocate_params",
+                        "decide(AllocationRequest(a=..., b=...))")
+        return _as_result(self.decide(AllocationRequest(
+            a=a, b=b, observed_tokens=observed_tokens)))
 
     def allocate_params_priced(self, a: np.ndarray, b: np.ndarray,
                                price: np.ndarray,
                                observed_tokens: Optional[np.ndarray] = None
                                ) -> AllocationResult:
-        """Price-weighted policy-only path: per-query multiplicative prices
-        (>= 1, typically per SLA class from pool contention) scale the
-        marginal-gain threshold and the slowdown budget, landing pressured
-        classes at the cost-optimal rather than performance-optimal point of
-        their PCC. ``price == 1`` rows are bitwise-identical to
-        ``allocate_params``'s oracle (``choose_tokens``)."""
-        B = np.asarray(a).shape[0]
-        if B > self.MAX_BATCH:
-            return self._concat([
-                self.allocate_params_priced(
-                    np.asarray(a)[i:i + self.MAX_BATCH],
-                    np.asarray(b)[i:i + self.MAX_BATCH],
-                    np.asarray(price)[i:i + self.MAX_BATCH],
-                    None if observed_tokens is None
-                    else np.asarray(observed_tokens)[i:i + self.MAX_BATCH])
-                for i in range(0, B, self.MAX_BATCH)])
-        self.stats["calls"] += 1
-        self.stats["queries"] += B
-        Bp = batch_bucket(B, self.batch_floor)
-        a64 = pad_to(np.asarray(a, np.float64), Bp)
-        b64 = pad_to(np.asarray(b, np.float64), Bp)
-        p64 = np.ones(Bp, np.float64)      # neutral price on padded rows
-        p64[:B] = np.asarray(price, np.float64)
-        obs = None
-        if observed_tokens is not None:
-            obs = pad_to(np.asarray(observed_tokens, np.int64), Bp)
-        fn = self._priced_fn(Bp, observed_tokens is not None)
-        with enable_x64():
-            toks, rt = fn(jnp.asarray(a64), jnp.asarray(b64),
-                          jnp.asarray(p64),
-                          None if obs is None else jnp.asarray(obs))
-            toks, rt = np.asarray(toks), np.asarray(rt)
-        return AllocationResult(tokens=toks[:B], a=np.asarray(a)[:B],
-                                b=np.asarray(b)[:B], runtime=rt[:B])
+        """Deprecated: use ``decide(AllocationRequest(a=..., b=...),
+        DecisionContext(price=...))``."""
+        warn_deprecated("AllocationService.allocate_params_priced",
+                        "decide(..., DecisionContext(price=...))")
+        return _as_result(self.decide(
+            AllocationRequest(a=a, b=b, observed_tokens=observed_tokens),
+            DecisionContext(price=price)))
 
     def allocate_dataset(self, ds, use_observed: bool = True
                          ) -> AllocationResult:
-        """Allocate for every job in a TasqDataset (batch convenience)."""
-        obs = (np.asarray(ds.observed_alloc, np.int64) if use_observed
-               else None)
-        return self.allocate_batch(self.model.batch_inputs(ds),
-                                   observed_tokens=obs)
+        """Deprecated: use ``decide(AllocationRequest.from_dataset(...))``."""
+        warn_deprecated("AllocationService.allocate_dataset",
+                        "decide(AllocationRequest.from_dataset(...))")
+        return _as_result(self.decide(
+            AllocationRequest.from_dataset(self.model, ds, use_observed)))
 
 
 class ShardedAllocationService:
     """N replicas of one trained model behind a single batched API.
 
     Wraps an ``AllocationService`` (whose compiled cache and counters keep
-    serving single-shard traffic) and adds shard-tagged entry points: every
-    row of a batch carries a shard rank in [0, K); rows are stacked into a
-    (K, Bp) block — ``Bp`` the batch bucket of the fullest shard — and one
-    compiled call computes every replica's decisions. With a mesh that has
-    one device per shard the per-shard stage runs under ``jax.shard_map``
-    (each device sees exactly the single-shard shapes); on smaller hosts it
-    falls back to ``vmap`` over the shard axis. Either way the per-shard
-    math is the single-shard math, so decisions are bitwise-equal to K
-    independent ``AllocationService`` instances fed the routed partitions.
+    serving single-shard traffic) and serves the same ``decide`` protocol
+    for shard-tagged traffic: ``DecisionContext.shard_of`` carries a shard
+    rank in [0, K) per row; rows are stacked into a (K, Bp) block — ``Bp``
+    the batch bucket of the fullest shard — and one compiled call computes
+    every replica's decisions. With a mesh that has one device per shard
+    the per-shard stage runs under ``jax.shard_map`` (each device sees
+    exactly the single-shard shapes); on smaller hosts it falls back to
+    ``vmap`` over the shard axis. Either way the per-shard math is the
+    single-shard math, so decisions are bitwise-equal to K independent
+    ``AllocationService`` instances fed the routed partitions.
 
     Fabric-level counters accrue into the wrapped service's ``stats``;
     per-replica traffic lands in ``replicas[k].stats``.
@@ -412,95 +492,71 @@ class ShardedAllocationService:
         out[shard_of, pos] = x
         return out
 
-    def _chunks(self, B: int):
-        cap = self.service.MAX_BATCH
-        return [slice(i, min(i + cap, B)) for i in range(0, B, cap)]
+    # ------------------------------------------------------------ protocol --
+    def decide(self, request: AllocationRequest,
+               context: Optional[DecisionContext] = None
+               ) -> AllocationDecision:
+        """The fabric's ``decide``: identical protocol to the single-shard
+        service, with ``context.shard_of`` placing each row on a replica
+        (None places everything on shard 0). One compiled (K, Bp) call
+        decides for every replica at once; results come back in input
+        order."""
+        ctx = DecisionContext() if context is None else context
+        B = request.batch_size()
+        if ctx.shard_of is None:
+            ctx = dataclasses.replace(ctx, shard_of=np.zeros(B, np.int64))
+        if B > self.service.MAX_BATCH:
+            return AllocationDecision.concat(
+                self.decide(request.narrow(s), ctx.narrow(s))
+                for s in self.service._chunks(B))
+        shard_of = ctx.shard_of
+        return _protocol_dispatch(
+            self, request, ctx,
+            lambda a, b, price, obs: self._decide_params(shard_of, a, b,
+                                                         price, obs),
+            lambda model_in, obs: self._decide_fused(shard_of, model_in,
+                                                     obs))
 
-    @staticmethod
-    def _concat(results) -> AllocationResult:
-        return AllocationService._concat(results)
-
-    # ------------------------------------------------------------- serving --
-    def allocate_params(self, shard_of: np.ndarray, a: np.ndarray,
-                        b: np.ndarray,
-                        observed_tokens: Optional[np.ndarray] = None,
-                        price: Optional[np.ndarray] = None
-                        ) -> AllocationResult:
-        """Policy-only decisions for rows tagged with shard ranks.
-
-        One compiled (K, Bp) call decides for every replica at once;
-        results come back in input order. ``price`` switches the kernel to
-        the priced policy twin (None == unpriced, not merely price 1 —
-        bitwise the same fn the single-shard service runs)."""
+    def _decide_params(self, shard_of: np.ndarray, a: np.ndarray,
+                       b: np.ndarray, price: Optional[np.ndarray],
+                       obs: Optional[np.ndarray]) -> AllocationDecision:
         a = np.asarray(a)
         B = a.shape[0]
-        if B > self.service.MAX_BATCH:
-            return self._concat([
-                self.allocate_params(
-                    np.asarray(shard_of)[s], a[s], np.asarray(b)[s],
-                    None if observed_tokens is None
-                    else np.asarray(observed_tokens)[s],
-                    None if price is None else np.asarray(price)[s])
-                for s in self._chunks(B)])
         shard_of, pos, Bp = self._place(shard_of)
         a2 = self._stack(shard_of, pos, Bp, a, np.float64)
         b2 = self._stack(shard_of, pos, Bp, b, np.float64)
         p2 = (np.ones((self.n_shards, Bp), np.float64) if price is None
               else self._stack(shard_of, pos, Bp, price, np.float64, fill=1))
-        obs2 = (np.zeros((self.n_shards, Bp), np.int64)
-                if observed_tokens is None
-                else self._stack(shard_of, pos, Bp, observed_tokens,
-                                 np.int64))
-        fn = self._sharded_policy_fn(Bp, observed_tokens is not None,
-                                     price is not None)
+        obs2 = (np.zeros((self.n_shards, Bp), np.int64) if obs is None
+                else self._stack(shard_of, pos, Bp, obs, np.int64))
+        fn = self._sharded_policy_fn(Bp, obs is not None, price is not None)
         with enable_x64():
             toks, rt = fn(jnp.asarray(a2), jnp.asarray(b2), jnp.asarray(p2),
                           jnp.asarray(obs2))
             toks, rt = np.asarray(toks), np.asarray(rt)
-        return AllocationResult(
-            tokens=toks[shard_of, pos], a=np.asarray(a),
-            b=np.asarray(b), runtime=rt[shard_of, pos])
+        toks, rt = toks[shard_of, pos], rt[shard_of, pos]
+        return AllocationDecision(
+            tokens=toks, runtime=rt, a=a, b=np.asarray(b),
+            cost=toks.astype(np.float64) * rt,
+            price=(np.ones(B, np.float64) if price is None
+                   else np.asarray(price, np.float64)),
+            shard=shard_of,
+            provenance=np.full(B, Provenance.HISTORY, np.int8))
 
-    def allocate_params_priced(self, shard_of: np.ndarray, a: np.ndarray,
-                               b: np.ndarray, price: np.ndarray,
-                               observed_tokens: Optional[np.ndarray] = None
-                               ) -> AllocationResult:
-        """Price-weighted twin of ``allocate_params`` (sharded)."""
-        return self.allocate_params(shard_of, a, b, observed_tokens,
-                                    price=np.asarray(price, np.float64))
-
-    def allocate_batch(self, shard_of: np.ndarray,
-                       model_in: Dict[str, np.ndarray],
-                       observed_tokens: Optional[np.ndarray] = None
-                       ) -> AllocationResult:
-        """Fused model+policy decisions for shard-tagged rows: stack each
-        replica's inputs, run features -> decode -> policy across all K
-        replicas in one compiled call, unstack to input order."""
-        if not self.model.supports_jit:
-            # host models (GBDT): host (a, b) prediction, sharded policy
-            ref = (observed_tokens if observed_tokens is not None
-                   else np.full(next(iter(model_in.values())).shape[0],
-                                self.policy.max_tokens, np.int64))
-            a, b = self.model.predict_params_batch(model_in, np.asarray(ref))
-            return self.allocate_params(shard_of, a, b, observed_tokens)
+    def _decide_fused(self, shard_of: np.ndarray,
+                      model_in: Dict[str, np.ndarray],
+                      obs: Optional[np.ndarray]) -> AllocationDecision:
+        """Stack each replica's inputs, run features -> decode -> policy
+        across all K replicas in one compiled call, unstack to input
+        order."""
         B = next(iter(model_in.values())).shape[0]
-        if B > self.service.MAX_BATCH:
-            return self._concat([
-                self.allocate_batch(
-                    np.asarray(shard_of)[s],
-                    {k: v[s] for k, v in model_in.items()},
-                    None if observed_tokens is None
-                    else np.asarray(observed_tokens)[s])
-                for s in self._chunks(B)])
         shard_of, pos, Bp = self._place(shard_of)
         stacked = {k: self._stack(shard_of, pos, Bp, v, np.asarray(v).dtype)
                    for k, v in model_in.items()}
-        obs2 = (np.zeros((self.n_shards, Bp), np.int64)
-                if observed_tokens is None
-                else self._stack(shard_of, pos, Bp, observed_tokens,
-                                 np.int64))
+        obs2 = (np.zeros((self.n_shards, Bp), np.int64) if obs is None
+                else self._stack(shard_of, pos, Bp, obs, np.int64))
         sig = tuple(sorted((k, v.shape) for k, v in stacked.items()))
-        fn = self._sharded_fused_fn(sig, observed_tokens is not None)
+        fn = self._sharded_fused_fn(sig, obs is not None)
         with enable_x64():
             toks, a, b, rt = fn(
                 self.model.params,
@@ -508,6 +564,50 @@ class ShardedAllocationService:
                 jnp.asarray(obs2))
             toks, a, b, rt = (np.asarray(toks), np.asarray(a),
                               np.asarray(b), np.asarray(rt))
-        return AllocationResult(
-            tokens=toks[shard_of, pos], a=a[shard_of, pos],
-            b=b[shard_of, pos], runtime=rt[shard_of, pos])
+        toks, rt = toks[shard_of, pos], rt[shard_of, pos]
+        return AllocationDecision(
+            tokens=toks, runtime=rt, a=a[shard_of, pos], b=b[shard_of, pos],
+            cost=toks.astype(np.float64) * rt,
+            price=np.ones(B, np.float64), shard=shard_of,
+            provenance=np.full(B, Provenance.MODEL, np.int8))
+
+    # ----------------------------------------------- legacy shims (one rel) --
+    def allocate_params(self, shard_of: np.ndarray, a: np.ndarray,
+                        b: np.ndarray,
+                        observed_tokens: Optional[np.ndarray] = None,
+                        price: Optional[np.ndarray] = None
+                        ) -> AllocationResult:
+        """Deprecated: use ``decide(AllocationRequest(a=..., b=...),
+        DecisionContext(shard_of=...))``."""
+        warn_deprecated("ShardedAllocationService.allocate_params",
+                        "decide(..., DecisionContext(shard_of=...))")
+        return _as_result(self.decide(
+            AllocationRequest(a=a, b=b, observed_tokens=observed_tokens),
+            DecisionContext(price=price, shard_of=shard_of)))
+
+    def allocate_params_priced(self, shard_of: np.ndarray, a: np.ndarray,
+                               b: np.ndarray, price: np.ndarray,
+                               observed_tokens: Optional[np.ndarray] = None
+                               ) -> AllocationResult:
+        """Deprecated: use ``decide(...,
+        DecisionContext(price=..., shard_of=...))``."""
+        warn_deprecated("ShardedAllocationService.allocate_params_priced",
+                        "decide(..., DecisionContext(price=..., "
+                        "shard_of=...))")
+        return _as_result(self.decide(
+            AllocationRequest(a=a, b=b, observed_tokens=observed_tokens),
+            DecisionContext(price=np.asarray(price, np.float64),
+                            shard_of=shard_of)))
+
+    def allocate_batch(self, shard_of: np.ndarray,
+                       model_in: Dict[str, np.ndarray],
+                       observed_tokens: Optional[np.ndarray] = None
+                       ) -> AllocationResult:
+        """Deprecated: use ``decide(AllocationRequest(model_in=...),
+        DecisionContext(shard_of=...))``."""
+        warn_deprecated("ShardedAllocationService.allocate_batch",
+                        "decide(..., DecisionContext(shard_of=...))")
+        return _as_result(self.decide(
+            AllocationRequest(model_in=model_in,
+                              observed_tokens=observed_tokens),
+            DecisionContext(shard_of=shard_of)))

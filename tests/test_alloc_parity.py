@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 from jax.experimental import enable_x64
 
+from repro.api import AllocationRequest, DecisionContext, Provenance
 from repro.cluster.router import Router
 from repro.core.allocator import (
     AllocationPolicy,
@@ -196,6 +197,90 @@ def test_sharded_service_empty_and_lopsided_shards():
     stats = fabric.replica_stats()
     assert stats[0]["queries"] == a.size
     assert all(s["queries"] == 0 for s in stats[1:])
+
+
+# ------------------------------------------------- typed decide() protocol --
+@pytest.mark.parametrize("sharded", [False, True])
+@pytest.mark.parametrize("with_price", [False, True])
+@pytest.mark.parametrize("with_observed", [False, True])
+def test_decide_protocol_matches_oracle_grid(sharded, with_price,
+                                             with_observed):
+    """Acceptance: the one typed entry point —
+    ``decide(AllocationRequest, DecisionContext)`` — reproduces the scalar
+    numpy oracles bitwise across the full policy x price x shard x observed
+    grid that used to be eight separate methods."""
+    for pol in (AllocationPolicy(max_slowdown=0.05),
+                AllocationPolicy(),
+                AllocationPolicy(min_gain=0.1, max_slowdown=0.05)):
+        a, b, obs, price, shard_of = _routed_partitions(
+            80, 3 if sharded else 1, seed=17)
+        obs_in = obs if with_observed else None
+        price_in = price if with_price else None
+        req = AllocationRequest(a=a, b=b, observed_tokens=obs_in)
+        if sharded:
+            engine = ShardedAllocationService(
+                AllocationService(_PolicyOnlyModel(), pol), n_shards=3)
+            got = engine.decide(req, DecisionContext(price=price_in,
+                                                     shard_of=shard_of))
+            np.testing.assert_array_equal(got.shard, shard_of)
+        else:
+            engine = AllocationService(_PolicyOnlyModel(), pol)
+            got = engine.decide(req, DecisionContext(price=price_in))
+            assert np.all(got.shard == 0)
+        want = (choose_tokens_priced_batch(a, b, pol, price, obs_in)
+                if with_price else choose_tokens_batch(a, b, pol, obs_in))
+        np.testing.assert_array_equal(got.tokens, want)
+        # decision metadata is consistent with the inputs
+        np.testing.assert_array_equal(
+            got.price, price if with_price else np.ones(a.size))
+        np.testing.assert_array_equal(got.cost, got.tokens * got.runtime)
+        assert np.all(got.provenance == Provenance.HISTORY)
+
+
+def test_decide_observed_mode_switch():
+    """``DecisionContext(observed=False)`` must decide as if the run had
+    never been observed — bitwise the no-cap oracle — without the caller
+    stripping ``observed_tokens`` off the request."""
+    pol = AllocationPolicy(max_slowdown=0.05)
+    a, b, obs, _, _ = _routed_partitions(64, 1, seed=23)
+    svc = AllocationService(_PolicyOnlyModel(), pol)
+    req = AllocationRequest(a=a, b=b, observed_tokens=obs)
+    got = svc.decide(req, DecisionContext(observed=False))
+    np.testing.assert_array_equal(got.tokens,
+                                  choose_tokens_batch(a, b, pol, None))
+    np.testing.assert_array_equal(
+        svc.decide(req).tokens, choose_tokens_batch(a, b, pol, obs))
+
+
+def test_decide_chunks_beyond_max_batch():
+    """Requests past MAX_BATCH are chunked without changing decisions, on
+    the plain service and the fabric alike."""
+    pol = AllocationPolicy(max_slowdown=0.05)
+    n = AllocationService.MAX_BATCH + 77
+    rng = np.random.RandomState(9)
+    a = rng.uniform(-3.0, -1e-4, n)
+    b = np.exp(rng.uniform(-1.0, 9.0, n))
+    obs = rng.randint(1, 7000, n)
+    shard_of = rng.randint(0, 2, n)
+    want = choose_tokens_batch(a, b, pol, obs)
+    svc = AllocationService(_PolicyOnlyModel(), pol)
+    got = svc.decide(AllocationRequest(a=a, b=b, observed_tokens=obs))
+    np.testing.assert_array_equal(got.tokens, want)
+    fabric = ShardedAllocationService(
+        AllocationService(_PolicyOnlyModel(), pol), n_shards=2)
+    got_sh = fabric.decide(AllocationRequest(a=a, b=b, observed_tokens=obs),
+                           DecisionContext(shard_of=shard_of))
+    np.testing.assert_array_equal(got_sh.tokens, want)
+    np.testing.assert_array_equal(got_sh.shard, shard_of)
+
+
+def test_service_policy_default_not_shared():
+    """Satellite regression: the default AllocationPolicy must be built per
+    service instance, not one module-level instance aliased everywhere."""
+    s1 = AllocationService(_PolicyOnlyModel())
+    s2 = AllocationService(_PolicyOnlyModel())
+    assert s1.policy == s2.policy            # same value ...
+    assert s1.policy is not s2.policy        # ... distinct instances
 
 
 @pytest.mark.parametrize("max_slowdown", [0.0, 0.05, 0.3])

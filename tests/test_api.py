@@ -1,0 +1,231 @@
+"""repro.api: the typed allocation protocol and the Allocator facade.
+
+Covers the tentpole contract of PR 5: `AllocationRequest -> decide() ->
+AllocationDecision` is the one entry point; `Allocator.from_config`
+constructs pipeline + model (registry) + policy (registry) + mesh + fabric
++ router declaratively; protocol types are jax pytrees; the policy
+registry is symmetric to the model registry.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (AllocationDecision, AllocationRequest, Allocator,
+                       AllocatorConfig, DecisionContext, Provenance)
+from repro.core.allocator import (AllocationPolicy, available_policies,
+                                  build_policy, choose_tokens_batch)
+from repro.core.models import NNConfig
+from repro.core.pipeline import TasqConfig, TasqPipeline
+from repro.serve import AllocationService
+
+
+# ----------------------------------------------------------- policy registry --
+def test_policy_registry_symmetric_to_models():
+    assert set(available_policies()) >= {"default", "marginal_gain",
+                                         "bounded_slowdown"}
+    assert build_policy("bounded_slowdown") == AllocationPolicy(
+        max_slowdown=0.05)
+    assert build_policy("marginal_gain").max_slowdown == 0.0
+    # overrides win over the preset
+    p = build_policy("bounded_slowdown", max_slowdown=0.5, min_tokens=4)
+    assert p.max_slowdown == 0.5 and p.min_tokens == 4
+    with pytest.raises(KeyError, match="unknown allocation policy"):
+        build_policy("yolo")
+
+
+def test_pipeline_train_unknown_family_raises():
+    with pytest.raises(KeyError, match="unknown PCC model family"):
+        TasqPipeline(TasqConfig(n_train=10, n_eval=5)).train("transformer")
+
+
+# ------------------------------------------------------------- pytree types --
+def test_protocol_types_are_pytrees():
+    a = np.array([-1.0, -2.0])
+    b = np.array([3.0, 4.0])
+    req = AllocationRequest(a=a, b=b, observed_tokens=np.array([5, 6]),
+                            template_id=np.array([7, 8]))
+    doubled = jax.tree.map(lambda x: x * 2, req)
+    np.testing.assert_array_equal(doubled.a, a * 2)
+    np.testing.assert_array_equal(doubled.template_id, np.array([14, 16]))
+    assert doubled.model_in is None and doubled.sla is None
+    leaves, treedef = jax.tree_util.tree_flatten(req)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(rebuilt.b, b)
+    # context: observed is static metadata, price/shard_of are leaves
+    ctx = DecisionContext(price=np.ones(2), observed=False)
+    ctx2 = jax.tree.map(lambda x: x + 1, ctx)
+    assert ctx2.observed is False
+    np.testing.assert_array_equal(ctx2.price, np.full(2, 2.0))
+
+
+def test_request_narrow_and_batch_size():
+    req = AllocationRequest(a=np.arange(5.0), b=np.ones(5),
+                            observed_tokens=np.arange(5),
+                            deadline_s=np.arange(5.0))
+    assert req.batch_size() == 5
+    cut = req.narrow(slice(1, 3))
+    assert cut.batch_size() == 2
+    np.testing.assert_array_equal(cut.a, [1.0, 2.0])
+    np.testing.assert_array_equal(cut.deadline_s, [1.0, 2.0])
+    with pytest.raises(ValueError, match="empty AllocationRequest"):
+        AllocationRequest().batch_size()
+
+
+class _StubModel:
+    cache_key = "stub#api"
+    supports_jit = True
+    scaler = params = None
+    family = "stub"
+
+
+def test_decide_rejects_empty_request():
+    with pytest.raises(ValueError, match="empty AllocationRequest"):
+        AllocationService(_StubModel()).decide(
+            AllocationRequest(template_id=np.arange(3)))
+
+
+def test_decide_rejects_malformed_requests():
+    """The protocol fails loudly, not deep in padding: a without b, and
+    model_in + (a, b) together, are clear ValueErrors on both engines."""
+    from repro.serve import ShardedAllocationService
+    svc = AllocationService(_StubModel())
+    fabric = ShardedAllocationService(AllocationService(_StubModel()),
+                                      n_shards=2)
+    a = np.full(4, -1.0)
+    feats = {"features": np.ones((4, 3))}
+    ctx = DecisionContext(shard_of=np.zeros(4, np.int64))
+    with pytest.raises(ValueError, match="both a and b"):
+        svc.decide(AllocationRequest(a=a))
+    with pytest.raises(ValueError, match="both a and b"):
+        fabric.decide(AllocationRequest(b=np.ones(4)), ctx)
+    with pytest.raises(ValueError, match="ambiguous"):
+        svc.decide(AllocationRequest(model_in=feats, a=a, b=np.ones(4)))
+    with pytest.raises(ValueError, match="ambiguous"):
+        fabric.decide(AllocationRequest(model_in=feats, a=a, b=np.ones(4)),
+                      ctx)
+
+
+def test_single_replica_service_rejects_shard_placement():
+    """shard_of on a plain AllocationService must fail loudly — silently
+    deciding unsharded would return shard metadata contradicting the
+    requested placement."""
+    svc = AllocationService(_StubModel())
+    req = AllocationRequest(a=np.full(4, -1.0), b=np.ones(4))
+    with pytest.raises(ValueError, match="single-replica"):
+        svc.decide(req, DecisionContext(shard_of=np.zeros(4, np.int64)))
+
+
+# ----------------------------------------------------------------- facade --
+@pytest.fixture(scope="module")
+def allocator():
+    """A tiny but fully trained stack built the declarative way."""
+    cfg = AllocatorConfig(
+        family="nn", loss="lf2", policy="bounded_slowdown",
+        n_shards=2,
+        pipeline=TasqConfig(n_train=120, n_eval=40, nn=NNConfig(epochs=4)))
+    return Allocator.from_config(cfg)
+
+
+def test_from_config_builds_whole_stack(allocator):
+    assert allocator.pipeline is not None
+    assert allocator.model.family == "nn"
+    assert "nn:lf2" in allocator.pipeline.models
+    assert allocator.policy == AllocationPolicy(max_slowdown=0.05)
+    assert allocator.fabric.n_shards == 2
+    assert allocator.router.n_shards == 2
+    assert allocator.frontend.service is allocator.service
+
+
+def test_facade_decide_fused_path_is_oracle_parity(allocator):
+    ds = allocator.pipeline.eval_set
+    obs = ds.observed_alloc.astype(np.int64)
+    d = allocator.decide(AllocationRequest.from_dataset(allocator.model, ds))
+    assert isinstance(d, AllocationDecision) and len(d) == len(ds)
+    # fused decisions are bitwise the numpy policy run on the decoded params
+    np.testing.assert_array_equal(
+        d.tokens, choose_tokens_batch(d.a, d.b, allocator.policy, obs))
+    assert np.all(d.provenance == Provenance.MODEL)
+    np.testing.assert_array_equal(d.cost, d.tokens * d.runtime)
+
+
+def test_facade_routes_sharded_context_through_fabric(allocator):
+    ds = allocator.pipeline.eval_set
+    obs = ds.observed_alloc.astype(np.int64)
+    req = AllocationRequest.from_dataset(allocator.model, ds)
+    tid = np.arange(len(ds)) * 13
+    shard_of = allocator.place(tid)
+    assert shard_of.shape == tid.shape and set(np.unique(shard_of)) <= {0, 1}
+    base = allocator.decide(req)
+    before = allocator.fabric.replica_stats()      # counters are cumulative
+    sharded = allocator.decide(req, DecisionContext(shard_of=shard_of))
+    # per-shard math is the single-shard math: same decisions, shard tagged
+    np.testing.assert_array_equal(sharded.tokens, base.tokens)
+    np.testing.assert_array_equal(sharded.shard, shard_of)
+    after = allocator.fabric.replica_stats()
+    assert sum(s1["queries"] - s0["queries"]
+               for s0, s1 in zip(before, after)) == len(ds)
+
+
+def test_facade_priced_and_unpriced_contexts(allocator):
+    ds = allocator.pipeline.eval_set
+    obs = ds.observed_alloc.astype(np.int64)
+    a, b = allocator.model.predict_params(ds)
+    req = AllocationRequest(a=a, b=b, observed_tokens=obs)
+    d1 = allocator.decide(req)
+    price = np.full(len(ds), 8.0)
+    dp = allocator.decide(req, DecisionContext(price=price))
+    assert np.all(dp.tokens <= d1.tokens)       # higher price never buys more
+    np.testing.assert_array_equal(dp.price, price)
+    assert np.all(d1.price == 1.0)
+    assert np.all(d1.provenance == Provenance.HISTORY)
+
+
+def test_facade_queued_serving(allocator):
+    ds = allocator.pipeline.eval_set
+    n = 10
+    for i in range(n):
+        allocator.submit(i, {"features": ds.features[i]},
+                         observed_tokens=int(ds.observed_alloc[i]))
+    out = allocator.step()
+    assert set(out) == set(range(n))
+    direct = allocator.decide(AllocationRequest(
+        model_in={"features": ds.features[:n]},
+        observed_tokens=ds.observed_alloc[:n].astype(np.int64)))
+    for i in range(n):
+        assert out[i] == int(direct.tokens[i])
+
+
+def test_facade_run_cluster_roundtrip(allocator):
+    from repro.cluster import ClusterConfig
+    from repro.workloads import TraceGenerator
+    trace = TraceGenerator(seed=44, n_unique=12, rate_qps=1.0).generate(120)
+    rep = allocator.run_cluster(trace, ClusterConfig(capacity=16384,
+                                                     n_shards=2))
+    assert rep.metrics["n_completed"] + rep.metrics["n_rejected"] == len(trace)
+    assert "utilization_shard0" in rep.metrics
+
+
+def test_allocator_wraps_pretrained_service(allocator):
+    """The facade also wraps an existing trained service (no retraining)."""
+    svc = AllocationService(allocator.model,
+                            AllocationPolicy(max_slowdown=0.05))
+    wrap = Allocator(svc, n_shards=1)
+    ds = allocator.pipeline.eval_set
+    d = wrap.decide(AllocationRequest.from_dataset(wrap.model, ds))
+    want = allocator.service.decide(
+        AllocationRequest.from_dataset(allocator.model, ds))
+    np.testing.assert_array_equal(d.tokens, want.tokens)
+
+
+def test_from_config_lf3_trains_teacher_on_demand():
+    """loss="lf3" needs the GBDT teacher: train() must build it instead of
+    KeyErroring, and both models land under their registry keys."""
+    cfg = AllocatorConfig(
+        family="nn", loss="lf3",
+        pipeline=TasqConfig(n_train=80, n_eval=20, nn=NNConfig(epochs=2)))
+    allocator = Allocator.from_config(cfg)
+    assert "gbdt" in allocator.pipeline.models
+    assert "nn:lf3" in allocator.pipeline.models
+    assert allocator.model is allocator.pipeline.models["nn:lf3"]

@@ -7,26 +7,30 @@ verifiable exactly.
 """
 import numpy as np
 
+from repro.api import AllocationDecision
 from repro.core.allocator import AllocationPolicy
 from repro.serve import AllocationRequest, MicroBatcher
 from repro.serve.batching import node_bucket, pad_to
-from repro.serve.service import AllocationResult
 
 
 class StubService:
-    """Echoes each row's feature sum as its token decision."""
+    """Echoes each row's feature sum as its token decision (serves the
+    typed ``decide`` protocol the MicroBatcher dispatches through)."""
 
     def __init__(self):
         self.policy = AllocationPolicy()
         self.batch_sizes = []
 
-    def allocate_batch(self, model_in, observed_tokens=None):
-        feats = model_in["features"]
+    def decide(self, request, context=None):
+        feats = request.model_in["features"]
         B = feats.shape[0]
         self.batch_sizes.append(B)
         toks = feats.reshape(B, -1).sum(axis=1).astype(np.int64)
         one = np.ones(B)
-        return AllocationResult(tokens=toks, a=one, b=one, runtime=one)
+        return AllocationDecision(tokens=toks, runtime=one, a=one, b=one,
+                                  cost=one, price=one,
+                                  shard=np.zeros(B, np.int64),
+                                  provenance=np.zeros(B, np.int8))
 
 
 def _req(i, value, n_feat=4):

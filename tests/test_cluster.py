@@ -291,7 +291,7 @@ def test_metrics_slack_histogram_and_resize_counters():
 def service():
     cfg = TasqConfig(n_train=160, n_eval=40, nn=NNConfig(epochs=8))
     p = TasqPipeline(cfg).build()
-    p.train_nn("lf2")
+    p.train("nn", loss="lf2")
     return AllocationService(p.models["nn:lf2"],
                              AllocationPolicy(max_slowdown=0.05))
 

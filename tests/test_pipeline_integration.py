@@ -16,9 +16,9 @@ def pipeline():
     cfg = TasqConfig(n_train=250, n_eval=120,
                      nn=NNConfig(epochs=40), gnn_epochs=18)
     p = TasqPipeline(cfg).build()
-    p.train_xgb()
-    p.train_nn("lf2")
-    p.train_gnn("lf2")
+    p.train("gbdt")
+    p.train("nn", loss="lf2")
+    p.train("gnn", loss="lf2")
     return p
 
 

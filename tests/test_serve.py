@@ -1,9 +1,14 @@
 """PCCModel registry + AllocationService: uniform construction, round-trip
 predict -> allocate for all three families, compiled-function cache reuse,
-and the request-queue micro-batcher."""
+the request-queue micro-batcher, and the legacy-method deprecation shims
+(warn exactly once, bitwise-equal to ``decide``)."""
+import warnings
+
 import numpy as np
 import pytest
 
+from repro.api import DecisionContext, reset_deprecation_warnings
+from repro.api._compat import PREFIX
 from repro.core.allocator import AllocationPolicy, choose_tokens
 from repro.core.models import (
     GBDTModel,
@@ -60,9 +65,9 @@ def pipeline():
     cfg = TasqConfig(n_train=160, n_eval=60, nn=NNConfig(epochs=8),
                      gnn_epochs=3)
     p = TasqPipeline(cfg).build()
-    p.train_xgb()
-    p.train_nn("lf2")
-    p.train_gnn("lf2")
+    p.train("gbdt")
+    p.train("nn", loss="lf2")
+    p.train("gnn", loss="lf2")
     return p
 
 
@@ -293,6 +298,146 @@ def test_gbdt_host_path_through_service(pipeline):
     a, b = model.predict_params(ds)
     np.testing.assert_array_equal(res.a, a)
     np.testing.assert_array_equal(res.b, b)
+
+
+# ------------------------------------------------------- deprecation shims --
+def _count_legacy_warnings(fn, calls: int = 2):
+    """Run ``fn`` ``calls`` times from a clean deprecation registry; return
+    (results, number of legacy-API DeprecationWarnings emitted)."""
+    reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        results = [fn() for _ in range(calls)]
+    n = sum(issubclass(x.category, DeprecationWarning)
+            and str(x.message).startswith(PREFIX) for x in w)
+    return results, n
+
+
+def test_legacy_service_shims_warn_once_and_match_decide(pipeline):
+    """Satellite: each legacy AllocationService method emits the deprecation
+    warning exactly once (first call only) and returns bitwise-identical
+    results to ``decide`` on the same inputs."""
+    ds = pipeline.eval_set
+    model = pipeline.models["nn:lf2"]
+    svc = AllocationService(model, AllocationPolicy(max_slowdown=0.05))
+    obs = ds.observed_alloc.astype(np.int64)
+    inputs = model.batch_inputs(ds)
+    price = np.exp(np.random.RandomState(3).uniform(0, 2, len(ds)))
+    a, b = model.predict_params(ds)
+
+    cases = {
+        "allocate_batch": (
+            lambda: svc.allocate_batch(inputs, observed_tokens=obs),
+            lambda: svc.decide(AllocationRequest(model_in=inputs,
+                                                 observed_tokens=obs))),
+        "allocate_params": (
+            lambda: svc.allocate_params(a, b, observed_tokens=obs),
+            lambda: svc.decide(AllocationRequest(a=a, b=b,
+                                                 observed_tokens=obs))),
+        "allocate_params_priced": (
+            lambda: svc.allocate_params_priced(a, b, price,
+                                               observed_tokens=obs),
+            lambda: svc.decide(AllocationRequest(a=a, b=b,
+                                                 observed_tokens=obs),
+                               DecisionContext(price=price))),
+        "allocate_dataset": (
+            lambda: svc.allocate_dataset(ds),
+            lambda: svc.decide(AllocationRequest.from_dataset(model, ds))),
+    }
+    for name, (legacy, modern) in cases.items():
+        (r1, r2), n_warn = _count_legacy_warnings(legacy)
+        assert n_warn == 1, (name, n_warn)
+        want = modern()
+        for field in ("tokens", "a", "b", "runtime"):
+            np.testing.assert_array_equal(getattr(r1, field),
+                                          getattr(want, field), err_msg=name)
+            np.testing.assert_array_equal(getattr(r2, field),
+                                          getattr(want, field), err_msg=name)
+
+
+def test_legacy_sharded_shims_warn_once_and_match_decide(pipeline):
+    """Satellite: the sharded twins (shard_of prepended) are shims over the
+    same ``decide`` protocol — warn once, decide bitwise."""
+    ds = pipeline.eval_set
+    model = pipeline.models["nn:lf2"]
+    fabric = ShardedAllocationService(
+        AllocationService(model, AllocationPolicy(max_slowdown=0.05)),
+        n_shards=3)
+    obs = ds.observed_alloc.astype(np.int64)
+    inputs = model.batch_inputs(ds)
+    shard_of = np.arange(len(ds)) % 3
+    price = np.exp(np.random.RandomState(5).uniform(0, 2, len(ds)))
+    a, b = model.predict_params(ds)
+
+    cases = {
+        "allocate_params": (
+            lambda: fabric.allocate_params(shard_of, a, b,
+                                           observed_tokens=obs),
+            lambda: fabric.decide(
+                AllocationRequest(a=a, b=b, observed_tokens=obs),
+                DecisionContext(shard_of=shard_of))),
+        "allocate_params_priced": (
+            lambda: fabric.allocate_params_priced(shard_of, a, b, price,
+                                                  observed_tokens=obs),
+            lambda: fabric.decide(
+                AllocationRequest(a=a, b=b, observed_tokens=obs),
+                DecisionContext(price=price, shard_of=shard_of))),
+        "allocate_batch": (
+            lambda: fabric.allocate_batch(shard_of, inputs,
+                                          observed_tokens=obs),
+            lambda: fabric.decide(
+                AllocationRequest(model_in=inputs, observed_tokens=obs),
+                DecisionContext(shard_of=shard_of))),
+    }
+    for name, (legacy, modern) in cases.items():
+        (r1, r2), n_warn = _count_legacy_warnings(legacy)
+        assert n_warn == 1, (name, n_warn)
+        want = modern()
+        for field in ("tokens", "a", "b", "runtime"):
+            np.testing.assert_array_equal(getattr(r1, field),
+                                          getattr(want, field), err_msg=name)
+            np.testing.assert_array_equal(getattr(r2, field),
+                                          getattr(want, field), err_msg=name)
+
+
+def test_legacy_train_shims_warn_once_and_delegate():
+    """Satellite: train_xgb/train_nn/train_gnn warn once each and forward
+    to the unified ``TasqPipeline.train(family, loss=...)``."""
+    p = TasqPipeline(TasqConfig(n_train=10, n_eval=5))
+    calls = []
+    p.train = lambda family, loss="lf2": calls.append((family, loss))
+
+    def all_three():
+        p.train_xgb()
+        p.train_nn("lf1")
+        p.train_gnn("lf3")
+
+    _, n_warn = _count_legacy_warnings(all_three, calls=2)
+    assert n_warn == 3
+    assert calls == [("gbdt", "lf2"), ("nn", "lf1"), ("gnn", "lf3")] * 2
+
+
+def test_legacy_shim_from_internal_module_is_an_error():
+    """The pytest filter escalates shim use from repro.* frames: simulate an
+    internal caller by warning from a repro-module context."""
+    # the real guarantee is structural (internal code calls decide()); this
+    # pins the filter wiring so a future internal shim call fails loudly
+    reset_deprecation_warnings()
+    # a downstream caller warming the once-registry for the same method
+    # must NOT swallow the internal emission (keying is per calling module)
+    from repro.api._compat import warn_deprecated
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        warn_deprecated("x", "y", stacklevel=2)
+    import repro.serve.service as svc_mod
+    src = ("def _poke():\n"
+           "    from repro.api._compat import warn_deprecated\n"
+           "    warn_deprecated('x', 'y', stacklevel=2)\n")
+    ns = {"__name__": "repro.serve.service"}
+    exec(compile(src, svc_mod.__file__, "exec"), ns)
+    with pytest.raises(DeprecationWarning):
+        ns["_poke"]()
+    reset_deprecation_warnings()
 
 
 def test_gbdt_vectorized_pl_matches_scalar_loop(pipeline):
