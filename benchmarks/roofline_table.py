@@ -1,6 +1,13 @@
 """Render the §Roofline markdown table from dry-run JSON records.
 
 Run:  PYTHONPATH=src python -m benchmarks.roofline_table [--records results/dryrun]
+                 [--fused results/fused_roofline.json]
+
+``--fused`` appends the streaming-kernel section: one row per fused
+cluster kernel (cluster_epoch_step / cluster_resize_step) from the
+fused_cluster benchmark artifact — launches, analytic bytes/launch,
+achieved bandwidth, fraction of the measured host copy bandwidth, and
+the HBM-bound time projected for the reference accelerator.
 """
 import argparse
 import glob
@@ -18,10 +25,35 @@ def fmt_ms(v: float) -> str:
     return f"{v:.2f}ms"
 
 
+def fused_table(path: str) -> None:
+    """Per-fused-kernel roofline rows from the fused_cluster artifact."""
+    art = json.load(open(path))
+    print()
+    print(f"### Fused cluster kernels "
+          f"({art['events_per_s']:,.0f} ev/s on {art['n_events']:,} events; "
+          f"host copy {art['host_copy_gb_s']:.1f} GB/s)")
+    print()
+    print("| kernel | launches | KB/launch | GB total | wall | "
+          "items/s | GB/s | host-bw% | HBM-bound |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for k in art["kernels"]:
+        ips = f"{k['items_per_s']:,.0f}" if k["items_per_s"] else "—"
+        print(f"| {k['kernel']} | {k['launches']} "
+              f"| {k['bytes_per_launch']/1024:.0f} "
+              f"| {k['total_gb']:.3f} | {fmt_ms(k['wall_s']*1e3)} "
+              f"| {ips} "
+              f"| {k['achieved_gb_s']:.2f} "
+              f"| {100*k['host_bw_frac']:.1f}% "
+              f"| {fmt_ms(k['tpu_projected_s']*1e3)} |")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--records", default="results/dryrun")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--fused", default="",
+                    help="fused_cluster roofline artifact "
+                         "(results/fused_roofline.json)")
     args = ap.parse_args()
 
     print("| arch | shape | compute | memory | collective | dominant | "
@@ -46,6 +78,8 @@ def main() -> None:
                   f"| {rr['useful_flops_frac']:.2f} "
                   f"| {100*rr['roofline_frac']:.2f}% "
                   f"| {rr['bytes_per_device_gb']:.1f} |")
+    if args.fused and os.path.exists(args.fused):
+        fused_table(args.fused)
 
 
 if __name__ == "__main__":

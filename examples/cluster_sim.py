@@ -18,12 +18,16 @@ serving stack, end to end.
   6. optionally shard the fabric: --shards K replays through K racks behind
      consistent-hash routing (--load-factor tunes the router's bounded-load
      factor) and prints the per-shard utilization / imbalance / spill
-     summary from the fabric metrics columns.
+     summary from the fabric metrics columns,
+  7. optionally run the epoch loop through the fused Pallas cluster
+     kernels: --fused routes expire/release/admit/scatter through the
+     single-launch `cluster_epoch_step` path (decision-identical to the
+     unfused loop; see tests/test_cluster.py).
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py [--events 3000]
       PYTHONPATH=src python examples/cluster_sim.py --admission edf \
           --elastic --pricing elastic
-      PYTHONPATH=src python examples/cluster_sim.py --shards 4
+      PYTHONPATH=src python examples/cluster_sim.py --shards 4 --fused
 """
 import argparse
 
@@ -51,6 +55,9 @@ def main() -> None:
                     help="replicas in the sharded serving fabric")
     ap.add_argument("--load-factor", type=float, default=1.25,
                     help="router bounded-load factor (>= 1)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run the epoch loop through the fused Pallas "
+                         "cluster kernels (decision-identical)")
     args = ap.parse_args()
     if args.shards < 1:
         ap.error("--shards must be >= 1")
@@ -72,7 +79,7 @@ def main() -> None:
     capacity = 8192 // args.shards * args.shards   # equal per-shard slices
     report = allocator.run_cluster(
         trace, ClusterConfig(capacity=capacity, n_shards=args.shards,
-                             load_factor=args.load_factor),
+                             load_factor=args.load_factor, fused=args.fused),
         admission=args.admission, elastic=args.elastic, pricing=args.pricing)
 
     print(f"\n{report.summary()}")

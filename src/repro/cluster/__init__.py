@@ -18,10 +18,18 @@ slowdown, SLA violations, deadline slack, queue depth, model-vs-history
 allocation error over time, and the fabric columns: per-shard utilization,
 spill rate, and imbalance. The single-pool simulator is the K=1 run of the
 same loop.
+
+``FusedReplay`` is the mechanical counterpart: it replays a streamed
+trace with pre-decided allocations through the fused
+``cluster_epoch_step`` kernel — one launch per epoch over the
+device-resident lease tables — to measure the fabric's throughput
+ceiling (events/sec + a ``KernelRoofline`` row), decoupled from the
+decision paths the simulator measures.
 """
 from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.pcc_cache import PCCCache, ShardedPCCCache
 from repro.cluster.pool import PoolShards, TokenPool
+from repro.cluster.replay import FusedReplay, ReplayConfig, ReplayReport
 from repro.cluster.router import Router
 from repro.cluster.scheduler import (
     EdfPolicy,
@@ -41,11 +49,14 @@ __all__ = [
     "ClusterSimulator",
     "EdfPolicy",
     "FifoPolicy",
+    "FusedReplay",
     "PCCCache",
     "PoolShards",
     "PriceSignal",
     "PriorityPolicy",
     "QueueView",
+    "ReplayConfig",
+    "ReplayReport",
     "Router",
     "SchedulerPolicy",
     "ShardedPCCCache",

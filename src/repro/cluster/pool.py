@@ -5,10 +5,21 @@ fixed ``capacity_per_shard`` tokens out of which admitted queries lease
 their allocation for the duration of their (simulated) execution. Lease
 state lives in one stacked (K, max_leases) table per column, so the
 per-epoch expiry scan — find every lease on *any* shard that ended by
-``now`` — is a single jitted jnp kernel over the whole fabric, and
+``now`` — is a single vectorized sweep over the whole fabric, and
 cross-shard lease resizing is one scatter into the flattened table. Same
 static-shape discipline as the serving layer: one compiled executable per
 table shape, reused every epoch.
+
+Device residency: the (K, L) lease tables are uploaded to the accelerator
+*once* at construction and then only ever mutated in place on device —
+expiry as a resident elementwise kernel, acquire/resize/admission as small
+scatters of the changed slots. Nothing epoch-sized crosses the host-device
+boundary (the old code re-wrapped the full numpy tables in ``jnp.asarray``
+every ``expire``/``resize_batch`` call); the host keeps a cheap numpy
+mirror for metadata queries (``active``/``next_expiry``/slot search), which
+tests assert stays bitwise-equal to the device truth. The fused epoch step
+(``admit_epoch``, kernels/cluster_step.py) consumes the resident tables
+directly: expire -> release -> admit -> lease scatter in one launch.
 
 ``TokenPool`` (the PR-2 single-pool API) is the K=1 special case: a thin
 view over a one-shard ``PoolShards`` — not a parallel implementation.
@@ -22,37 +33,40 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import enable_x64
 
+from repro.kernels.ops import cluster_epoch_step
 from repro.serve.batching import node_bucket
 
 __all__ = ["PoolShards", "TokenPool"]
 
 
 @jax.jit
-def _expire_kernel(end_s: jax.Array, tokens: jax.Array, now: jax.Array
-                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One vectorized expiry scan over the stacked (K, L) lease tables.
+def _expire_tables(end_s: jax.Array, tokens: jax.Array, now
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Device-resident expiry sweep over the stacked (K, L) lease tables.
 
-    Returns (expired mask, per-shard freed token totals, new end_s, new
-    tokens).
+    Pure device -> device: clears every lease that ended by ``now``. The
+    host mirror applies the identical predicate on its copy, so the two
+    stay bitwise-equal without any table transfer.
     """
     expired = (tokens > 0) & (end_s <= now)
-    freed = jnp.sum(jnp.where(expired, tokens, 0), axis=-1)
-    return (expired, freed,
-            jnp.where(expired, jnp.inf, end_s),
+    return (jnp.where(expired, jnp.inf, end_s),
             jnp.where(expired, 0, tokens))
 
 
 @jax.jit
-def _resize_kernel(end_s: jax.Array, tokens: jax.Array, slots: jax.Array,
-                   new_tokens: jax.Array, new_end_s: jax.Array
-                   ) -> Tuple[jax.Array, jax.Array]:
-    """Cross-shard partial lease release / grow: one scatter over the
-    flattened (K*L,) lease table (``slots`` are flat shard*L + slot indices).
+def _scatter_tables(end_s: jax.Array, tokens: jax.Array, slots: jax.Array,
+                    new_tokens: jax.Array, new_end_s: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Cross-shard lease write: one scatter over the flattened (K*L,) lease
+    table (``slots`` are flat shard*L + slot indices). Acquire and resize
+    are the same scatter — only the caller's bookkeeping differs.
 
     ``slots`` may contain duplicates from padding — duplicated slots carry
     identical values, so the scatter is idempotent.
     """
-    return end_s.at[slots].set(new_end_s), tokens.at[slots].set(new_tokens)
+    K, L = end_s.shape
+    return (end_s.reshape(-1).at[slots].set(new_end_s).reshape(K, L),
+            tokens.reshape(-1).at[slots].set(new_tokens).reshape(K, L))
 
 
 class PoolShards:
@@ -75,6 +89,11 @@ class PoolShards:
         self._tokens = np.zeros((K, max_leases), np.int64)
         self._query = np.full((K, max_leases), -1, np.int64)
         self.in_use = np.zeros(K, np.int64)
+        # one-time upload; afterwards the device tables are only mutated by
+        # resident kernels / small scatters of the changed slots
+        with enable_x64():
+            self._d_end = jnp.asarray(self._end_s)
+            self._d_tok = jnp.asarray(self._tokens)
 
     @property
     def free(self) -> np.ndarray:
@@ -86,30 +105,56 @@ class PoolShards:
         """Live leases across every shard."""
         return int(np.count_nonzero(self._tokens))
 
+    @property
+    def device_tables(self) -> Tuple[jax.Array, jax.Array]:
+        """The resident (end_s, tokens) device tables (read-only views)."""
+        return self._d_end, self._d_tok
+
     def next_expiry(self) -> float:
         """Earliest lease end time on any shard (inf if the fabric is idle)."""
         return float(np.min(self._end_s))
 
+    def _scatter_device(self, flat_slots: np.ndarray, new_tokens: np.ndarray,
+                        new_end_s: np.ndarray) -> None:
+        """Mirror a host-side slot write onto the resident device tables.
+
+        Pads to a power-of-two bucket by repeating entry 0 (idempotent
+        duplicate scatter) so repeat calls reuse a bounded compiled-shape
+        set — same policy as the serving layer's.
+        """
+        k = len(flat_slots)
+        kp = node_bucket(k)
+        slots_p = np.full(kp, flat_slots[0], np.int64)
+        toks_p = np.full(kp, new_tokens[0], np.int64)
+        ends_p = np.full(kp, new_end_s[0], np.float64)
+        slots_p[:k], toks_p[:k], ends_p[:k] = flat_slots, new_tokens, new_end_s
+        with enable_x64():    # end times must keep float64 resolution
+            self._d_end, self._d_tok = _scatter_tables(
+                self._d_end, self._d_tok, jnp.asarray(slots_p),
+                jnp.asarray(toks_p), jnp.asarray(ends_p))
+
     def expire(self, now: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Release every lease on every shard that ended by ``now``.
 
-        One kernel over the stacked tables. Returns (shard ranks, query
-        ids, token counts) of the released leases, in (shard, slot) order.
+        One resident device sweep plus the same predicate on the host
+        mirror — no table crosses the boundary. Returns (shard ranks,
+        query ids, token counts) of the released leases, in (shard, slot)
+        order.
         """
-        with enable_x64():    # end times must keep float64 resolution
-            expired, freed, end_s, tokens = _expire_kernel(
-                jnp.asarray(self._end_s), jnp.asarray(self._tokens),
-                jnp.asarray(float(now)))
-        expired = np.asarray(expired)
+        expired = (self._tokens > 0) & (self._end_s <= now)
         sh, slot = np.nonzero(expired)
         qids = self._query[sh, slot]
         toks = self._tokens[sh, slot]
-        # copies: jax buffers are read-only; dtypes pinned against downcasts
-        self._end_s = np.asarray(end_s, np.float64).copy()
-        self._tokens = np.asarray(tokens, np.int64).copy()
+        freed = np.bincount(sh, weights=toks,
+                            minlength=self.n_shards).astype(np.int64)
+        self._end_s[sh, slot] = np.inf
+        self._tokens[sh, slot] = 0
         self._query[sh, slot] = -1
-        self.in_use -= np.asarray(freed, np.int64)
+        self.in_use -= freed
         assert np.all(self.in_use >= 0), self.in_use
+        with enable_x64():    # end times must keep float64 resolution
+            self._d_end, self._d_tok = _expire_tables(
+                self._d_end, self._d_tok, float(now))
         return sh, qids, toks
 
     def active(self, shard: Optional[int] = None
@@ -150,10 +195,10 @@ class PoolShards:
 
         ``new_tokens[i]`` (>= 1) replaces query ``query_ids[i]``'s lease on
         shard ``shard_of[i]`` and its end time becomes ``new_end_s[i]`` —
-        one scatter kernel over the flattened fabric table, padded to a
-        power-of-two bucket so repeat resizes reuse a bounded set of
-        compiled shapes. Net growth must fit each shard's free pool;
-        resizing an id with no live lease is a caller bug.
+        a host mirror write plus one small scatter onto the resident device
+        tables (only the changed slots travel). Net growth must fit each
+        shard's free pool; resizing an id with no live lease is a caller
+        bug.
         """
         k = len(query_ids)
         if k == 0:
@@ -168,24 +213,9 @@ class PoolShards:
         delta = np.bincount(shard_of, weights=new_tokens - old,
                             minlength=self.n_shards).astype(np.int64)
         assert np.all(delta <= self.free), (delta, self.free)
-
-        # pad with flat[0] repeated (idempotent duplicate scatter) to a
-        # power-of-two bucket: a bounded compiled-shape set, same policy as
-        # the serving layer's
-        kp = node_bucket(k)
-        slots_p = np.full(kp, flat[0], np.int64)
-        toks_p = np.full(kp, new_tokens[0], np.int64)
-        ends_p = np.full(kp, new_end_s[0], np.float64)
-        slots_p[:k], toks_p[:k], ends_p[:k] = flat, new_tokens, new_end_s
-        with enable_x64():    # end times must keep float64 resolution
-            end_s, tokens = _resize_kernel(
-                jnp.asarray(self._end_s.reshape(-1)),
-                jnp.asarray(self._tokens.reshape(-1)),
-                jnp.asarray(slots_p), jnp.asarray(toks_p),
-                jnp.asarray(ends_p))
-        shape = (self.n_shards, self.max_leases)
-        self._end_s = np.asarray(end_s, np.float64).reshape(shape).copy()
-        self._tokens = np.asarray(tokens, np.int64).reshape(shape).copy()
+        self._end_s.reshape(-1)[flat] = new_end_s
+        self._tokens.reshape(-1)[flat] = new_tokens
+        self._scatter_device(flat, new_tokens, new_end_s)
         self.in_use += delta
         assert np.all((0 <= self.in_use) & (self.in_use <= self.capacity)), \
             self.in_use
@@ -207,7 +237,58 @@ class PoolShards:
         self._end_s[shard, slots] = end_s
         self._tokens[shard, slots] = tokens
         self._query[shard, slots] = query_ids
+        self._scatter_device(shard * self.max_leases + slots,
+                             np.asarray(tokens, np.int64),
+                             np.asarray(end_s, np.float64))
         self.in_use[shard] += total
+
+    def admit_epoch(self, now: float, q_ids: np.ndarray, q_tok: np.ndarray,
+                    q_end: np.ndarray, *, impl: Optional[str] = None
+                    ) -> np.ndarray:
+        """Fused admission over every shard: one kernel launch scatters the
+        longest fitting prefix of each shard's policy-ordered queue into
+        free lease slots on the resident device tables.
+
+        q_ids/q_tok/q_end: (K, Q) queue heads, zero-padded past each
+        shard's queue end (ids pad with -1). The caller must have called
+        ``expire(now)`` first — admission must not race lease expiry, so
+        the kernel's built-in expiry stage is required to find nothing.
+        Returns the (K,) admitted-prefix lengths; admitted leases land in
+        free slots in slot order, exactly like per-shard
+        ``acquire_batch`` calls.
+
+        The admitted prefix is capped by BOTH free tokens and open lease
+        slots (the kernel counts free slots after expiry and truncates the
+        prefix to that count), so every admitted entry is guaranteed a
+        scatter target: ``slot_of[k, :n_admit[k]] >= 0`` is an invariant,
+        not a hope — admitting past the slot table would leak the
+        overflow's tokens from the host ``free`` mirror.
+        """
+        q_tok = np.asarray(q_tok, np.int64)
+        q_end = np.asarray(q_end, np.float64)
+        with enable_x64():
+            out = cluster_epoch_step(
+                self._d_end, self._d_tok, jnp.asarray(self.free),
+                jnp.asarray(q_tok), jnp.asarray(q_end), float(now),
+                impl=impl)
+        new_end, new_tok, slot_of, n_admit, adm_tok, freed, n_expired = out
+        assert int(np.asarray(n_expired).sum()) == 0, \
+            "admit_epoch requires expire(now) to run first"
+        self._d_end, self._d_tok = new_end, new_tok
+        slot_of = np.asarray(slot_of)
+        n_admit = np.asarray(n_admit, np.int64)
+        for k in range(self.n_shards):
+            j = int(n_admit[k])
+            if j == 0:
+                continue
+            sl = slot_of[k, :j]
+            assert np.all(sl >= 0), "lease table full; raise max_leases"
+            self._end_s[k, sl] = q_end[k, :j]
+            self._tokens[k, sl] = q_tok[k, :j]
+            self._query[k, sl] = q_ids[k, :j]
+        self.in_use += np.asarray(adm_tok, np.int64)
+        assert np.all(self.in_use <= self.capacity), self.in_use
+        return n_admit
 
 
 class TokenPool:

@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from repro.api.types import AllocationRequest, DecisionContext
 from repro.cluster.metrics import ClusterMetrics
@@ -53,7 +54,8 @@ from repro.cluster.scheduler import (PriceSignal, QueueView, deadline_floor,
                                      make_policy)
 from repro.core.arepas import simulate_runtime_batch_jit
 from repro.core.featurize import batch_graphs, batch_job_features
-from repro.serve.batching import batch_bucket, pad_to
+from repro.kernels.ops import cluster_resize_step
+from repro.serve.batching import batch_bucket, node_bucket, pad_to
 from repro.serve.service import ShardedAllocationService
 from repro.workloads.generator import Trace
 
@@ -83,6 +85,13 @@ class ClusterConfig:
     spill_threshold: float = 1.0  # home-load fraction that allows spilling
     router_vnodes: int = 64
     router_seed: int = 0
+    # fused epoch kernels (kernels/cluster_step.py): admission runs as one
+    # expire->release->admit->scatter launch on the pool's device-resident
+    # lease tables, and each elastic shrink / queued re-price event is one
+    # fused decision+AREPAS+reprice launch. Decision-identical to the
+    # unfused loop (float64 twins); only the kernel-call accounting in
+    # service_stats/replica_stats differs.
+    fused: bool = False
 
 
 @dataclasses.dataclass
@@ -386,29 +395,45 @@ class ClusterSimulator:
                     cand_sh = np.concatenate(rows_sh)
                     cand_tok = tok_q[cand]
                     cand_end = end_q[cand]
-                    # re-price running leases at current contention; shrink
-                    # the ones whose priced ask fell below their lease
-                    tgt = np.minimum(self.fabric.decide(
-                        AllocationRequest(
-                            a=a_q[cand], b=b_q[cand],
-                            observed_tokens=defaults[jb_all[cand]]),
-                        DecisionContext(price=prices[cand_sh, sla_all[cand]],
-                                        shard_of=cand_sh)).tokens,
-                        cap_shard)
                     # deadline guard: the shrunk lease's predicted *total*
                     # runtime must keep the remaining work inside the slack
                     done = self._work_done(cand, now, done_q, mark_q, rt_q)
                     rt_budget = ((deadline_all[cand] - now) / (1.0 - done))
-                    tgt = np.maximum(tgt, deadline_floor(
-                        a_q[cand], b_q[cand], rt_budget, cand_tok))
-                    sel = (tgt < cand_tok) & ((cand_end - now) > cfg.epoch_s)
+                    floor = deadline_floor(a_q[cand], b_q[cand], rt_budget,
+                                           cand_tok)
+                    cand_p = prices[cand_sh, sla_all[cand]]
+                    rt_new = new_end = None
+                    if cfg.fused:
+                        # one launch: priced re-decide + AREPAS + reprice
+                        jb = jb_all[cand]
+                        tgt, sel, rt_new, new_end = self._fused_resize(
+                            a_q[cand], b_q[cand], cand_p, defaults[jb],
+                            floor, done, cand_tok, cand_end, sky[jb],
+                            lens[jb], now, cap_shard)
+                    else:
+                        # re-price running leases at current contention;
+                        # shrink those whose priced ask fell below their
+                        # lease
+                        tgt = np.minimum(self.fabric.decide(
+                            AllocationRequest(
+                                a=a_q[cand], b=b_q[cand],
+                                observed_tokens=defaults[jb_all[cand]]),
+                            DecisionContext(price=cand_p,
+                                            shard_of=cand_sh)).tokens,
+                            cap_shard)
+                        tgt = np.maximum(tgt, floor)
+                        sel = ((tgt < cand_tok)
+                               & ((cand_end - now) > cfg.epoch_s))
                     if np.any(sel):
                         sids = cand[sel]
                         new_tok = tgt[sel]
-                        self._apply_resize(cand_sh[sel], sids, new_tok, now,
-                                           sky, lens, jb_all, tok_q, rt_q,
-                                           start_q, end_q, cost_q, mark_q,
-                                           done_q, pool)
+                        self._apply_resize(
+                            cand_sh[sel], sids, new_tok, now, sky, lens,
+                            jb_all, tok_q, rt_q, start_q, end_q, cost_q,
+                            mark_q, done_q, pool,
+                            rt_new=None if rt_new is None else rt_new[sel],
+                            new_end=None if new_end is None
+                            else new_end[sel])
                         metrics.record_resizes(
                             shrunk=sids.size,
                             reclaimed=int(np.sum(cand_tok[sel] - new_tok)))
@@ -428,29 +453,71 @@ class ClusterSimulator:
                 if np.any(moved):
                     rq = all_q[moved]
                     p = pq[moved]
-                    toks = np.minimum(self.fabric.decide(
-                        AllocationRequest(
-                            a=a_q[rq], b=b_q[rq],
-                            observed_tokens=defaults[jb_all[rq]]),
-                        DecisionContext(price=p, shard_of=shard_q[rq])
-                        ).tokens, cap_shard)
-                    toks = np.maximum(toks, deadline_floor(
-                        a_q[rq], b_q[rq], deadline_all[rq] - now, perf_q[rq]))
                     jb = jb_all[rq]
+                    floor = deadline_floor(a_q[rq], b_q[rq],
+                                           deadline_all[rq] - now, perf_q[rq])
+                    if cfg.fused:
+                        # queued: nothing done yet, lease fields unused
+                        toks, _, rts, _ = self._fused_resize(
+                            a_q[rq], b_q[rq], p, defaults[jb], floor,
+                            np.zeros(rq.size), tok_q[rq], end_q[rq],
+                            sky[jb], lens[jb], now, cap_shard)
+                    else:
+                        toks = np.minimum(self.fabric.decide(
+                            AllocationRequest(
+                                a=a_q[rq], b=b_q[rq],
+                                observed_tokens=defaults[jb_all[rq]]),
+                            DecisionContext(price=p, shard_of=shard_q[rq])
+                            ).tokens, cap_shard)
+                        toks = np.maximum(toks, floor)
+                        rts = self._true_runtimes(sky[jb], lens[jb], toks)
                     tok_q[rq] = toks
-                    rt_q[rq] = self._true_runtimes(sky[jb], lens[jb], toks)
+                    rt_q[rq] = rts
                     price_q[rq] = p
 
             # 6. admission: per shard, a vectorized prefix over its
-            #    policy-ordered queue
-            for k in range(K):
-                if queues[k].size and pool.free[k] > 0:
+            #    policy-ordered queue. Fused mode packs every eligible
+            #    shard's ordered queue head into one (K, Q) matrix and runs
+            #    the whole fabric's admission + lease scatter as a single
+            #    kernel launch on the pool's resident device tables; the
+            #    eligibility gate (non-empty queue AND free tokens) matches
+            #    the unfused loop exactly — an ineligible shard's queue is
+            #    *not* reordered this epoch, which later lexsorts observe.
+            elig = [k for k in range(K)
+                    if queues[k].size and pool.free[k] > 0]
+            for k in elig:
+                q_ids = queues[k]
+                view = QueueView(
+                    ids=q_ids, arrival_s=arrival[q_ids],
+                    priority=priorities[sla_all[q_ids]],
+                    slack_s=deadline_all[q_ids] - (now + rt_q[q_ids]))
+                queues[k] = q_ids[self.policy.order(view)]
+            if cfg.fused and elig:
+                # an admitted prefix holds >= 1 token per query, so no
+                # prefix extends past cap_shard entries — bound Q by it
+                qmax = min(max(queues[k].size for k in elig), cap_shard)
+                Qp = node_bucket(qmax)
+                q_ids_m = np.full((K, Qp), -1, np.int64)
+                q_tok_m = np.zeros((K, Qp), np.int64)
+                q_end_m = np.zeros((K, Qp), np.float64)
+                for k in elig:
+                    q = queues[k][:Qp]
+                    q_ids_m[k, :q.size] = q
+                    q_tok_m[k, :q.size] = tok_q[q]
+                    q_end_m[k, :q.size] = now + rt_q[q]
+                n_adm = pool.admit_epoch(now, q_ids_m, q_tok_m, q_end_m)
+                for k in elig:
+                    j = int(n_adm[k])
+                    if j:
+                        adm = queues[k][:j]
+                        start_q[adm] = now
+                        mark_q[adm] = now
+                        done_q[adm] = 0.0
+                        end_q[adm] = now + rt_q[adm]
+                    queues[k] = queues[k][j:]
+            else:
+                for k in elig:
                     q_ids = queues[k]
-                    view = QueueView(
-                        ids=q_ids, arrival_s=arrival[q_ids],
-                        priority=priorities[sla_all[q_ids]],
-                        slack_s=deadline_all[q_ids] - (now + rt_q[q_ids]))
-                    q_ids = q_ids[self.policy.order(view)]
                     fits = np.cumsum(tok_q[q_ids]) <= pool.free[k]
                     j = int(np.searchsorted(~fits, True))  # True prefix
                     if j:
@@ -534,23 +601,62 @@ class ClusterSimulator:
                        + (now - mark_q[qids]) / np.maximum(rt_q[qids], 1),
                        0.0, 0.999)
 
+    def _fused_resize(self, a: np.ndarray, b: np.ndarray, price: np.ndarray,
+                      obs: np.ndarray, floor: np.ndarray, done: np.ndarray,
+                      cand_tok: np.ndarray, cand_end: np.ndarray,
+                      sky_rows: np.ndarray, lens_rows: np.ndarray,
+                      now: float, cap_shard: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+        """One fused launch for a batch of resize/re-price candidates:
+        priced allocation decision + deadline floor + AREPAS re-simulation
+        + lease repricing (kernels/cluster_step.py). Float64 on CPU —
+        decisions and end times bitwise-equal to the unfused
+        decide/floor/_true_runtimes cascade. Returns numpy
+        (tgt, sel, rt, new_end), each (C,)."""
+        C = a.shape[0]
+        Cp = batch_bucket(C)
+        with enable_x64():
+            tgt, sel, rt, new_end = cluster_resize_step(
+                jnp.asarray(pad_to(a, Cp)), jnp.asarray(pad_to(b, Cp)),
+                jnp.asarray(pad_to(price, Cp)),
+                jnp.asarray(pad_to(obs.astype(np.int64), Cp)),
+                jnp.asarray(pad_to(floor.astype(np.int64), Cp)),
+                jnp.asarray(pad_to(done, Cp)),
+                jnp.asarray(pad_to(cand_tok.astype(np.int64), Cp)),
+                jnp.asarray(pad_to(cand_end, Cp)),
+                jnp.asarray(pad_to(sky_rows.astype(np.float32), Cp)),
+                jnp.asarray(pad_to(lens_rows.astype(np.int32), Cp)),
+                float(now), self.cfg.epoch_s,
+                policy=self.service.policy, cap=cap_shard, impl="jnp")
+            return (np.asarray(tgt, np.int64)[:C],
+                    np.asarray(sel)[:C].astype(bool),
+                    np.asarray(rt, np.int64)[:C],
+                    np.asarray(new_end, np.float64)[:C])
+
     def _apply_resize(self, shard_of: np.ndarray, qids: np.ndarray,
                       new_tok: np.ndarray, now: float, sky: np.ndarray,
                       lens: np.ndarray, jb_all: np.ndarray,
                       tok_q: np.ndarray, rt_q: np.ndarray,
                       start_q: np.ndarray, end_q: np.ndarray,
                       cost_q: np.ndarray, mark_q: np.ndarray,
-                      done_q: np.ndarray, pool: PoolShards) -> None:
+                      done_q: np.ndarray, pool: PoolShards,
+                      rt_new: Optional[np.ndarray] = None,
+                      new_end: Optional[np.ndarray] = None) -> None:
         """Resize running leases (possibly spanning shards): AREPAS-
         resimulate each job at its new allocation, carry the completed work
         fraction over, accrue the cost of the lease segment that just
         ended, and scatter the new (tokens, end) into the stacked lease
-        tables in one cross-shard kernel."""
+        tables in one cross-shard kernel. ``rt_new``/``new_end`` accept the
+        fused kernel's already-computed values (bitwise-equal to the
+        recomputation here)."""
         jb = jb_all[qids]
-        rt_new = self._true_runtimes(sky[jb], lens[jb], new_tok)
+        if rt_new is None:
+            rt_new = self._true_runtimes(sky[jb], lens[jb], new_tok)
         done = self._work_done(qids, now, done_q, mark_q, rt_q)
-        remaining = np.maximum(np.round(rt_new * (1.0 - done)), 1.0)
-        new_end = now + remaining
+        if new_end is None:
+            remaining = np.maximum(np.round(rt_new * (1.0 - done)), 1.0)
+            new_end = now + remaining
         cost_q[qids] += tok_q[qids] * (now - mark_q[qids])
         done_q[qids] = done
         mark_q[qids] = now

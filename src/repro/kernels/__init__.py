@@ -3,10 +3,14 @@
   flash_attention — causal+GQA online-softmax attention (train/prefill)
   ssd             — Mamba-2 SSD chunk scan (ssm/hybrid archs)
   skyline         — bulk AREPAS skyline simulation (TASQ data augmentation)
+  cluster_step    — fused cluster epoch step + elastic resize (replay loop)
 
 Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
 interpret=True executes the kernel body on CPU for correctness testing.
 """
-from repro.kernels.ops import arepas_runtimes, flash_attention, ssd_scan
+from repro.kernels.ops import (arepas_runtimes, cluster_epoch_step,
+                               cluster_resize_step, flash_attention,
+                               ssd_scan)
 
-__all__ = ["arepas_runtimes", "flash_attention", "ssd_scan"]
+__all__ = ["arepas_runtimes", "cluster_epoch_step", "cluster_resize_step",
+           "flash_attention", "ssd_scan"]

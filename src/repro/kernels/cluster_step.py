@@ -1,0 +1,423 @@
+"""Fused cluster epoch step as Pallas TPU kernels.
+
+The cluster hot loop (cluster/simulator.py) spends its epoch budget on four
+chained table sweeps over the stacked (K, L) ``PoolShards`` lease tables:
+lease expiry -> free-token release -> policy-ordered prefix-sum admission ->
+lease scatter. Run separately they cost four kernel launches plus
+host<->device round-trips per epoch; fused they are one streaming pass over
+the lease tables — the whole epoch is memory-bandwidth bound on the (K, L)
+table traffic.
+
+Two kernels, each with a pure-jnp twin:
+
+  * ``epoch_step_pallas`` / ``epoch_step_ref`` — the fused epoch step. Grid
+    (K, 2, L-blocks) with a two-phase sweep per shard: phase 0 scans expiry
+    and accumulates the freed-token total in VMEM carry; phase 1 re-derives
+    the expiry mask per block (idempotent), turns the policy-ordered queue
+    into an admitted prefix via an in-VMEM cumsum against ``free + freed``,
+    and scatters admitted leases into free slots with a one-hot matmul
+    (slot rank x queue rank on the MXU — TPUs hate scatters).
+  * ``resize_step_pallas`` / ``resize_step_ref`` — the fused elastic-resize
+    path: the priced allocation decision (gain cut-off + fixed-iteration
+    slowdown bisection, core/allocator.py) runs in the first time-block,
+    then the same streaming AREPAS segmented reduction as kernels/skyline.py
+    re-simulates the runtime at the shrunk allocation — one launch per
+    pressure event instead of a decide -> simulate -> reprice cascade.
+
+Exactness: token counts, slot ranks and AREPAS areas are integers < 2^24,
+exact in f32 (same argument as kernels/skyline.py). Lease *end times* in the
+Pallas kernels are f32 — Mosaic has no f64 — so the f32 kernels trade time
+resolution for bandwidth; the jnp twins are dtype-generic and, run in
+float64 under ``jax.experimental.enable_x64``, are bitwise-identical to the
+unfused epoch loop (tests/test_cluster.py parity matrix). On the CPU
+container the twins *are* the fused hot path (one XLA fusion per epoch);
+the Pallas kernels run under ``interpret=True`` for correctness testing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.allocator import _BISECT_ITERS, AllocationPolicy
+from repro.core.allocator import choose_tokens_priced_jnp
+from repro.core.arepas import simulate_runtime_batch
+
+__all__ = ["epoch_step_ref", "epoch_step_pallas",
+           "resize_step_ref", "resize_step_pallas"]
+
+DEFAULT_LEASE_BLOCK = 256
+
+
+# ------------------------------------------------------------- jnp twins ---
+def epoch_step_ref(end_s: jax.Array, tokens: jax.Array, free: jax.Array,
+                   q_tok: jax.Array, q_end: jax.Array, now: jax.Array):
+    """Fused epoch step, pure jnp: expire -> release -> admit -> scatter.
+
+    end_s/tokens: (K, L) lease tables (inf / 0 in empty slots).
+    free:         (K,) free tokens per shard *before* this epoch's expiry.
+    q_tok/q_end:  (K, Q) policy-ordered queue heads, zero-padded past each
+                  shard's queue; ``q_end[k, i]`` is the lease end time query
+                  i would get if admitted now.
+    now:          () epoch timestamp.
+
+    Returns (new_end, new_tok, slot_of, n_admit, adm_tok, freed, n_expired):
+    the updated tables, the lease slot each queue position landed in (-1 if
+    not admitted), and per-shard admitted/freed totals. Admission is the
+    longest queue prefix whose token sum fits ``free + freed`` AND whose
+    length fits the post-expiry open lease slots — each clause keeps the
+    admitted set a prefix (queue entries hold >= 1 token each), so this is
+    identical to the unfused cumsum/searchsorted loop whenever that loop is
+    well-defined, and degrades to admit-what-fits (instead of leaking
+    tokens into leases that were never scattered) when the lease table is
+    the binding constraint. The i-th admitted query takes the i-th free
+    slot in slot order, matching ``PoolShards.acquire_batch``.
+    """
+    K, L = end_s.shape
+    Q = q_tok.shape[1]
+    expired = (tokens > 0) & (end_s <= now)
+    freed = jnp.sum(jnp.where(expired, tokens, 0), axis=1)
+    n_expired = jnp.sum(expired, axis=1)
+    tok1 = jnp.where(expired, 0, tokens)
+    end1 = jnp.where(expired, jnp.inf, end_s)
+
+    free_after = free + freed
+    open_slots = jnp.sum(tok1 == 0, axis=1)
+    csum = jnp.cumsum(q_tok, axis=1)
+    adm = ((csum <= free_after[:, None]) & (q_tok > 0)
+           & (jnp.arange(Q)[None, :] < open_slots[:, None]))
+    n_admit = jnp.sum(adm, axis=1)
+    adm_tok = jnp.sum(jnp.where(adm, q_tok, 0), axis=1)
+
+    free_slot = tok1 == 0
+    rank = jnp.cumsum(free_slot, axis=1) - 1          # slot-order free rank
+    take = free_slot & (rank < n_admit[:, None])
+    src = jnp.clip(rank, 0, Q - 1)
+    new_tok = jnp.where(take, jnp.take_along_axis(q_tok, src, axis=1), tok1)
+    new_end = jnp.where(take, jnp.take_along_axis(q_end, src, axis=1), end1)
+
+    # invert slot -> queue-rank into queue-rank -> slot via a dummy column
+    col = jnp.where(take, src, Q)
+    slot_of = jnp.full((K, Q + 1), -1, jnp.int32)
+    slot_of = slot_of.at[jnp.arange(K)[:, None], col].set(
+        jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (K, L)))[:, :Q]
+    return new_end, new_tok, slot_of, n_admit, adm_tok, freed, n_expired
+
+
+def resize_step_ref(a: jax.Array, b: jax.Array, price: jax.Array,
+                    obs: jax.Array, floor: jax.Array, done: jax.Array,
+                    cand_tok: jax.Array, cand_end: jax.Array,
+                    sky: jax.Array, lens: jax.Array, now: jax.Array,
+                    epoch_s: float, *, policy: AllocationPolicy, cap: int):
+    """Fused elastic resize, pure jnp: priced decision + AREPAS + reprice.
+
+    Per-candidate (C,) PCC params / price / observed tokens / deadline
+    floor / completed-work fraction / current lease, plus (C, Smax) padded
+    skylines. Returns (tgt, sel, rt, new_end): the shrunk allocation, the
+    shrink-worthwhile mask, the re-simulated runtime at ``tgt``, and the
+    repriced lease end. Mirrors cluster/simulator.py step 4 exactly — the
+    decision comes from ``choose_tokens_priced_jnp`` (bitwise-equal to the
+    scalar oracle in float64) and the runtime from the exact AREPAS batch.
+    """
+    tgt = jnp.minimum(choose_tokens_priced_jnp(a, b, policy, price, obs),
+                      cap)
+    tgt = jnp.maximum(tgt, floor.astype(tgt.dtype))
+    sel = (tgt < cand_tok) & ((cand_end - now) > epoch_s)
+    rt = simulate_runtime_batch(sky, lens, jnp.maximum(tgt, 1)[:, None])[:, 0]
+    rt = jnp.maximum(rt, 1).astype(cand_tok.dtype)
+    remaining = jnp.maximum(jnp.round(rt.astype(a.dtype) * (1.0 - done)), 1.0)
+    return tgt, sel, rt, now + remaining
+
+
+# ------------------------------------------------- fused epoch kernel -------
+def _epoch_kernel(end_ref, tok_ref, free_ref, qtok_ref, qend_ref, now_ref,
+                  nend_ref, ntok_ref, slot_ref, nadm_ref, admtok_ref,
+                  freed_ref, nexp_ref, carry_ref, slot_acc, *,
+                  lblock: int, n_lblocks: int, n_queue: int):
+    p = pl.program_id(1)                  # 0: expiry scan, 1: admit+scatter
+    t = pl.program_id(2)
+
+    @pl.when((p == 0) & (t == 0))
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+        slot_acc[...] = jnp.zeros_like(slot_acc)
+
+    now = now_ref[0, 0]
+    end = end_ref[0]
+    tok = tok_ref[0]
+    expired = (tok > 0.0) & (end <= now)
+    tok1 = jnp.where(expired, 0.0, tok)
+    end1 = jnp.where(expired, jnp.inf, end)
+
+    @pl.when(p == 0)
+    def _phase_expire():
+        carry_ref[0] = carry_ref[0] + jnp.sum(jnp.where(expired, tok, 0.0))
+        carry_ref[1] = carry_ref[1] + jnp.sum(expired.astype(jnp.float32))
+        carry_ref[5] = carry_ref[5] + jnp.sum((tok1 == 0.0)
+                                              .astype(jnp.float32))
+        nend_ref[0] = end1
+        ntok_ref[0] = tok1
+
+    # Admission decision once per shard: the queue row fits in VMEM, so the
+    # prefix-sum fit test is a single cumsum against free + freed, capped
+    # by the open lease slots counted during the expiry phase.
+    @pl.when((p == 1) & (t == 0))
+    def _decide():
+        qt = qtok_ref[0]
+        free_after = free_ref[0] + carry_ref[0]
+        csum = jnp.cumsum(qt)
+        qidx = jax.lax.iota(jnp.float32, n_queue)
+        adm = (csum <= free_after) & (qt > 0.0) & (qidx < carry_ref[5])
+        carry_ref[2] = 0.0                               # running free rank
+        carry_ref[3] = jnp.sum(adm.astype(jnp.float32))  # n_admit
+        carry_ref[4] = jnp.sum(jnp.where(adm, qt, 0.0))  # admitted tokens
+
+    @pl.when(p == 1)
+    def _phase_admit():
+        qt = qtok_ref[0]
+        qe = qend_ref[0]
+        n_admit = carry_ref[3]
+        rank_base = carry_ref[2]
+        free_slot = tok1 == 0.0
+        rank = rank_base + jnp.cumsum(free_slot.astype(jnp.float32)) - 1.0
+        take = free_slot & (rank < n_admit)
+
+        # queue-rank -> slot gather as a one-hot matmul (ranks are exact
+        # integer f32 < 2^24, so the equality test is exact)
+        qidx = jax.lax.iota(jnp.float32, n_queue)
+        oh = ((rank[:, None] == qidx[None, :]) &
+              take[:, None]).astype(jnp.float32)         # (Lb, Q)
+        val_tok = jax.lax.dot_general(
+            oh, qt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        val_end = jax.lax.dot_general(
+            oh, qe, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        ntok_ref[0] = jnp.where(take, val_tok, tok1)
+        nend_ref[0] = jnp.where(take, val_end, end1)
+
+        # slot-of inverse: accumulate (slot index + 1) per queue rank
+        lidx = (t * lblock + jax.lax.iota(jnp.int32, lblock)
+                ).astype(jnp.float32)
+        slot_acc[...] = slot_acc[...] + jax.lax.dot_general(
+            oh, lidx + 1.0, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        carry_ref[2] = rank_base + jnp.sum(free_slot.astype(jnp.float32))
+
+    @pl.when((p == 1) & (t == n_lblocks - 1))
+    def _finalize():
+        slot_ref[0] = (slot_acc[...] - 1.0).astype(jnp.int32)
+        nadm_ref[0] = carry_ref[3].astype(jnp.int32)
+        admtok_ref[0] = carry_ref[4].astype(jnp.int32)
+        freed_ref[0] = carry_ref[0].astype(jnp.int32)
+        nexp_ref[0] = carry_ref[1].astype(jnp.int32)
+
+
+def epoch_step_pallas(end_s: jax.Array, tokens: jax.Array, free: jax.Array,
+                      q_tok: jax.Array, q_end: jax.Array, now: jax.Array, *,
+                      lease_block: int = DEFAULT_LEASE_BLOCK,
+                      interpret: bool = False):
+    """Pallas twin of ``epoch_step_ref``: one launch per epoch, f32 tables.
+
+    Returns the same 7-tuple; end times and token counts come back f32/i32.
+    """
+    K, L = end_s.shape
+    Q = q_tok.shape[1]
+    lb = min(lease_block, L)
+    assert L % lb == 0, (L, lb)
+    nlb = L // lb
+
+    kernel = functools.partial(_epoch_kernel, lblock=lb, n_lblocks=nlb,
+                               n_queue=Q)
+    out = pl.pallas_call(
+        kernel,
+        grid=(K, 2, nlb),
+        in_specs=[
+            pl.BlockSpec((1, lb), lambda k, p, t: (k, t)),
+            pl.BlockSpec((1, lb), lambda k, p, t: (k, t)),
+            pl.BlockSpec((1,), lambda k, p, t: (k,)),
+            pl.BlockSpec((1, Q), lambda k, p, t: (k, 0)),
+            pl.BlockSpec((1, Q), lambda k, p, t: (k, 0)),
+            pl.BlockSpec((1, 1), lambda k, p, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, lb), lambda k, p, t: (k, t)),
+            pl.BlockSpec((1, lb), lambda k, p, t: (k, t)),
+            pl.BlockSpec((1, Q), lambda k, p, t: (k, 0)),
+            pl.BlockSpec((1,), lambda k, p, t: (k,)),
+            pl.BlockSpec((1,), lambda k, p, t: (k,)),
+            pl.BlockSpec((1,), lambda k, p, t: (k,)),
+            pl.BlockSpec((1,), lambda k, p, t: (k,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, L), jnp.float32),
+            jax.ShapeDtypeStruct((K, L), jnp.float32),
+            jax.ShapeDtypeStruct((K, Q), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((8,), jnp.float32),
+                        pltpu.VMEM((Q,), jnp.float32)],
+        interpret=interpret,
+    )(end_s.astype(jnp.float32), tokens.astype(jnp.float32),
+      free.astype(jnp.float32), q_tok.astype(jnp.float32),
+      q_end.astype(jnp.float32),
+      jnp.asarray(now, jnp.float32).reshape(1, 1))
+    new_end, new_tok_f, slot_of, n_admit, adm_tok, freed, n_expired = out
+    return (new_end, new_tok_f.astype(jnp.int32), slot_of, n_admit,
+            adm_tok, freed, n_expired)
+
+
+# ------------------------------------------------ fused resize kernel -------
+def _resize_kernel(a_ref, b_ref, pr_ref, obs_ref, flr_ref, done_ref,
+                   ctok_ref, cend_ref, sky_ref, len_ref, now_ref,
+                   tgt_ref, sel_ref, rt_ref, nend_ref, carry_ref, *,
+                   tblock: int, n_tblocks: int, epoch_s: float,
+                   min_gain: float, max_slowdown: float, min_tokens: int,
+                   max_tokens: int, cap: int):
+    it = pl.program_id(1)
+
+    # Decision preamble in the first time-block: gain cut-off + the same
+    # fixed-iteration slowdown bisection as choose_tokens_priced_jnp, then
+    # min(cap) / max(deadline floor) — carried as the AREPAS allocation.
+    @pl.when(it == 0)
+    def _decide():
+        a = a_ref[0]
+        b = b_ref[0]
+        price = pr_ref[0]
+        hi = obs_ref[0]
+        lo0 = jnp.float32(min_tokens)
+        eff_gain = max(min_gain, 1e-9) * price
+        t_gain = jnp.clip(jnp.round(jnp.abs(a) / eff_gain), lo0, hi)
+        t_gain = jnp.where(a >= 0, lo0, t_gain)
+        if max_slowdown > 0:
+            limit = (1.0 + max_slowdown * price) * (b * hi ** a)
+
+            def body(_, st):
+                lo, hi_s = st
+                cond = lo < hi_s
+                mid = jnp.floor((lo + hi_s) / 2)
+                ok = b * mid ** a <= limit
+                return (jnp.where(cond & ~ok, mid + 1, lo),
+                        jnp.where(cond & ok, mid, hi_s))
+
+            lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo0, hi))
+            t_gain = jnp.maximum(jnp.minimum(t_gain, jnp.float32(max_tokens)),
+                                 lo)
+        nt = jnp.maximum(jnp.minimum(t_gain, jnp.float32(cap)), flr_ref[0])
+        carry_ref[0] = 0.0            # prev block ended over-cap
+        carry_ref[1] = 0.0            # open over-section area
+        carry_ref[2] = 0.0            # runtime accumulator
+        carry_ref[3] = nt
+
+    # Streaming AREPAS segmented reduction at the shrunk allocation — the
+    # same carry-across-time-blocks scheme as kernels/skyline.py.
+    s = sky_ref[0].astype(jnp.float32)
+    nt = carry_ref[3]
+    vlen = len_ref[0].astype(jnp.int32)
+
+    t0 = it * tblock
+    idx = t0 + jax.lax.iota(jnp.int32, tblock)
+    valid = idx < vlen
+    over = (s > nt) & valid
+
+    prev_over = carry_ref[0] > 0.5
+    open_area = carry_ref[1]
+    acc = carry_ref[2]
+
+    closes_at_edge = prev_over & ~over[0]
+    continues = prev_over & over[0]
+    acc = acc + jnp.where(closes_at_edge,
+                          jnp.floor(open_area / nt + 1e-6), 0.0)
+
+    prev = jnp.concatenate([over[:1], over[:-1]])
+    change = (over != prev).astype(jnp.int32)
+    seg_id = jnp.cumsum(change)
+
+    seg_ids = jax.lax.iota(jnp.int32, tblock)
+    onehot = (seg_id[None, :] == seg_ids[:, None])
+    areas = jax.lax.dot_general(
+        onehot.astype(jnp.float32), jnp.where(over, s, 0.0),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    seg_over = jax.lax.dot_general(
+        onehot.astype(jnp.float32), over.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32) > 0.5
+
+    areas = areas + jnp.where((seg_ids == 0) & continues, open_area, 0.0)
+
+    last_seg = seg_id[-1]
+    is_open = (seg_ids == last_seg) & over[-1]
+    closed_over = seg_over & ~is_open
+
+    acc = acc + jnp.sum(jnp.where(closed_over,
+                                  jnp.floor(areas / nt + 1e-6), 0.0))
+    acc = acc + jnp.sum((~over & valid).astype(jnp.float32))
+
+    carry_ref[0] = over[-1].astype(jnp.float32)
+    carry_ref[1] = jnp.sum(jnp.where(is_open, areas, 0.0))
+    carry_ref[2] = acc
+
+    @pl.when(it == n_tblocks - 1)
+    def _finalize():
+        final = carry_ref[2] + jnp.where(
+            carry_ref[0] > 0.5,
+            jnp.floor(carry_ref[1] / carry_ref[3] + 1e-6), 0.0)
+        rt = jnp.maximum(final, 1.0)
+        now = now_ref[0, 0]
+        nt_f = carry_ref[3]
+        sel = (nt_f < ctok_ref[0]) & ((cend_ref[0] - now) > epoch_s)
+        remaining = jnp.maximum(jnp.round(rt * (1.0 - done_ref[0])), 1.0)
+        tgt_ref[0] = nt_f.astype(jnp.int32)
+        sel_ref[0] = sel.astype(jnp.int32)
+        rt_ref[0] = rt.astype(jnp.int32)
+        nend_ref[0] = now + remaining
+
+
+def resize_step_pallas(a: jax.Array, b: jax.Array, price: jax.Array,
+                       obs: jax.Array, floor: jax.Array, done: jax.Array,
+                       cand_tok: jax.Array, cand_end: jax.Array,
+                       sky: jax.Array, lens: jax.Array, now: jax.Array,
+                       epoch_s: float, *, policy: AllocationPolicy, cap: int,
+                       time_block: int = 512, interpret: bool = False):
+    """Pallas twin of ``resize_step_ref``: decision + AREPAS in one launch.
+
+    Returns (tgt i32, sel i32 mask, rt i32, new_end f32), each (C,).
+    """
+    C, Smax = sky.shape
+    tb = min(time_block, Smax)
+    assert Smax % tb == 0, (Smax, tb)
+    ntb = Smax // tb
+
+    kernel = functools.partial(
+        _resize_kernel, tblock=tb, n_tblocks=ntb, epoch_s=float(epoch_s),
+        min_gain=policy.min_gain, max_slowdown=policy.max_slowdown,
+        min_tokens=policy.min_tokens, max_tokens=policy.max_tokens,
+        cap=int(cap))
+    vec = pl.BlockSpec((1,), lambda c, t: (c,))
+    return pl.pallas_call(
+        kernel,
+        grid=(C, ntb),
+        in_specs=[vec, vec, vec, vec, vec, vec, vec, vec,
+                  pl.BlockSpec((1, tb), lambda c, t: (c, t)),
+                  vec,
+                  pl.BlockSpec((1, 1), lambda c, t: (0, 0))],
+        out_specs=[vec, vec, vec, vec],
+        out_shape=[
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+            jax.ShapeDtypeStruct((C,), jnp.int32),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((4,), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32),
+      price.astype(jnp.float32), obs.astype(jnp.float32),
+      floor.astype(jnp.float32), done.astype(jnp.float32),
+      cand_tok.astype(jnp.float32), cand_end.astype(jnp.float32),
+      sky.astype(jnp.float32), lens.astype(jnp.int32),
+      jnp.asarray(now, jnp.float32).reshape(1, 1))

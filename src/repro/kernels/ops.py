@@ -13,11 +13,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import cluster_step as _cs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import skyline as _sky
 from repro.kernels import ssd as _ssd
 
-__all__ = ["flash_attention", "ssd_scan", "arepas_runtimes"]
+__all__ = ["flash_attention", "ssd_scan", "arepas_runtimes",
+           "cluster_epoch_step", "cluster_resize_step"]
 
 
 def _interpret_default() -> bool:
@@ -113,3 +115,66 @@ def arepas_runtimes(skylines: jax.Array, valid_lens: jax.Array,
         interpret = _interpret_default()
     return _sky.skyline_runtimes(skylines, valid_lens, allocs,
                                  time_block=time_block, interpret=interpret)
+
+
+# -------------------------------------------------------- cluster epoch ---
+# Backend dispatch differs from the model kernels: the fused epoch twins are
+# dtype-generic jnp (float64-capable — the decision-parity contract), so on
+# CPU the hot path is the jitted twin (one XLA fusion per epoch) rather than
+# the interpreted Pallas body; on TPU the f32 Pallas kernel runs compiled.
+# impl: None (auto), "jnp", "pallas", "interpret".
+_epoch_step_jit = jax.jit(_cs.epoch_step_ref)
+
+
+def _cluster_impl(impl: Optional[str]) -> str:
+    if impl is None:
+        return "jnp" if _interpret_default() else "pallas"
+    assert impl in ("jnp", "pallas", "interpret"), impl
+    return impl
+
+
+def cluster_epoch_step(end_s: jax.Array, tokens: jax.Array, free: jax.Array,
+                       q_tok: jax.Array, q_end: jax.Array, now, *,
+                       impl: Optional[str] = None,
+                       lease_block: int = _cs.DEFAULT_LEASE_BLOCK):
+    """Fused expire -> release -> admit -> scatter over (K, L) lease tables.
+
+    Returns (new_end, new_tok, slot_of, n_admit, adm_tok, freed, n_expired);
+    see kernels/cluster_step.py for the contract.
+    """
+    impl = _cluster_impl(impl)
+    if impl == "jnp":
+        return _epoch_step_jit(end_s, tokens, free, q_tok, q_end,
+                               jnp.asarray(now, end_s.dtype))
+    return _cs.epoch_step_pallas(end_s, tokens, free, q_tok, q_end, now,
+                                 lease_block=lease_block,
+                                 interpret=(impl == "interpret"))
+
+
+@functools.lru_cache(maxsize=None)
+def _resize_step_jit(policy, cap: int, epoch_s: float):
+    def f(a, b, price, obs, floor, done, cand_tok, cand_end, sky, lens, now):
+        return _cs.resize_step_ref(a, b, price, obs, floor, done, cand_tok,
+                                   cand_end, sky, lens, now, epoch_s,
+                                   policy=policy, cap=cap)
+    return jax.jit(f)
+
+
+def cluster_resize_step(a, b, price, obs, floor, done, cand_tok, cand_end,
+                        sky, lens, now, epoch_s, *, policy, cap: int,
+                        impl: Optional[str] = None, time_block: int = 512):
+    """Fused priced shrink decision + AREPAS re-simulation + repricing.
+
+    Returns (tgt, sel, rt, new_end) per candidate; see cluster_step.py.
+    ``policy`` is an AllocationPolicy (hashable — jit caches per policy).
+    """
+    impl = _cluster_impl(impl)
+    if impl == "jnp":
+        fn = _resize_step_jit(policy, int(cap), float(epoch_s))
+        return fn(a, b, price, obs, floor, done, cand_tok, cand_end,
+                  sky, lens, jnp.asarray(now, jnp.asarray(a).dtype))
+    return _cs.resize_step_pallas(a, b, price, obs, floor, done, cand_tok,
+                                  cand_end, sky, lens, now, epoch_s,
+                                  policy=policy, cap=cap,
+                                  time_block=time_block,
+                                  interpret=(impl == "interpret"))

@@ -1,8 +1,11 @@
 from repro.roofline.analysis import (
     HW,
     Hardware,
+    KernelRoofline,
     RooflineReport,
     collective_bytes,
+    host_copy_bandwidth,
+    kernel_roofline,
     parse_hlo_collectives,
     roofline_terms,
 )
@@ -11,8 +14,11 @@ from repro.roofline.model_flops import model_flops
 __all__ = [
     "HW",
     "Hardware",
+    "KernelRoofline",
     "RooflineReport",
     "collective_bytes",
+    "host_copy_bandwidth",
+    "kernel_roofline",
     "parse_hlo_collectives",
     "roofline_terms",
     "model_flops",

@@ -28,7 +28,8 @@ import re
 from typing import Dict, Iterable, Optional, Tuple
 
 __all__ = ["HW", "Hardware", "collective_bytes", "roofline_terms",
-           "RooflineReport", "parse_hlo_collectives"]
+           "RooflineReport", "parse_hlo_collectives", "KernelRoofline",
+           "kernel_roofline", "host_copy_bandwidth"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,3 +202,91 @@ def roofline_terms(*, arch: str, shape: str, mesh: str, chips: int,
         collective_s=coll_bytes / hw.link_bw,
         bytes_per_device=bytes_per_device,
     )
+
+
+# ----------------------------------------------------- streaming kernels ---
+# The fused cluster-epoch kernels (kernels/cluster_step.py) do essentially
+# no arithmetic per byte — a replay epoch reads the (K, L) lease tables and
+# the (K, Q) queue head, and writes them back.  Their roofline is therefore
+# one-term: wall time vs. the time the memory system needs to move the
+# analytic traffic.  ``bytes_per_launch`` is analytic (summed from the
+# operand/result shapes), not measured — the point is a stable,
+# host-independent denominator for the CI regression gate.
+@dataclasses.dataclass
+class KernelRoofline:
+    kernel: str                       # e.g. "cluster_epoch_step"
+    launches: int
+    bytes_per_launch: float           # analytic operand+result traffic
+    wall_s: float                     # total wall across all launches
+    items: int = 0                    # events (or candidates) processed
+    measured_bw: float = 0.0          # host copy bandwidth (CPU baseline)
+    hw: Hardware = HW
+
+    @property
+    def total_bytes(self) -> float:
+        return self.launches * self.bytes_per_launch
+
+    @property
+    def achieved_bw(self) -> float:
+        """Bytes actually streamed per wall second."""
+        return self.total_bytes / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        """Memory-bound time on the reference accelerator's HBM."""
+        return self.total_bytes / self.hw.hbm_bw
+
+    @property
+    def bound_fraction(self) -> float:
+        """Fraction of the memory roofline achieved.  On the CPU container
+        this is tiny (launch overhead dominates the small tables); compare
+        against ``measured_bw`` for the host-relative number."""
+        return self.bound_s / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def host_fraction(self) -> float:
+        """achieved_bw / measured host copy bandwidth (0 if unmeasured)."""
+        if self.measured_bw <= 0:
+            return 0.0
+        return self.achieved_bw / self.measured_bw
+
+    def row(self) -> Dict:
+        return {
+            "kernel": self.kernel,
+            "launches": self.launches,
+            "bytes_per_launch": int(self.bytes_per_launch),
+            "total_gb": round(self.total_bytes / 1e9, 4),
+            "wall_s": round(self.wall_s, 4),
+            "items": self.items,
+            "items_per_s": (round(self.items / self.wall_s, 1)
+                            if self.wall_s > 0 else None),
+            "achieved_gb_s": round(self.achieved_bw / 1e9, 4),
+            "hbm_bound_frac": round(self.bound_fraction, 6),
+            "host_bw_frac": round(self.host_fraction, 4),
+            "tpu_projected_s": round(self.bound_s, 6),
+        }
+
+
+def kernel_roofline(kernel: str, *, launches: int, bytes_per_launch: float,
+                    wall_s: float, items: int = 0, measured_bw: float = 0.0,
+                    hw: Hardware = HW) -> KernelRoofline:
+    return KernelRoofline(kernel=kernel, launches=launches,
+                          bytes_per_launch=bytes_per_launch, wall_s=wall_s,
+                          items=items, measured_bw=measured_bw, hw=hw)
+
+
+def host_copy_bandwidth(n_bytes: int = 1 << 26, reps: int = 3) -> float:
+    """Measured host memcpy bandwidth (bytes/s, read+write counted once):
+    the honest local ceiling for a streaming kernel on this container."""
+    import time
+
+    import numpy as np
+    src = np.ones(n_bytes // 8, np.float64)
+    dst = np.empty_like(src)
+    np.copyto(dst, src)                       # touch both buffers
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        np.copyto(dst, src)
+        best = min(best, time.perf_counter() - t0)
+    return src.nbytes / best

@@ -286,6 +286,59 @@ class TraceEvent:
 
 
 @dataclasses.dataclass
+class TraceChunk:
+    """One columnar slice of a streamed trace (events [start, start+len)).
+
+    Same columns as ``Trace.arrays()`` — chunks from
+    ``TraceGenerator.stream`` concatenate bitwise-identically to the bulk
+    ``generate`` columns, so a chunk-driven replay sees the exact trace the
+    in-memory path does.
+    """
+    start: int
+    arrival_s: np.ndarray
+    job_index: np.ndarray
+    tenant: np.ndarray
+    sla: np.ndarray
+    deadline_s: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.arrival_s)
+
+
+@dataclasses.dataclass
+class TraceStream:
+    """A trace too large to materialize: the unique-query pool up front
+    (bounded by ``n_unique``, shared by every event), events on demand in
+    columnar chunks. ``chunks()`` restarts the stream from event 0 each
+    call — the generator children re-derive the same draws."""
+    jobs: List[Job]
+    skylines: List[np.ndarray]
+    sla_classes: Tuple["SLAClass", ...]
+    seed: int
+    n_events: int
+    chunk_size: int
+    _generator: "TraceGenerator"
+    _cache: Optional[List[TraceChunk]] = None
+
+    def __len__(self) -> int:
+        return self.n_events
+
+    def chunks(self):
+        if self._cache is not None:
+            return iter(self._cache)
+        return self._generator._event_chunks(self.n_events, self.chunk_size,
+                                             self.skylines)
+
+    def buffer(self) -> "TraceStream":
+        """Materialize the chunks once (the MMPP arrival chain is a
+        sequential host loop); later ``chunks()`` calls replay the cached
+        columns — so a timed replay measures the fabric, not the RNG."""
+        if self._cache is None:
+            self._cache = list(self.chunks())
+        return self
+
+
+@dataclasses.dataclass
 class Trace:
     """A replayable multi-tenant query stream.
 
@@ -398,24 +451,69 @@ class TraceGenerator:
         p = (1.0 + ranks) ** -self.zipf_exponent
         return p / p.sum()
 
-    def generate(self, n_events: int) -> Trace:
-        jobs, skylines = self._build_pool()
-        arrivals = self._arrival_times(n_events)
+    def _event_chunks(self, n_events: int, chunk_size: int,
+                      skylines: List[np.ndarray]):
+        """Yield ``TraceChunk`` slices, bitwise-equal to the bulk columns.
+
+        The MMPP arrival loop carries its (burst state, absolute time)
+        across chunks on one continuing generator stream; the identity-pick
+        stream draws per chunk from the same ``Generator`` (chunked
+        ``choice``/``exponential`` draws concatenate exactly to the bulk
+        draw). The absolute-time carry is seeded into the cumsum
+        (``cumsum([t_prev, *gaps])[1:]``), reproducing the bulk cumsum's
+        left-to-right rounding — plain ``t_prev + cumsum(gaps)`` would not.
+        """
+        assert chunk_size >= 1
+        g_arr = self._gen(1)
+        pop = self._popularity()
         g_pick, g_tenant = self._gen(3), self._gen(4)
-        picks = g_pick.choice(self.n_unique, size=n_events,
-                              p=self._popularity())
         tenant_of_job = g_tenant.integers(self.n_tenants, size=self.n_unique)
         sla_of_tenant = np.arange(self.n_tenants) % len(self.sla_classes)
+        sla_of_job = sla_of_tenant[tenant_of_job]
         limits = np.array([c.slowdown_limit for c in self.sla_classes])
         ideal = np.array([len(s) for s in skylines], np.float64)
+        burst = False
+        t_prev = 0.0
+        start = 0
+        while start < n_events:
+            m = min(chunk_size, n_events - start)
+            gaps = np.empty(m)
+            for i in range(m):
+                rate = self.rate_qps * (self.burst_factor if burst else 1.0)
+                gaps[i] = g_arr.exponential(1.0 / rate)
+                burst = (g_arr.random() < self.p_burst if not burst
+                         else g_arr.random() >= self.p_calm)
+            arrivals = np.cumsum(np.concatenate([[t_prev], gaps]))[1:]
+            t_prev = float(arrivals[-1])
+            picks = g_pick.choice(self.n_unique, size=m, p=pop)
+            picks = picks.astype(np.int64)
+            sla = sla_of_job[picks].astype(np.int64)
+            yield TraceChunk(
+                start=start, arrival_s=arrivals, job_index=picks,
+                tenant=tenant_of_job[picks].astype(np.int64), sla=sla,
+                deadline_s=arrivals + limits[sla] * ideal[picks])
+            start += m
+
+    def stream(self, n_events: int, chunk_size: int = 65536) -> TraceStream:
+        """Chunked trace for replays too large to materialize (the 1M-event
+        benchmark): the unique pool is built once, events arrive as
+        ``TraceChunk`` columns identical to the bulk ``generate`` trace."""
+        jobs, skylines = self._build_pool()
+        return TraceStream(jobs=jobs, skylines=skylines,
+                           sla_classes=self.sla_classes, seed=self.seed,
+                           n_events=n_events, chunk_size=chunk_size,
+                           _generator=self)
+
+    def generate(self, n_events: int) -> Trace:
+        jobs, skylines = self._build_pool()
         events = []
-        for i in range(n_events):
-            u = int(picks[i])
-            sla = int(sla_of_tenant[tenant_of_job[u]])
-            events.append(TraceEvent(
-                query_id=i, arrival_s=float(arrivals[i]), job_index=u,
-                tenant=int(tenant_of_job[u]), sla=sla,
-                deadline_s=float(arrivals[i] + limits[sla] * ideal[u])))
+        for ch in self._event_chunks(n_events, max(n_events, 1), skylines):
+            for i in range(len(ch)):
+                events.append(TraceEvent(
+                    query_id=ch.start + i, arrival_s=float(ch.arrival_s[i]),
+                    job_index=int(ch.job_index[i]),
+                    tenant=int(ch.tenant[i]), sla=int(ch.sla[i]),
+                    deadline_s=float(ch.deadline_s[i])))
         return Trace(events=events, jobs=jobs, skylines=skylines,
                      sla_classes=self.sla_classes, seed=self.seed)
 

@@ -509,3 +509,97 @@ def test_simulator_replays_10k_trace(service):
     for key in ("cost_token_s", "utilization", "p50_slowdown", "p99_slowdown",
                 "sla_violation_rate", "mean_queue_depth"):
         assert key in m
+
+
+# ------------------------------------------------------------ fused kernels --
+def test_fused_epoch_path_matches_unfused(service):
+    """Tentpole acceptance: the fused epoch path (one cluster_epoch_step
+    launch per epoch over the device-resident lease tables, fused
+    decision+AREPAS+reprice launches for resize events) is
+    decision-identical to the unfused loop for the fixed, edf-elastic and
+    K=4 configs — every metric, per-decision series and epoch sample."""
+    trace = TraceGenerator(seed=33, n_unique=24, rate_qps=1.0).generate(500)
+    for kw in (dict(capacity=2048, epoch_s=8.0),
+               dict(capacity=1024, epoch_s=4.0, admission="edf",
+                    elastic=True, pricing="elastic"),
+               dict(capacity=2048, epoch_s=8.0, n_shards=4)):
+        base = ClusterSimulator(service, ClusterConfig(**kw)).run(trace)
+        fused = ClusterSimulator(
+            service, ClusterConfig(fused=True, **kw)).run(trace)
+        assert dict(base.metrics) == dict(fused.metrics), kw
+        np.testing.assert_array_equal(base.alloc_errors, fused.alloc_errors)
+        np.testing.assert_array_equal(base.cache_hits, fused.cache_hits)
+        np.testing.assert_array_equal(base.repeats, fused.repeats)
+        assert base.cache_stats == fused.cache_stats
+        tb, eb = base.error_series
+        tf, ef = fused.error_series
+        np.testing.assert_array_equal(tb, tf)
+        # epochs with no decisions sample NaN mean error: equal_nan compare
+        assert np.array_equal(eb, ef, equal_nan=True), kw
+
+
+def test_fused_loop_keeps_pool_state_device_resident(service, monkeypatch):
+    """Satellite regression: the fused epoch loop must never re-upload the
+    host lease-table mirrors — the whole point of the fusion is that pool
+    state lives on device across epochs, with the numpy mirrors updated
+    from the kernel's (K,) outputs. The spy flags any ``jnp.asarray`` of a
+    live pool's mirror tables during the replay."""
+    import jax
+    import jax.numpy as jnp
+    import repro.cluster.pool as pool_mod
+
+    pools = []
+    orig_init = pool_mod.PoolShards.__init__
+
+    def init_spy(self, *a, **k):
+        orig_init(self, *a, **k)       # the one-time upload happens here
+        pools.append(self)
+
+    monkeypatch.setattr(pool_mod.PoolShards, "__init__", init_spy)
+    offenders = []
+    orig_asarray = jnp.asarray
+
+    def asarray_spy(x, *a, **k):
+        if isinstance(x, np.ndarray):
+            for p in pools:
+                if x is p._end_s or x is p._tokens:
+                    offenders.append(x.shape)
+        return orig_asarray(x, *a, **k)
+
+    monkeypatch.setattr(jax.numpy, "asarray", asarray_spy)
+    trace = TraceGenerator(seed=44, n_unique=12, rate_qps=1.0).generate(200)
+    rep = ClusterSimulator(
+        service, ClusterConfig(capacity=2048, fused=True)).run(trace)
+    assert rep.metrics["n_completed"] + rep.metrics["n_rejected"] == 200
+    assert pools, "the simulator must build its PoolShards"
+    assert not offenders, f"pool mirrors re-uploaded: {offenders}"
+    # after the replay the resident device tables equal the host mirrors
+    p = pools[-1]
+    assert isinstance(p._d_end, jax.Array) and isinstance(p._d_tok, jax.Array)
+    np.testing.assert_array_equal(np.asarray(p._d_tok), p._tokens)
+    np.testing.assert_array_equal(np.asarray(p._d_end), p._end_s)
+
+
+def test_fused_replay_conserves_and_reports_roofline():
+    """The 1M-event replay driver at test size: every event is admitted or
+    rejected, every admitted lease completes, one launch per epoch, and
+    the roofline row accounts the launches. The buffered stream replays
+    deterministically."""
+    from repro.cluster import FusedReplay, ReplayConfig
+    gen = TraceGenerator(seed=71, n_unique=32, rate_qps=4.0)
+    stream = gen.stream(3000, chunk_size=1024).buffer()
+    cfg = ReplayConfig(capacity=65536, n_shards=4, max_leases=1024,
+                       epoch_s=60.0, queue_block=512)
+    rep = FusedReplay(cfg).run(stream)
+    assert rep.n_events == 3000
+    assert rep.n_admitted + rep.n_rejected == 3000
+    assert rep.n_completed == rep.n_admitted
+    assert rep.launches == rep.n_epochs
+    row = rep.roofline.row()
+    assert row["kernel"] == "cluster_epoch_step"
+    assert row["launches"] == rep.launches
+    assert row["total_gb"] > 0 and rep.events_per_s > 0
+    rep2 = FusedReplay(cfg).run(stream)
+    assert rep2.n_admitted == rep.n_admitted
+    assert rep2.n_epochs == rep.n_epochs
+    assert rep2.mean_utilization == rep.mean_utilization

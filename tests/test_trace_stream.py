@@ -1,0 +1,56 @@
+"""Chunked trace streaming (TraceGenerator.stream / TraceStream).
+
+Kept apart from test_workloads.py, which is hypothesis-gated and skips
+entirely on containers without hypothesis — these invariants must always
+run: the 1M-event replay driver feeds on this stream.
+"""
+import numpy as np
+
+from repro.workloads import TraceGenerator
+
+
+def test_stream_chunks_match_generate_bitwise():
+    """Satellite: the chunked stream is the same trace ``generate()``
+    builds — bitwise, for every column, at any chunk size (the MMPP
+    arrival chain carries its burst state across chunk boundaries)."""
+    n = 500
+    cols = TraceGenerator(seed=33, n_unique=24, rate_qps=1.0) \
+        .generate(n).arrays()
+    for chunk_size in (64, 128, 500, 7):
+        stream = TraceGenerator(seed=33, n_unique=24, rate_qps=1.0) \
+            .stream(n, chunk_size=chunk_size)
+        assert len(stream) == n
+        got: dict = {}
+        total = 0
+        for ch in stream.chunks():
+            assert ch.start == total
+            total += len(ch)
+            for f in ("arrival_s", "job_index", "tenant", "sla",
+                      "deadline_s"):
+                got.setdefault(f, []).append(getattr(ch, f))
+        assert total == n
+        for f, parts in got.items():
+            np.testing.assert_array_equal(np.concatenate(parts), cols[f],
+                                          err_msg=f"{chunk_size}:{f}")
+
+
+def test_stream_shares_job_pool_with_generate():
+    trace = TraceGenerator(seed=9, n_unique=8, rate_qps=2.0).generate(300)
+    stream = TraceGenerator(seed=9, n_unique=8, rate_qps=2.0).stream(300)
+    assert len(stream.jobs) == len(trace.jobs) == 8
+    for s1, s2 in zip(stream.skylines, trace.skylines):
+        np.testing.assert_array_equal(s1, s2)
+
+
+def test_stream_buffer_replays_cached_chunks():
+    """buffer() materializes the sequential arrival chain once; later
+    chunks() calls replay the same column arrays (a timed replay then
+    measures the fabric, not the RNG)."""
+    stream = TraceGenerator(seed=9, n_unique=8, rate_qps=2.0) \
+        .stream(300, chunk_size=100)
+    assert stream.buffer() is stream
+    first = list(stream.chunks())
+    second = list(stream.chunks())
+    assert len(first) == 3
+    for a, b in zip(first, second):
+        assert a.arrival_s is b.arrival_s      # cached, not regenerated
