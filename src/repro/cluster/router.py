@@ -31,18 +31,15 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+# canonical home is repro.obs._hash (dependency-free) so the flight
+# recorder's sampler shares the exact hash without an import cycle;
+# re-exported here because routing is where most callers reach for it
+from repro.obs import NULL_OBS, Obs
+from repro.obs._hash import splitmix64
+
 __all__ = ["Router", "splitmix64"]
 
 _U64 = np.uint64
-
-
-def splitmix64(x: np.ndarray) -> np.ndarray:
-    """Vectorized splitmix64 finalizer: uint64 -> well-mixed uint64."""
-    x = np.asarray(x).astype(_U64)
-    x = (x + _U64(0x9E3779B97F4A7C15))
-    x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
-    x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
-    return x ^ (x >> _U64(31))
 
 
 class Router:
@@ -58,7 +55,9 @@ class Router:
     def __init__(self, n_shards: Optional[int] = None, *,
                  shard_ids: Optional[Sequence[int]] = None,
                  n_vnodes: int = 64, load_factor: float = 1.25,
-                 spill_threshold: float = 1.0, seed: int = 0):
+                 spill_threshold: float = 1.0, seed: int = 0,
+                 obs: Optional[Obs] = None):
+        self.obs = NULL_OBS if obs is None else obs
         assert (n_shards is None) != (shard_ids is None), \
             "pass exactly one of n_shards / shard_ids"
         ids = (np.arange(n_shards, dtype=np.int64) if shard_ids is None
@@ -184,11 +183,20 @@ class Router:
         keys = np.asarray(keys, np.int64)
         load = np.asarray(load, np.float64)
         assert load.shape == (self.n_shards,), load.shape
-        hm = self.home(keys)
-        if self.n_shards == 1:
-            return hm, np.zeros(keys.size, bool)
-        alt = self.second(keys, home=hm)
-        hm_r, alt_r = self.rank(hm), self.rank(alt)
-        spill = (load[hm_r] >= self.spill_threshold) \
-            & (load[alt_r] < load[hm_r])
-        return np.where(spill, alt, hm), spill
+        o = self.obs
+        with o.tracer.span("router.route", n=int(keys.size)) as sp:
+            hm = self.home(keys)
+            if self.n_shards == 1:
+                shards = hm
+                spill = np.zeros(keys.size, bool)
+            else:
+                alt = self.second(keys, home=hm)
+                hm_r, alt_r = self.rank(hm), self.rank(alt)
+                spill = (load[hm_r] >= self.spill_threshold) \
+                    & (load[alt_r] < load[hm_r])
+                shards = np.where(spill, alt, hm)
+            if sp is not None:
+                sp.attrs["spilled"] = int(spill.sum())
+        o.metrics.counter("routed").inc(int(keys.size))
+        o.metrics.counter("route_spills").inc(int(spill.sum()))
+        return shards, spill

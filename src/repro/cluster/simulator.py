@@ -55,6 +55,7 @@ from repro.cluster.scheduler import (PriceSignal, QueueView, deadline_floor,
 from repro.core.arepas import simulate_runtime_batch_jit
 from repro.core.featurize import batch_graphs, batch_job_features
 from repro.kernels.ops import cluster_resize_step
+from repro.obs import NULL_OBS, Obs
 from repro.serve.batching import batch_bucket, node_bucket, pad_to
 from repro.serve.service import ShardedAllocationService
 from repro.workloads.generator import Trace
@@ -129,17 +130,22 @@ class ClusterSimulator:
     replicated across ``cfg.n_shards`` racks."""
 
     def __init__(self, service, cfg: ClusterConfig = ClusterConfig(),
-                 mesh=None, fabric: Optional[ShardedAllocationService] = None):
+                 mesh=None, fabric: Optional[ShardedAllocationService] = None,
+                 obs: Optional[Obs] = None):
         assert cfg.pricing in ("fixed", "elastic"), cfg.pricing
         assert cfg.capacity % cfg.n_shards == 0, \
             (cfg.capacity, cfg.n_shards)
         self.service = service
         self.cfg = cfg
+        # default to the service's bundle so Allocator-wired observability
+        # follows the simulator without re-plumbing
+        self.obs = obs if obs is not None else getattr(service, "obs",
+                                                       NULL_OBS)
         self.policy = make_policy(cfg.admission)
         self.router = Router(cfg.n_shards, n_vnodes=cfg.router_vnodes,
                              load_factor=cfg.load_factor,
                              spill_threshold=cfg.spill_threshold,
-                             seed=cfg.router_seed)
+                             seed=cfg.router_seed, obs=self.obs)
         # reuse a caller-built fabric (e.g. AllocationFrontend's) when its
         # shard count matches; otherwise build one over the given mesh
         if fabric is not None and fabric.n_shards == cfg.n_shards \
@@ -182,6 +188,10 @@ class ClusterSimulator:
         # counter families as this run's delta, not the lifetime totals
         replica_stats0 = self.fabric.replica_stats()
         service_stats0 = dict(self.service.stats)
+        o, tr = self.obs, self.obs.tracer
+        # install this run's bundle on the (possibly shared) service so
+        # fabric.decide spans/latency land with the simulator's records
+        prev_obs, self.service.obs = self.service.obs, o
         t_wall = time.time()
         n = len(trace)
         cols = trace.arrays()
@@ -265,8 +275,11 @@ class ClusterSimulator:
 
             # 1. lease expiry (one kernel over every shard) -> completions
             #    -> refinement into each template's *home* cache shard
-            done_sh, done_ids, _ = pool.expire(now)
+            with tr.span("scheduler.expire"):
+                done_sh, done_ids, _ = pool.expire(now)
             if done_ids.size:
+                tr.point("lease.complete", n=int(done_ids.size), t_sim=now)
+                o.metrics.counter("completed").inc(int(done_ids.size))
                 jb = jb_all[done_ids]
                 fin = end_q[done_ids]
                 metrics.record_completions(
@@ -336,6 +349,9 @@ class ClusterSimulator:
                                                       areas=areas[jb])
                 else:
                     hit = np.zeros(ids.size, bool)
+                o.metrics.counter("cache_hit").inc(int(hit.sum()))
+                o.metrics.counter("cache_miss").inc(
+                    int(ids.size) - int(hit.sum()))
                 if np.any(hit):      # exact-history path: policy twin only
                     tokens[hit] = self.fabric.decide(
                         AllocationRequest(a=a_c[hit], b=b_c[hit],
@@ -369,6 +385,8 @@ class ClusterSimulator:
                 else:
                     tokens = perf
                 tok_q[ids] = tokens
+                o.metrics.histogram("price_at_decision",
+                                    lo=1e-3, hi=1e3).record_many(price_q[ids])
                 perf_q[ids] = perf
                 a_q[ids] = a_dec
                 b_q[ids] = b_dec
@@ -437,6 +455,10 @@ class ClusterSimulator:
                         metrics.record_resizes(
                             shrunk=sids.size,
                             reclaimed=int(np.sum(cand_tok[sel] - new_tok)))
+                        tr.point("lease.resize", t_sim=now,
+                                 shrunk=int(sids.size))
+                        o.metrics.counter("leases_shrunk").inc(
+                            int(sids.size))
                         if priced:   # fixed pricing reports neutral prices
                             price_q[sids] = prices[cand_sh[sel],
                                                    sla_all[sids]]
@@ -492,6 +514,7 @@ class ClusterSimulator:
                     priority=priorities[sla_all[q_ids]],
                     slack_s=deadline_all[q_ids] - (now + rt_q[q_ids]))
                 queues[k] = q_ids[self.policy.order(view)]
+            n_granted = 0
             if cfg.fused and elig:
                 # an admitted prefix holds >= 1 token per query, so no
                 # prefix extends past cap_shard entries — bound Q by it
@@ -505,7 +528,10 @@ class ClusterSimulator:
                     q_ids_m[k, :q.size] = q
                     q_tok_m[k, :q.size] = tok_q[q]
                     q_end_m[k, :q.size] = now + rt_q[q]
-                n_adm = pool.admit_epoch(now, q_ids_m, q_tok_m, q_end_m)
+                # pool.admit_epoch reads the kernel outputs back to host, so
+                # the span closes at device completion, not dispatch
+                with tr.span("cluster_epoch_step", fused=True, Q=int(Qp)):
+                    n_adm = pool.admit_epoch(now, q_ids_m, q_tok_m, q_end_m)
                 for k in elig:
                     j = int(n_adm[k])
                     if j:
@@ -514,20 +540,32 @@ class ClusterSimulator:
                         mark_q[adm] = now
                         done_q[adm] = 0.0
                         end_q[adm] = now + rt_q[adm]
+                        o.metrics.histogram(
+                            "admission_wait_sim_s",
+                            lo=1e-3, hi=1e6).record_many(now - arrival[adm])
+                        n_granted += j
                     queues[k] = queues[k][j:]
             else:
-                for k in elig:
-                    q_ids = queues[k]
-                    fits = np.cumsum(tok_q[q_ids]) <= pool.free[k]
-                    j = int(np.searchsorted(~fits, True))  # True prefix
-                    if j:
-                        adm = q_ids[:j]
-                        start_q[adm] = now
-                        mark_q[adm] = now
-                        done_q[adm] = 0.0
-                        end_q[adm] = now + rt_q[adm]
-                        pool.acquire_batch(k, adm, tok_q[adm], end_q[adm])
-                    queues[k] = q_ids[j:]
+                with tr.span("scheduler.admit", shards=len(elig)):
+                    for k in elig:
+                        q_ids = queues[k]
+                        fits = np.cumsum(tok_q[q_ids]) <= pool.free[k]
+                        j = int(np.searchsorted(~fits, True))  # True prefix
+                        if j:
+                            adm = q_ids[:j]
+                            start_q[adm] = now
+                            mark_q[adm] = now
+                            done_q[adm] = 0.0
+                            end_q[adm] = now + rt_q[adm]
+                            pool.acquire_batch(k, adm, tok_q[adm], end_q[adm])
+                            o.metrics.histogram(
+                                "admission_wait_sim_s", lo=1e-3,
+                                hi=1e6).record_many(now - arrival[adm])
+                            n_granted += j
+                        queues[k] = q_ids[j:]
+            if n_granted:
+                tr.point("lease.grant", n=n_granted, t_sim=now)
+                o.metrics.counter("admitted").inc(n_granted)
 
             # 7. elastic grow: a shard with an empty queue and idle tokens
             #    feeds running leases projected to miss their deadline
@@ -564,13 +602,26 @@ class ClusterSimulator:
                                        start_q, end_q, cost_q, mark_q,
                                        done_q, pool)
                     metrics.record_resizes(grown=gids.size, granted=granted)
+                    tr.point("lease.resize", t_sim=now, grown=int(gids.size))
+                    o.metrics.counter("leases_grown").inc(int(gids.size))
 
             epoch_errs = err_q[ids] if ids.size else np.zeros(0)
-            metrics.sample_epoch(now, int(sum(q.size for q in queues)),
-                                 int(pool.in_use.sum()), epoch_errs,
+            qd = int(sum(q.size for q in queues))
+            metrics.sample_epoch(now, qd, int(pool.in_use.sum()), epoch_errs,
                                  in_use_shard=pool.in_use)
+            if tr.enabled:   # per-shard counter lanes for the Perfetto view
+                tr.sample("pool_in_use", **{f"shard{k}": int(pool.in_use[k])
+                                            for k in range(K)})
+                tr.sample("queue_depth", **{f"shard{k}": int(queues[k].size)
+                                            for k in range(K)})
+                tr.point("epoch", t_sim=now, arrived=int(ids.size))
+            g = o.metrics.gauge("queue_depth_peak")
+            g.set(max(g.value, qd))
 
         wall = time.time() - t_wall
+        self.service.obs = prev_obs
+        o.metrics.counter("epochs").inc(n_epochs)
+        o.metrics.counter("rejected").inc(int(metrics.n_rejected))
         report = metrics.report()
         # replay rate: queries fully processed (completed or rejected) / wall
         n_processed = report.get("n_completed", 0) + report.get("n_rejected", 0)
@@ -616,7 +667,9 @@ class ClusterSimulator:
         (tgt, sel, rt, new_end), each (C,)."""
         C = a.shape[0]
         Cp = batch_bucket(C)
-        with enable_x64():
+        # outputs are read back to numpy inside the span, so it closes at
+        # device completion (the fence the exporter's timeline relies on)
+        with self.obs.tracer.span("cluster_resize_step", C=C), enable_x64():
             tgt, sel, rt, new_end = cluster_resize_step(
                 jnp.asarray(pad_to(a, Cp)), jnp.asarray(pad_to(b, Cp)),
                 jnp.asarray(pad_to(price, Cp)),

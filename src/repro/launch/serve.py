@@ -119,14 +119,20 @@ class AllocationFrontend:
     """
 
     def __init__(self, service, max_batch: int = 256, n_shards: int = 1,
-                 mesh=None):
+                 mesh=None, obs=None):
         from repro.launch.mesh import make_allocation_mesh
         from repro.serve.service import ShardedAllocationService
         self.service = service
+        # one Obs bundle end to end: an explicit one is installed on the
+        # service so frontend, batcher, fabric, and simulator all share it
+        if obs is not None:
+            service.obs = obs
+        self.obs = service.obs
         self.n_shards = int(n_shards)
         self.mesh = make_allocation_mesh(n_shards) if mesh is None else mesh
         self.fabric = ShardedAllocationService(service, n_shards, self.mesh)
-        self._batcher = MicroBatcher(service, max_batch=max_batch)
+        self._batcher = MicroBatcher(service, max_batch=max_batch,
+                                     obs=self.obs)
 
     @property
     def pending(self) -> int:
@@ -140,7 +146,8 @@ class AllocationFrontend:
 
     def step(self) -> Dict[int, int]:
         """Drain the queue: {request_id: allocated tokens}."""
-        return self._batcher.flush()
+        with self.obs.tracer.span("frontend.step", pending=self.pending):
+            return self._batcher.flush()
 
     def decide(self, request: AllocationRequest,
                context: Optional[DecisionContext] = None
@@ -197,5 +204,5 @@ class AllocationFrontend:
             cfg = dataclasses.replace(cfg, **overrides)
         mesh = self.mesh if cfg.n_shards == self.n_shards else None
         sim = ClusterSimulator(self.service, cfg, mesh=mesh,
-                               fabric=self.fabric)
+                               fabric=self.fabric, obs=self.obs)
         return sim.run(trace)

@@ -1,0 +1,91 @@
+"""Serving-plane observability: spans, metrics, Perfetto export, provenance.
+
+One ``Obs`` bundle threads through every serving layer (service, batcher,
+frontend, router, simulator, fused replay):
+
+  * ``tracer``   — request-lifecycle span tracing with an injectable clock
+    and a fixed-size ring buffer (``obs.trace``);
+  * ``metrics``  — counters / gauges / log-bucketed latency histograms
+    that merge across the K shards (``obs.metrics``);
+  * ``recorder`` — sampled ``AllocationRequest -> AllocationDecision``
+    provenance rows to JSONL (``obs.flight``);
+  * ``profile_dir`` — optional ``jax.profiler.trace`` capture directory
+    for device-side detail (``obs.export.device_profile``).
+
+The plane is *always on*: every seam calls into its ``Obs`` bundle
+unconditionally, and ``NULL_OBS`` (the default everywhere) resolves every
+call to a shared no-op — the disabled path is gated at ~0% overhead and a
+traced replay is decision-identical to an untraced one (the
+``obs_overhead`` benchmark and tests/test_obs.py).
+
+    from repro.obs import Obs, Tracer, MetricsRegistry, FlightRecorder
+    obs = Obs(tracer=Tracer(), metrics=MetricsRegistry(),
+              recorder=FlightRecorder("decisions.jsonl", sample_rate=0.1))
+    allocator = Allocator.from_config(AllocatorConfig(...), obs=obs)
+    ...
+    write_trace("trace.json", obs.tracer.records())   # -> ui.perfetto.dev
+    obs.metrics.save("metrics.json")
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.obs.export import device_profile, fence, trace_events, write_trace
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import (NULL_METRICS, Counter, Gauge, Histogram,
+                               MetricsRegistry, NullMetrics)
+from repro.obs.trace import NULL_TRACER, NullTracer, Record, Tracer
+
+__all__ = [
+    "Counter",
+    "FlightRecorder",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_METRICS",
+    "NULL_OBS",
+    "NullMetrics",
+    "NullTracer",
+    "Obs",
+    "Record",
+    "Tracer",
+    "device_profile",
+    "fence",
+    "trace_events",
+    "write_trace",
+]
+
+
+class Obs:
+    """The bundle every instrumented layer holds: tracer + metrics +
+    flight recorder (+ optional device-profile directory). Omitted pieces
+    resolve to their no-op twins, so instrumentation never branches."""
+
+    __slots__ = ("tracer", "metrics", "recorder", "profile_dir")
+
+    def __init__(self, tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 recorder: Optional[FlightRecorder] = None,
+                 profile_dir: Optional[str] = None):
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.metrics = NULL_METRICS if metrics is None else metrics
+        self.recorder = recorder
+        self.profile_dir = profile_dir
+
+    @classmethod
+    def enabled(cls, clock=None, capacity: int = 65536,
+                recorder: Optional[FlightRecorder] = None,
+                profile_dir: Optional[str] = None) -> "Obs":
+        """A fully recording bundle (the one-liner for drivers/tests)."""
+        import time
+        tr = Tracer(clock=clock or time.perf_counter, capacity=capacity)
+        return cls(tracer=tr, metrics=MetricsRegistry(), recorder=recorder,
+                   profile_dir=profile_dir)
+
+    @property
+    def is_null(self) -> bool:
+        return (self.tracer is NULL_TRACER and self.metrics is NULL_METRICS
+                and self.recorder is None)
+
+
+NULL_OBS = Obs()

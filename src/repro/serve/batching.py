@@ -21,12 +21,12 @@ the same dataclass the columnar ``decide`` batches use.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.api.types import AllocationRequest
+from repro.obs import NULL_OBS, Obs
 
 __all__ = ["AllocationRequest", "MicroBatcher", "batch_bucket", "node_bucket",
            "pad_to", "shard_positions"]
@@ -105,27 +105,34 @@ class MicroBatcher:
     ``max_wait_s`` bounds request latency: once the oldest queued request
     has waited that long, ``due()`` turns true and ``poll()`` flushes even a
     partial batch. The clock is injectable so drivers (and tests) can run on
-    simulated time; submission order is preserved within each input
+    simulated time; when none is passed it is *the tracer's clock* — queue
+    timestamps, queue-wait histograms, and span timings all read one
+    timebase, so a fake-clock test sees consistent waits everywhere (they
+    used to diverge: queue entries on ``time.monotonic``, spans on the
+    tracer clock). Submission order is preserved within each input
     signature across both full-batch and timeout flushes.
     """
 
     def __init__(self, service, max_batch: int = 256,
                  max_wait_s: Optional[float] = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Optional[Callable[[], float]] = None,
+                 obs: Optional[Obs] = None):
         self.service = service
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
-        self._clock = clock
+        self.obs = NULL_OBS if obs is None else obs
+        # explicit clock wins; otherwise share the tracer's timebase
+        self._clock = self.obs.tracer.clock if clock is None else clock
         self._queue: List[AllocationRequest] = []
-        self._oldest_t: Optional[float] = None
+        self._t_submit: List[float] = []     # same clock as the tracer
 
     def __len__(self) -> int:
         return len(self._queue)
 
     def submit(self, request: AllocationRequest) -> None:
-        if not self._queue:
-            self._oldest_t = self._clock()
+        self._t_submit.append(self._clock())
         self._queue.append(request)
+        self.obs.tracer.point("frontend.submit", id=request.request_id)
 
     def due(self, now: Optional[float] = None) -> bool:
         """True once the queue is full or the oldest request timed out."""
@@ -136,7 +143,7 @@ class MicroBatcher:
         if self.max_wait_s is None:
             return False
         now = self._clock() if now is None else now
-        return now - self._oldest_t >= self.max_wait_s
+        return now - self._t_submit[0] >= self.max_wait_s
 
     def poll(self, now: Optional[float] = None) -> Dict[int, int]:
         """Flush if ``due()``; otherwise keep queueing and return {}."""
@@ -160,15 +167,24 @@ class MicroBatcher:
         at the exact instant the previous window expired.
         """
         queue, self._queue = self._queue, []
-        self._oldest_t = None
+        t_submit, self._t_submit = self._t_submit, []
+        if not queue:
+            return {}
+        o = self.obs
         groups: Dict[Tuple, List[AllocationRequest]] = {}
         for r in queue:
             groups.setdefault(self._signature(r), []).append(r)
         results: Dict[int, int] = {}
-        for sig, reqs in groups.items():
-            for i in range(0, len(reqs), self.max_batch):
-                chunk = reqs[i:i + self.max_batch]
-                results.update(self._dispatch(sig, chunk))
+        with o.tracer.span("microbatch.flush", n=len(queue),
+                           groups=len(groups)):
+            now = self._clock()
+            for sig, reqs in groups.items():
+                for i in range(0, len(reqs), self.max_batch):
+                    chunk = reqs[i:i + self.max_batch]
+                    results.update(self._dispatch(sig, chunk))
+        # queue wait per request, on the same clock the timestamps used
+        o.metrics.histogram("queue_wait_s").record_many(
+            now - np.asarray(t_submit, np.float64))
         return {r.request_id: results[r.request_id] for r in queue}
 
     def _dispatch(self, sig: Tuple, reqs: Sequence[AllocationRequest]

@@ -59,6 +59,7 @@ from repro.api.types import (AllocationDecision, AllocationRequest,
                              DecisionContext, Provenance)
 from repro.core.allocator import (AllocationPolicy, choose_tokens_jnp,
                                   choose_tokens_priced_jnp)
+from repro.obs import NULL_OBS, Obs
 from repro.serve.batching import batch_bucket, pad_to, shard_positions
 
 __all__ = ["AllocationResult", "AllocationService", "ReplicaState",
@@ -127,6 +128,38 @@ def _protocol_dispatch(engine, request: AllocationRequest,
     return d
 
 
+def _observed_dispatch(engine, span_name: str, request: AllocationRequest,
+                       ctx: DecisionContext, decide_params, decide_fused,
+                       **span_attrs) -> AllocationDecision:
+    """``_protocol_dispatch`` under the observability plane: one span per
+    decide (with the compile-vs-cached-hit attribute read off the
+    ``stats["compiles"]`` delta), decision latency into the cached-call or
+    compile histogram, and a sampled provenance row to the flight recorder.
+    With ``NULL_OBS`` installed every hook is a shared no-op."""
+    o = engine.obs
+    tr = o.tracer
+    with tr.span(span_name, B=request.batch_size(),
+                 path="history" if request.a is not None else "model",
+                 priced=ctx.price is not None, **span_attrs) as sp:
+        c0 = engine.stats["compiles"]
+        t0 = tr.clock()
+        d = _protocol_dispatch(engine, request, ctx,
+                               decide_params, decide_fused)
+        dt = tr.clock() - t0
+        compiled = engine.stats["compiles"] > c0
+        if sp is not None:
+            sp.attrs["compiled"] = compiled
+    # compiles land in their own histogram so decision_latency_s percentiles
+    # (the SLO-gated series) measure the cached-executable steady state
+    o.metrics.histogram(
+        "decision_compile_s" if compiled else "decision_latency_s").record(dt)
+    o.metrics.counter("decide_calls").inc()
+    o.metrics.counter("decide_queries").inc(len(d))
+    if o.recorder is not None:
+        o.recorder.record(request, d, ctx)
+    return d
+
+
 class ReplicaState:
     """Mutable serving state of one model replica.
 
@@ -151,13 +184,14 @@ class AllocationService:
     MAX_BATCH = 4096
 
     def __init__(self, model, policy: Optional[AllocationPolicy] = None,
-                 batch_floor: int = 8):
+                 batch_floor: int = 8, obs: Optional[Obs] = None):
         self.model = model
         # per-instance default: a shared module-level AllocationPolicy()
         # instance would alias every service built without an explicit one
         self.policy = AllocationPolicy() if policy is None else policy
         self.batch_floor = batch_floor
         self.replica = ReplicaState()
+        self.obs = NULL_OBS if obs is None else obs
 
     @property
     def _cache(self) -> Dict[Tuple, callable]:
@@ -258,7 +292,7 @@ class AllocationService:
             return AllocationDecision.concat(
                 self.decide(request.narrow(s), ctx.narrow(s))
                 for s in self._chunks(B))
-        return _protocol_dispatch(self, request, ctx,
+        return _observed_dispatch(self, "service.decide", request, ctx,
                                   self._decide_params, self._decide_fused)
 
     def _decide_params(self, a: np.ndarray, b: np.ndarray,
@@ -397,6 +431,16 @@ class ShardedAllocationService:
     def stats(self) -> Dict[str, int]:
         return self.service.stats
 
+    @property
+    def obs(self) -> Obs:
+        # one Obs bundle per service; the fabric shares its wrapped
+        # service's so single-shard and fabric traffic land in one place
+        return self.service.obs
+
+    @obs.setter
+    def obs(self, value: Obs) -> None:
+        self.service.obs = value
+
     def replica_stats(self) -> List[Dict[str, int]]:
         """Per-shard decision counters, shard-rank order."""
         return [dict(r.stats) for r in self.replicas]
@@ -510,12 +554,13 @@ class ShardedAllocationService:
                 self.decide(request.narrow(s), ctx.narrow(s))
                 for s in self.service._chunks(B))
         shard_of = ctx.shard_of
-        return _protocol_dispatch(
-            self, request, ctx,
+        return _observed_dispatch(
+            self, "fabric.decide", request, ctx,
             lambda a, b, price, obs: self._decide_params(shard_of, a, b,
                                                          price, obs),
             lambda model_in, obs: self._decide_fused(shard_of, model_in,
-                                                     obs))
+                                                     obs),
+            K=self.n_shards)
 
     def _decide_params(self, shard_of: np.ndarray, a: np.ndarray,
                        b: np.ndarray, price: Optional[np.ndarray],
