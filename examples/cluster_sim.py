@@ -14,7 +14,11 @@ serving stack, end to end.
   5. optionally switch the scheduler: --admission edf --elastic
      --pricing elastic replays the same trace under deadline-aware EDF
      admission with lease resizing and per-SLA-class repricing, and prints
-     the cost / SLA delta vs. the priority/fixed baseline,
+     the cost / SLA delta vs. the priority/fixed baseline; --admission
+     edf_aging adds starvation aging, and --admission drf --preempt runs
+     dominant-resource-fair admission with checkpoint-and-requeue
+     preemption (preempted remainders re-enter the queue as fresh typed
+     requests and may land on another shard),
   6. optionally shard the fabric: --shards K replays through K racks behind
      consistent-hash routing (--load-factor tunes the router's bounded-load
      factor) and prints the per-shard utilization / imbalance / spill
@@ -54,9 +58,13 @@ def main() -> None:
     ap.add_argument("--n-train", type=int, default=300)
     ap.add_argument("--n-unique", type=int, default=96)
     ap.add_argument("--admission", default="priority",
-                    choices=("fifo", "priority", "edf"))
+                    choices=("fifo", "priority", "edf", "edf_aging", "drf"))
     ap.add_argument("--elastic", action="store_true",
                     help="resize running leases under pressure / idleness")
+    ap.add_argument("--preempt", action="store_true",
+                    help="checkpoint-and-requeue preemption (needs a "
+                         "victim-aware admission policy, e.g. --admission "
+                         "drf)")
     ap.add_argument("--pricing", default="fixed",
                     choices=("fixed", "elastic"))
     ap.add_argument("--shards", type=int, default=1,
@@ -94,7 +102,8 @@ def main() -> None:
     capacity = 8192 // args.shards * args.shards   # equal per-shard slices
     report = allocator.run_cluster(
         trace, ClusterConfig(capacity=capacity, n_shards=args.shards,
-                             load_factor=args.load_factor, fused=args.fused),
+                             load_factor=args.load_factor, fused=args.fused,
+                             preemption=args.preempt),
         admission=args.admission, elastic=args.elastic, pricing=args.pricing)
 
     print(f"\n{report.summary()}")
@@ -109,6 +118,9 @@ def main() -> None:
               f"({m.get('spill_rate', 0.0):.1%})")
         shares = [r["queries"] for r in report.replica_stats]
         print(f"  decisions per replica: {shares}")
+    if args.preempt:
+        print(f"  preemption: {m.get('preemptions', 0)} leases checkpointed "
+              f"({m.get('preempted_tokens_reclaimed', 0)} tokens reclaimed)")
     if args.admission != "priority" or args.elastic or args.pricing != "fixed":
         # same fabric topology, scheduler knobs at defaults: the printed
         # delta isolates the scheduler change, not the sharding change

@@ -54,7 +54,10 @@ class AllocationRequest:
     run (``DecisionContext.observed`` switches whether it is honored).
     ``template_id`` / ``sla`` / ``deadline_s`` are workload identity carried
     for routers, schedulers, and provenance — the decision kernels ignore
-    them.
+    them. ``preempted`` marks a checkpointed remainder of a preempted lease
+    being re-decided (params ride in ``(a, b)`` exactly like any history
+    request; the flag is provenance for schedulers and the flight recorder,
+    not a decision input) — the "new scenarios are fields" seam at work.
     """
     request_id: int = -1
     model_in: Optional[Dict[str, np.ndarray]] = None
@@ -64,6 +67,7 @@ class AllocationRequest:
     template_id: Optional[np.ndarray] = None
     sla: Optional[np.ndarray] = None
     deadline_s: Optional[np.ndarray] = None
+    preempted: Optional[np.ndarray] = None
 
     @classmethod
     def from_dataset(cls, model, ds, use_observed: bool = True
@@ -100,7 +104,8 @@ class AllocationRequest:
             observed_tokens=pick(self.observed_tokens),
             a=pick(self.a), b=pick(self.b),
             template_id=pick(self.template_id), sla=pick(self.sla),
-            deadline_s=pick(self.deadline_s))
+            deadline_s=pick(self.deadline_s),
+            preempted=pick(self.preempted))
 
 
 @dataclasses.dataclass

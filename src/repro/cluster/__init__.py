@@ -5,10 +5,12 @@ serving fabric with online PCC refinement.
 Zipf-repeated queries, per-tenant SLA classes) through a batched
 ``ShardedAllocationService`` against K finite token-pool shards
 (``PoolShards``) with per-shard admission control and pluggable queueing
-(``scheduler``: fifo / priority / EDF over SLA slack), elastic lease
-resizing (AREPAS re-simulation of running queries' remaining work under
-pool pressure or idleness), and a per-(shard, SLA-class) price signal that
-slides pressured classes to the cost-optimal point of their PCC. A
+(``scheduler``: fifo / priority / EDF over SLA slack, starvation-aged EDF,
+and DRF tenant fairness), elastic lease resizing (AREPAS re-simulation of
+running queries' remaining work under pool pressure or idleness),
+checkpoint-and-requeue preemption of over-share tenants' leases, and a
+per-(shard, SLA-class) price signal that slides pressured classes to the
+cost-optimal point of their PCC. A
 consistent-hash ``Router`` pins each query template to a home shard —
 repeat traffic keeps hitting the shard whose ``ShardedPCCCache`` already
 holds its exact PCC (the paper's "past observed" path) — and spills to the
@@ -32,8 +34,11 @@ from repro.cluster.pool import PoolShards, TokenPool
 from repro.cluster.replay import FusedReplay, ReplayConfig, ReplayReport
 from repro.cluster.router import Router
 from repro.cluster.scheduler import (
+    DrfPolicy,
+    EdfAgingPolicy,
     EdfPolicy,
     FifoPolicy,
+    LeaseView,
     PriceSignal,
     PriorityPolicy,
     QueueView,
@@ -47,9 +52,12 @@ __all__ = [
     "ClusterMetrics",
     "ClusterReport",
     "ClusterSimulator",
+    "DrfPolicy",
+    "EdfAgingPolicy",
     "EdfPolicy",
     "FifoPolicy",
     "FusedReplay",
+    "LeaseView",
     "PCCCache",
     "PoolShards",
     "PriceSignal",

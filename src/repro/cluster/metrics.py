@@ -77,6 +77,9 @@ class ClusterMetrics:
         self.n_grown = 0
         self.tokens_reclaimed = 0
         self.tokens_granted = 0
+        self.n_preempted = 0
+        self.tokens_preempted = 0
+        self.n_certain_miss = 0
 
     # ----------------------------------------------------------- recording --
     def record_resizes(self, *, shrunk: int = 0, grown: int = 0,
@@ -86,6 +89,18 @@ class ClusterMetrics:
         self.n_grown += int(grown)
         self.tokens_reclaimed += int(reclaimed)
         self.tokens_granted += int(granted)
+
+    def record_preemptions(self, *, count: int = 0, tokens: int = 0) -> None:
+        """Accumulate one epoch's preemption activity (leases checkpointed
+        back into the queue and the tokens that reclaimed)."""
+        self.n_preempted += int(count)
+        self.tokens_preempted += int(tokens)
+
+    def record_certain_miss(self, count: int) -> None:
+        """Count deadline-floor requests whose slack was already gone —
+        violations the scheduler flags (and declines to fund with
+        performance-optimal tokens) rather than over-allocates."""
+        self.n_certain_miss += int(count)
 
     def record_completions(self, *, arrival_s, start_s, finish_s, tokens,
                            default_tokens, runtime_s, ideal_runtime_s, sla,
@@ -212,6 +227,11 @@ class ClusterMetrics:
             out["resize_grows"] = self.n_grown
             out["tokens_reclaimed"] = self.tokens_reclaimed
             out["tokens_granted"] = self.tokens_granted
+        if self.n_preempted:
+            out["preemptions"] = self.n_preempted
+            out["preempted_tokens_reclaimed"] = self.tokens_preempted
+        if self.n_certain_miss:
+            out["certain_deadline_miss"] = self.n_certain_miss
         slack = d["slack_s"]
         finite = np.isfinite(slack)
         if np.any(finite):
@@ -230,6 +250,8 @@ class ClusterMetrics:
                     float(np.mean(viol[m])), 4)
                 out[f"mean_wait_s_class{int(cls)}"] = round(
                     float(np.mean(wait[m])), 2)
+                out[f"p99_wait_s_class{int(cls)}"] = round(
+                    float(np.percentile(wait[m], 99)), 2)
                 out[f"cost_token_s_class{int(cls)}"] = round(
                     float(np.sum(d["cost_token_s"][m])), 1)
                 out[f"mean_price_class{int(cls)}"] = round(

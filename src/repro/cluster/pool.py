@@ -189,6 +189,38 @@ class PoolShards:
             flat[m] = s * self.max_leases + slots
         return flat
 
+    def preempt_batch(self, shard_of: np.ndarray, query_ids: np.ndarray
+                      ) -> np.ndarray:
+        """Forcibly release live leases before their end time.
+
+        The fairness primitive: unlike ``expire`` (which sweeps by end
+        time) this clears an explicit (shard, query) selection — the
+        scheduler's chosen victims — returning each lease's token count so
+        the caller can checkpoint its remaining work and re-queue the
+        remainder. Host mirror and resident device tables are updated with
+        the same slot writes (one small scatter; no table transfer), so
+        the two stay bitwise-equal exactly as for ``expire``/``resize``.
+        Preempting an id with no live lease is a caller bug.
+        """
+        k = len(query_ids)
+        if k == 0:
+            return np.zeros(0, np.int64)
+        shard_of = np.asarray(shard_of, np.int64)
+        query_ids = np.asarray(query_ids, np.int64)
+        flat = self._slots_of(shard_of, query_ids)
+        toks = self._tokens.reshape(-1)[flat].copy()
+        assert np.all(toks > 0), "preempting a lease that is not live"
+        self._end_s.reshape(-1)[flat] = np.inf
+        self._tokens.reshape(-1)[flat] = 0
+        self._query.reshape(-1)[flat] = -1
+        self._scatter_device(flat, np.zeros(k, np.int64),
+                             np.full(k, np.inf))
+        freed = np.bincount(shard_of, weights=toks,
+                            minlength=self.n_shards).astype(np.int64)
+        self.in_use -= freed
+        assert np.all(self.in_use >= 0), self.in_use
+        return toks
+
     def resize_batch(self, shard_of: np.ndarray, query_ids: np.ndarray,
                      new_tokens: np.ndarray, new_end_s: np.ndarray) -> None:
         """Shrink or grow live leases in place across shards.
@@ -351,6 +383,11 @@ class TokenPool:
         self._shards.resize_batch(
             np.zeros(len(query_ids), np.int64), query_ids, new_tokens,
             new_end_s)
+
+    def preempt_batch(self, query_ids: np.ndarray) -> np.ndarray:
+        """Forcibly release live leases -> (tokens reclaimed per lease)."""
+        return self._shards.preempt_batch(
+            np.zeros(len(query_ids), np.int64), query_ids)
 
     def acquire_batch(self, query_ids: np.ndarray, tokens: np.ndarray,
                       end_s: np.ndarray) -> None:

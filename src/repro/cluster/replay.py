@@ -27,6 +27,12 @@ Idle gaps fast-forward to the next arrival or the device-side
 byte traffic is analytic (table reads/writes + queue head), feeding the
 ``KernelRoofline`` row that the fused_cluster benchmark publishes and
 gates on.
+
+The replay is strictly non-preemptive: the fused epoch kernel has no
+preempt phase (``kernels.cluster_step.EPOCH_STEP_SUPPORTS_PREEMPTION``),
+and pre-decided allocations leave nothing to re-decide for a checkpointed
+remainder anyway.  Preemptive runs belong to ``ClusterSimulator``, which
+falls back to its unfused admission loop for them.
 """
 from __future__ import annotations
 

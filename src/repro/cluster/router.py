@@ -169,7 +169,8 @@ class Router:
         return out
 
     # ------------------------------------------------------------- spilling --
-    def route(self, keys: np.ndarray, load: np.ndarray
+    def route(self, keys: np.ndarray, load: np.ndarray,
+              drain: Optional[np.ndarray] = None
               ) -> Tuple[np.ndarray, np.ndarray]:
         """Online placement: home shard, spilling only under saturation.
 
@@ -179,6 +180,14 @@ class Router:
         takes it iff strictly less loaded — power-of-two-choices, bounded to
         saturated homes so cache affinity is the common case. Returns
         (shard ids, spilled mask).
+
+        ``drain`` is an optional (K,) bool mask by shard rank: shards
+        actively shedding load — e.g. a rack that just preempted leases and
+        is re-queueing the checkpointed remainders. A key homed on a drained
+        shard consults its second choice regardless of ``spill_threshold``
+        (the preemption itself proved the home saturated) and still takes it
+        only iff strictly less loaded, so remainders can cross shards while
+        cache affinity stays the tie-break.
         """
         keys = np.asarray(keys, np.int64)
         load = np.asarray(load, np.float64)
@@ -192,8 +201,12 @@ class Router:
             else:
                 alt = self.second(keys, home=hm)
                 hm_r, alt_r = self.rank(hm), self.rank(alt)
-                spill = (load[hm_r] >= self.spill_threshold) \
-                    & (load[alt_r] < load[hm_r])
+                saturated = load[hm_r] >= self.spill_threshold
+                if drain is not None:
+                    drain = np.asarray(drain, bool)
+                    assert drain.shape == (self.n_shards,), drain.shape
+                    saturated = saturated | drain[hm_r]
+                spill = saturated & (load[alt_r] < load[hm_r])
                 shards = np.where(spill, alt, hm)
             if sp is not None:
                 sp.attrs["spilled"] = int(spill.sum())

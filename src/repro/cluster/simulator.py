@@ -30,6 +30,16 @@ priced decision (remaining work re-simulated through AREPAS); when a shard
 is idle, tokens flow back to its deadline-risk leases. Cost is accrued
 exactly across resizes (token-seconds actually leased).
 
+Preemption (``ClusterConfig(preemption=True)``) goes one step further when
+shrinking is not enough: running leases of tenants whose dominant share
+(DRF over tokens and lease slots) exceeds their fair share are
+checkpointed — work-done fraction banked through the same AREPAS
+accounting — their tokens released, and the remainders re-queued as fresh
+``AllocationRequest``s with ``preempted`` provenance, re-routed with the
+preempting rack draining so they can migrate to a less loaded shard.
+Token-seconds stay exactly accrued across preempt/resume, and seeded
+no-preemption replays are decision-identical to runs without the feature.
+
 Completed queries feed the online refinement loop of their *home* shard's
 cache — the paper's "past observed" path — so repeat traffic progressively
 bypasses the model wherever it lands, and per-shard utilization, spill
@@ -39,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
@@ -50,10 +61,11 @@ from repro.cluster.metrics import ClusterMetrics
 from repro.cluster.pcc_cache import ShardedPCCCache
 from repro.cluster.pool import PoolShards
 from repro.cluster.router import Router
-from repro.cluster.scheduler import (PriceSignal, QueueView, deadline_floor,
-                                     make_policy)
+from repro.cluster.scheduler import (LeaseView, PriceSignal, QueueView,
+                                     deadline_floor, make_policy)
 from repro.core.arepas import simulate_runtime_batch_jit
 from repro.core.featurize import batch_graphs, batch_job_features
+from repro.kernels.cluster_step import EPOCH_STEP_SUPPORTS_PREEMPTION
 from repro.kernels.ops import cluster_resize_step
 from repro.obs import NULL_OBS, Obs
 from repro.serve.batching import batch_bucket, node_bucket, pad_to
@@ -69,7 +81,8 @@ class ClusterConfig:
     epoch_s: float = 15.0         # decision-batching window
     max_leases: int = 8192
     use_cache: bool = True        # online PCC refinement + cache-hit path
-    admission: str = "priority"   # scheduler policy: "fifo"|"priority"|"edf"
+    admission: str = "priority"   # scheduler policy: "fifo" | "priority" |
+                                  # "edf" | "edf_aging" | "drf"
     max_queue: int = 100_000      # admission control: reject beyond this
     # elastic: resize running leases under pressure / idleness. Shrink
     # targets come from the contention PriceSignal even when ``pricing``
@@ -93,6 +106,19 @@ class ClusterConfig:
     # unfused loop (float64 twins); only the kernel-call accounting in
     # service_stats/replica_stats differs.
     fused: bool = False
+    # preemption: when a shard's queued demand still exceeds its free pool
+    # after elastic shrink, checkpoint running leases of over-share tenants
+    # (work-done fraction banked via the same AREPAS accounting resizes
+    # use), release their tokens, and re-queue each remainder as a fresh
+    # AllocationRequest with ``preempted`` provenance — re-routed by the
+    # Router with the preempting rack marked draining, so remainders can
+    # land on a less loaded shard. Requires a victim-selecting admission
+    # policy (``admission="drf"``).
+    preemption: bool = False
+    preempt_over_share: float = 1.5   # victim tenants: dominant share over
+                                      # this multiple of the 1/T fair share
+    preempt_max_per_query: int = 1    # re-preemption cap (anti-thrash: a
+                                      # once-resumed lease runs to the end)
 
 
 @dataclasses.dataclass
@@ -142,6 +168,22 @@ class ClusterSimulator:
         self.obs = obs if obs is not None else getattr(service, "obs",
                                                        NULL_OBS)
         self.policy = make_policy(cfg.admission)
+        # fused admission lags preemption: the epoch kernel has no preempt
+        # phase yet (kernels/cluster_step.py advertises the gap), so a
+        # preemptive run falls back — loudly — to the unfused admission
+        # loop while elastic resize/re-price events stay fused
+        self._fused_admission = cfg.fused
+        if cfg.preemption:
+            assert hasattr(self.policy, "victims"), (
+                "preemption needs a victim-selecting policy (e.g. "
+                f"admission='drf'); {cfg.admission!r} has no victims()")
+            if cfg.fused and not EPOCH_STEP_SUPPORTS_PREEMPTION:
+                warnings.warn(
+                    "ClusterConfig(fused=True, preemption=True): the fused "
+                    "epoch kernel has no preempt phase; admission falls "
+                    "back to the unfused loop (elastic resize stays fused)",
+                    RuntimeWarning, stacklevel=2)
+                self._fused_admission = False
         self.router = Router(cfg.n_shards, n_vnodes=cfg.router_vnodes,
                              load_factor=cfg.load_factor,
                              spill_threshold=cfg.spill_threshold,
@@ -249,6 +291,13 @@ class ClusterSimulator:
         done_q = np.zeros(n, np.float64)   # work fraction done at last change
         shard_q = np.zeros(n, np.int64)    # executing shard rank
         spill_q = np.zeros(n, bool)        # routed off the home shard
+        # preemption provenance: a checkpointed remainder keeps its banked
+        # work fraction while queued and restores it at re-admission
+        resume_done_q = np.zeros(n, np.float64)
+        preempt_q = np.zeros(n, bool)      # queued as a remainder right now
+        preempt_time_q = np.zeros(n, np.float64)
+        preempt_count_q = np.zeros(n, np.int64)
+        n_tenants = int(tenant_all.max()) + 1 if n else 1
 
         pool = PoolShards(cap_shard, K, cfg.max_leases)
         metrics = ClusterMetrics(cfg.capacity, sla_limits, n_shards=K,
@@ -262,6 +311,12 @@ class ClusterSimulator:
         def queued_tokens() -> np.ndarray:
             return np.array([int(np.sum(tok_q[q])) for q in queues],
                             np.float64)
+
+        def count_certain_miss(miss: np.ndarray) -> None:
+            nm = int(np.count_nonzero(miss))
+            if nm:
+                metrics.record_certain_miss(nm)
+                o.metrics.counter("certain_deadline_miss").inc(nm)
 
         while next_ev < n or any(q.size for q in queues) or pool.n_active:
             # advance: one epoch, or jump an idle gap to the next event
@@ -378,9 +433,14 @@ class ClusterSimulator:
                         DecisionContext(price=p, shard_of=exec_r)
                         ).tokens, cap_shard)
                     # ... floored so no query is priced into a predicted
-                    # deadline miss (past the performance ask nothing helps)
-                    tokens = np.maximum(tokens, deadline_floor(
-                        a_dec, b_dec, deadline_all[ids] - now, perf))
+                    # deadline miss (past the performance ask nothing helps;
+                    # a certain miss — non-positive slack — is counted, not
+                    # silently floored at the cap)
+                    flo, c_miss = deadline_floor(a_dec, b_dec,
+                                                 deadline_all[ids] - now,
+                                                 perf)
+                    count_certain_miss(c_miss)
+                    tokens = np.maximum(tokens, flo)
                     price_q[ids] = p
                 else:
                     tokens = perf
@@ -417,8 +477,9 @@ class ClusterSimulator:
                     # runtime must keep the remaining work inside the slack
                     done = self._work_done(cand, now, done_q, mark_q, rt_q)
                     rt_budget = ((deadline_all[cand] - now) / (1.0 - done))
-                    floor = deadline_floor(a_q[cand], b_q[cand], rt_budget,
-                                           cand_tok)
+                    floor, c_miss = deadline_floor(a_q[cand], b_q[cand],
+                                                   rt_budget, cand_tok)
+                    count_certain_miss(c_miss)
                     cand_p = prices[cand_sh, sla_all[cand]]
                     rt_new = new_end = None
                     if cfg.fused:
@@ -476,8 +537,10 @@ class ClusterSimulator:
                     rq = all_q[moved]
                     p = pq[moved]
                     jb = jb_all[rq]
-                    floor = deadline_floor(a_q[rq], b_q[rq],
-                                           deadline_all[rq] - now, perf_q[rq])
+                    floor, c_miss = deadline_floor(a_q[rq], b_q[rq],
+                                                   deadline_all[rq] - now,
+                                                   perf_q[rq])
+                    count_certain_miss(c_miss)
                     if cfg.fused:
                         # queued: nothing done yet, lease fields unused
                         toks, _, rts, _ = self._fused_resize(
@@ -497,6 +560,116 @@ class ClusterSimulator:
                     rt_q[rq] = rts
                     price_q[rq] = p
 
+            # 5.5 preemption: a shard whose queued demand still exceeds its
+            #     free pool after elastic shrink checkpoints running leases
+            #     of over-share tenants. Victim order comes from the
+            #     policy's victims() (DRF: most-over-share tenant's
+            #     youngest lease first); the minimal prefix covering the
+            #     shortfall is preempted. Each victim's work-done fraction
+            #     is banked (same AREPAS accounting as resizes), its tokens
+            #     released, and the remainder re-decided under a fresh
+            #     DecisionContext and re-routed with the preempting rack
+            #     marked draining — cross-shard migration when a second
+            #     hash choice is less loaded.
+            if cfg.preemption:
+                vic_ids_l: List[np.ndarray] = []
+                vic_sh_l: List[np.ndarray] = []
+                for k in range(K):
+                    if not queues[k].size:
+                        continue
+                    need = int(np.sum(tok_q[queues[k]])) - int(pool.free[k])
+                    if need <= 0:
+                        continue
+                    act_ids, act_tok, act_end = pool.active(k)
+                    if not act_ids.size:
+                        continue
+                    shares = self._tenant_shares(
+                        tenant_all[act_ids], act_tok, cap_shard,
+                        cfg.max_leases, n_tenants)
+                    over = shares > cfg.preempt_over_share / n_tenants
+                    v_ten = tenant_all[act_ids]
+                    elig_v = (over[v_ten]
+                              & ((act_end - now) > cfg.epoch_s)
+                              & (preempt_count_q[act_ids]
+                                 < cfg.preempt_max_per_query))
+                    if not np.any(elig_v):
+                        continue
+                    view = LeaseView(
+                        ids=act_ids[elig_v], tokens=act_tok[elig_v],
+                        start_s=mark_q[act_ids[elig_v]],
+                        tenant=v_ten[elig_v],
+                        share=shares[v_ten[elig_v]])
+                    order = self.policy.victims(view)
+                    cum = np.cumsum(view.tokens[order])
+                    j = min(int(np.searchsorted(cum, need)) + 1, order.size)
+                    pick = order[:j]
+                    vic_ids_l.append(view.ids[pick])
+                    vic_sh_l.append(np.full(pick.size, k, np.int64))
+                if vic_ids_l:
+                    vids = np.concatenate(vic_ids_l)
+                    vsh = np.concatenate(vic_sh_l)
+                    with tr.span("scheduler.preempt", n=int(vids.size)):
+                        done = self._work_done(vids, now, done_q, mark_q,
+                                               rt_q)
+                        freed = pool.preempt_batch(vsh, vids)
+                    # checkpoint: accrue the leased segment's cost, bank the
+                    # work fraction, stamp provenance
+                    cost_q[vids] += tok_q[vids] * (now - mark_q[vids])
+                    done_q[vids] = done
+                    mark_q[vids] = now
+                    resume_done_q[vids] = done
+                    preempt_q[vids] = True
+                    preempt_time_q[vids] = now
+                    preempt_count_q[vids] += 1
+                    n_freed = int(freed.sum())
+                    metrics.record_preemptions(count=vids.size,
+                                               tokens=n_freed)
+                    tr.point("lease.preempt", n=int(vids.size), t_sim=now)
+                    o.metrics.counter("preemptions_total").inc(
+                        int(vids.size))
+                    o.metrics.counter("preempted_tokens_reclaimed").inc(
+                        n_freed)
+                    # re-route the remainders with post-release load and the
+                    # preempting shards draining, then re-decide tokens for
+                    # the remaining work under the target shard's price
+                    load = (pool.in_use + queued_tokens()) / cap_shard
+                    drain = np.zeros(K, bool)
+                    drain[np.unique(vsh)] = True
+                    jb = jb_all[vids]
+                    exec_sh, spilled = self.router.route(jb, load,
+                                                         drain=drain)
+                    exec_r = self.router.rank(exec_sh)
+                    shard_q[vids] = exec_r
+                    spill_q[vids] = spilled
+                    req = AllocationRequest(
+                        a=a_q[vids], b=b_q[vids],
+                        observed_tokens=defaults[jb],
+                        sla=sla_all[vids], deadline_s=deadline_all[vids],
+                        preempted=np.ones(vids.size, bool))
+                    if priced:
+                        p = prices[exec_r, sla_all[vids]]
+                        toks = np.minimum(self.fabric.decide(
+                            req, DecisionContext(price=p, shard_of=exec_r)
+                            ).tokens, cap_shard)
+                        # the floor budgets the *remaining* slack against
+                        # the remaining work fraction
+                        rt_budget = (deadline_all[vids] - now) / (1.0 - done)
+                        floor, c_miss = deadline_floor(
+                            a_q[vids], b_q[vids], rt_budget, perf_q[vids])
+                        count_certain_miss(c_miss)
+                        toks = np.maximum(toks, floor)
+                        price_q[vids] = p
+                    else:
+                        toks = np.minimum(self.fabric.decide(
+                            req, DecisionContext(shard_of=exec_r)).tokens,
+                            cap_shard)
+                    tok_q[vids] = toks
+                    rt_q[vids] = self._true_runtimes(sky[jb], lens[jb],
+                                                     toks)
+                    for k in np.unique(exec_r):
+                        queues[k] = np.concatenate(
+                            [queues[k], vids[exec_r == k]])
+
             # 6. admission: per shard, a vectorized prefix over its
             #    policy-ordered queue. Fused mode packs every eligible
             #    shard's ordered queue head into one (K, Q) matrix and runs
@@ -507,15 +680,35 @@ class ClusterSimulator:
             #    *not* reordered this epoch, which later lexsorts observe.
             elig = [k for k in range(K)
                     if queues[k].size and pool.free[k] > 0]
+            needs_shares = getattr(self.policy, "needs_shares", False)
             for k in elig:
                 q_ids = queues[k]
+                rt_eff = rt_q[q_ids].astype(np.float64)
+                if cfg.preemption:
+                    # a queued remainder's slack budgets only the work it
+                    # has left, not a from-scratch run
+                    res = preempt_q[q_ids]
+                    rt_eff = np.where(
+                        res,
+                        np.maximum(np.round(
+                            rt_eff * (1.0 - resume_done_q[q_ids])), 1.0),
+                        rt_eff)
+                extra: Dict = {}
+                if needs_shares:
+                    act_ids_k, act_tok_k, _ = pool.active(k)
+                    shares = self._tenant_shares(
+                        tenant_all[act_ids_k], act_tok_k, cap_shard,
+                        cfg.max_leases, n_tenants)
+                    extra = dict(tenant=tenant_all[q_ids],
+                                 tenant_share=shares)
                 view = QueueView(
                     ids=q_ids, arrival_s=arrival[q_ids],
                     priority=priorities[sla_all[q_ids]],
-                    slack_s=deadline_all[q_ids] - (now + rt_q[q_ids]))
+                    slack_s=deadline_all[q_ids] - (now + rt_eff),
+                    now=now, **extra)
                 queues[k] = q_ids[self.policy.order(view)]
             n_granted = 0
-            if cfg.fused and elig:
+            if self._fused_admission and elig:
                 # an admitted prefix holds >= 1 token per query, so no
                 # prefix extends past cap_shard entries — bound Q by it
                 qmax = min(max(queues[k].size for k in elig), cap_shard)
@@ -553,10 +746,31 @@ class ClusterSimulator:
                         j = int(np.searchsorted(~fits, True))  # True prefix
                         if j:
                             adm = q_ids[:j]
-                            start_q[adm] = now
+                            if cfg.preemption:
+                                # a resumed remainder keeps its original
+                                # start and banked work; its new lease runs
+                                # only the remaining fraction
+                                res = preempt_q[adm]
+                                start_q[adm[~res]] = now
+                                done_adm = np.where(
+                                    res, resume_done_q[adm], 0.0)
+                                done_q[adm] = done_adm
+                                end_q[adm] = now + np.where(
+                                    res,
+                                    np.maximum(np.round(
+                                        rt_q[adm] * (1.0 - done_adm)), 1.0),
+                                    rt_q[adm].astype(np.float64))
+                                if np.any(res):
+                                    o.metrics.histogram(
+                                        "requeue_wait_sim_s", lo=1e-3,
+                                        hi=1e6).record_many(
+                                        now - preempt_time_q[adm[res]])
+                                    preempt_q[adm] = False
+                            else:
+                                start_q[adm] = now
+                                done_q[adm] = 0.0
+                                end_q[adm] = now + rt_q[adm]
                             mark_q[adm] = now
-                            done_q[adm] = 0.0
-                            end_q[adm] = now + rt_q[adm]
                             pool.acquire_batch(k, adm, tok_q[adm], end_q[adm])
                             o.metrics.histogram(
                                 "admission_wait_sim_s", lo=1e-3,
@@ -651,6 +865,22 @@ class ClusterSimulator:
         return np.clip(done_q[qids]
                        + (now - mark_q[qids]) / np.maximum(rt_q[qids], 1),
                        0.0, 0.999)
+
+    @staticmethod
+    def _tenant_shares(tenants: np.ndarray, toks: np.ndarray,
+                       cap_shard: int, max_leases: int,
+                       n_tenants: int) -> np.ndarray:
+        """(T,) dominant share per tenant on one shard: the larger of its
+        token share (of the shard's capacity) and its lease-slot share (of
+        the lease table) — the DRF dominant resource over this fabric's two
+        constrained resources."""
+        tok_share = (np.bincount(tenants, weights=toks,
+                                 minlength=n_tenants)
+                     / max(cap_shard, 1))
+        slot_share = (np.bincount(tenants,
+                                  minlength=n_tenants).astype(np.float64)
+                      / max(max_leases, 1))
+        return np.maximum(tok_share, slot_share)
 
     def _fused_resize(self, a: np.ndarray, b: np.ndarray, price: np.ndarray,
                       obs: np.ndarray, floor: np.ndarray, done: np.ndarray,

@@ -47,9 +47,20 @@ from repro.core.allocator import choose_tokens_priced_jnp
 from repro.core.arepas import simulate_runtime_batch
 
 __all__ = ["epoch_step_ref", "epoch_step_pallas",
-           "resize_step_ref", "resize_step_pallas"]
+           "resize_step_ref", "resize_step_pallas",
+           "EPOCH_STEP_SUPPORTS_PREEMPTION"]
 
 DEFAULT_LEASE_BLOCK = 256
+
+# The fused epoch step has no preempt phase: it expires, releases, admits
+# and scatters, but cannot checkpoint a victim lease's remaining work back
+# into the queue (that requires the host-side work-done fraction and a
+# fresh routed decision). The simulator consults this flag and falls back
+# — loudly — to the unfused admission loop when preemption is enabled;
+# seeded no-preemption replays stay on the fused path and remain
+# decision-identical to the unfused loop. Flip only together with a kernel
+# preempt phase and a parity test.
+EPOCH_STEP_SUPPORTS_PREEMPTION = False
 
 
 # ------------------------------------------------------------- jnp twins ---

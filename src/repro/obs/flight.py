@@ -76,6 +76,7 @@ class FlightRecorder:
         tid = col(request.template_id)
         sla = col(request.sla)
         dl = col(request.deadline_s)
+        pre = col(getattr(request, "preempted", None))
         shard = col(decision.shard)
         prov = col(decision.provenance)
         price = col(decision.price)
@@ -109,6 +110,8 @@ class FlightRecorder:
                 row["deadline_s"] = float(dl[j])
             if sp is not None:
                 row["spilled"] = bool(sp[j])
+            if pre is not None:
+                row["preempted"] = bool(pre[j])
             self._write(row)
         self.n_recorded += kept
         return kept

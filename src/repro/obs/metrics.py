@@ -104,7 +104,16 @@ class Histogram:
         self.vmax = max(self.vmax, float(v.max()))
 
     def merge(self, other: "Histogram") -> None:
-        assert self.counts.size == other.counts.size and self.lo == other.lo
+        # full edge-geometry equality, not just size/lo: two histograms with
+        # the same bucket count and lower bound but different growth factors
+        # (or hi) would otherwise merge silently, adding counts bucket-by-
+        # bucket across *different* value ranges and corrupting percentiles
+        assert self.counts.size == other.counts.size \
+            and self.lo == other.lo and self.hi == other.hi \
+            and np.array_equal(self.edges, other.edges), \
+            (self.name, "bucket-geometry mismatch",
+             (self.lo, self.hi, self.counts.size),
+             (other.lo, other.hi, other.counts.size))
         self.counts += other.counts
         self.n += other.n
         self.total += other.total

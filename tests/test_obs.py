@@ -109,6 +109,30 @@ def test_histogram_shard_merge_equals_whole_population():
     json.dumps(snap)                               # JSON-ready
 
 
+def test_histogram_merge_rejects_mismatched_geometry():
+    """Regression: merge used to check only bucket *count* and ``lo``, so
+    two histograms with the same shape but different edges (different
+    ``hi``) merged silently — adding counts bucket-by-bucket across
+    *different* value ranges, corrupting every percentile. Any geometry
+    mismatch is now a hard error."""
+    a = Histogram("lat", lo=1e-3, hi=1e3)
+    a.record_many(np.array([0.5, 2.0]))
+    same = Histogram("lat", lo=1e-3, hi=1e3)
+    same.record(7.0)
+    a.merge(same)                                  # identical edges: fine
+    assert a.n == 3
+    # hi=1048 lands in the same bucket count as hi=1e3 with the same lo, so
+    # the pre-fix (size, lo) check merged it silently; lo=1e-2 changes the
+    # bucket count outright; hi=1e6 changes it with lo equal
+    for bad in (Histogram("lat", lo=1e-3, hi=1048.0),
+                Histogram("lat", lo=1e-2, hi=1e3),
+                Histogram("lat", lo=1e-3, hi=1e6)):
+        bad.record(1.0)
+        with pytest.raises(AssertionError):
+            a.merge(bad)
+    assert a.n == 3                                # rejected merges add nothing
+
+
 def test_gauge_merge_keeps_peak_and_null_twins_are_inert():
     a, b = MetricsRegistry(), MetricsRegistry()
     a.gauge("queue_depth_peak").set(3.0)

@@ -1,0 +1,202 @@
+"""Preemptive fair scheduling (repro.cluster tentpole): DRF victim
+selection through the pool's preempt primitive, token conservation across
+preempt -> checkpoint -> re-queue -> re-admit cycles (cross-shard), drain-
+aware re-routing, and the identity contracts — preemption-off runs are
+decision-inert, fused runs fall back loudly and land on the same decisions.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import ClusterConfig, ClusterSimulator, PoolShards, Router
+from repro.core.allocator import AllocationPolicy
+from repro.core.models import NNConfig
+from repro.core.pipeline import TasqConfig, TasqPipeline
+from repro.obs import Obs
+from repro.serve import AllocationService
+from repro.workloads import TraceGenerator
+
+
+# ------------------------------------------------- pool-level conservation --
+def _fabric_invariant(pool, K, cap):
+    live = pool._tokens[pool._tokens > 0]
+    assert int(live.sum()) == int(pool.in_use.sum())
+    np.testing.assert_array_equal(pool.in_use + pool.free, np.full(K, cap))
+
+
+def test_preempt_checkpoint_requeue_conserves_tokens_across_shards():
+    """Satellite property (seeded): across preempt -> checkpoint ->
+    re-queue -> re-admit cycles — remainders re-admitted on a *different*
+    shard, interleaved with elastic resizes and expiry — every shard keeps
+    ``in_use + free == capacity``, a remainder re-enters with exactly the
+    token count its preemption released, and no token is minted or lost."""
+    rng = np.random.default_rng(1234)
+    K, cap = 4, 300
+    for trial in range(10):
+        pool = PoolShards(cap, K, max_leases=64)
+        pending = []            # (query id, home shard, checkpointed tokens)
+        now, next_id, n_migrated = 0.0, 0, 0
+        for _ in range(80):
+            op = rng.random()
+            if op < 0.3:                                    # fresh admission
+                k = int(rng.integers(0, K))
+                if pool.free[k] > 0:
+                    t = int(rng.integers(1, pool.free[k] + 1))
+                    pool.acquire_batch(k, np.array([next_id]),
+                                       np.array([t]),
+                                       np.array([now + rng.integers(5, 60)],
+                                                float))
+                    next_id += 1
+            elif op < 0.5 and pending:                      # re-admit, moved
+                qid, home, toks = pending.pop()
+                k = (home + 1) % K                          # cross-shard
+                if pool.free[k] < toks:
+                    k = int(np.argmax(pool.free))
+                if pool.free[k] >= toks:
+                    pool.acquire_batch(k, np.array([qid]), np.array([toks]),
+                                       np.array([now + rng.integers(5, 60)],
+                                                float))
+                    n_migrated += int(k != home)
+                else:
+                    pending.append((qid, home, toks))
+            elif op < 0.7:                                  # preempt victims
+                k = int(rng.integers(0, K))
+                ids, toks, _ = pool.active(k)
+                if ids.size:
+                    m = int(rng.integers(1, ids.size + 1))
+                    sel = rng.choice(ids.size, size=m, replace=False)
+                    freed = pool.preempt_batch(np.full(m, k, np.int64),
+                                               ids[sel])
+                    np.testing.assert_array_equal(freed, toks[sel])
+                    for q, t in zip(ids[sel], freed):
+                        pending.append((int(q), k, int(t)))
+            elif op < 0.85:                                 # elastic resize
+                k = int(rng.integers(0, K))
+                ids, toks, _ = pool.active(k)
+                if ids.size:
+                    i = int(rng.integers(0, ids.size))
+                    new = int(rng.integers(1, toks[i] + pool.free[k] + 1))
+                    pool.resize_batch(np.array([k]), ids[i:i + 1],
+                                      np.array([new]),
+                                      np.array([now + rng.integers(5, 60)],
+                                               float))
+            else:                                           # time passes
+                now += float(rng.integers(1, 25))
+                pool.expire(now)
+            _fabric_invariant(pool, K, cap)
+        assert n_migrated > 0       # cross-shard re-admission actually seen
+
+
+def test_preempting_dead_lease_is_a_bug():
+    pool = PoolShards(100, 2, max_leases=8)
+    pool.acquire_batch(0, np.array([5]), np.array([40]), np.array([10.0]))
+    pool.expire(10.0)
+    with pytest.raises(AssertionError):
+        pool.preempt_batch(np.array([0]), np.array([5]))
+
+
+# --------------------------------------------------- drain-aware re-routing --
+def test_router_drain_reroutes_off_preempting_shard():
+    """A key homed on a draining shard consults its second choice below the
+    spill threshold — but still moves only to a strictly less loaded
+    alternative."""
+    r = Router(4, spill_threshold=1.0, seed=0)
+    keys = np.arange(256)
+    hm_r = r.rank(r.home(keys))
+    d = int(np.bincount(hm_r, minlength=4).argmax())   # busiest home rank
+    load = np.full(4, 0.5)
+    base_sh, base_spill = r.route(keys, load)
+    assert not base_spill.any()                        # below threshold
+    # drained but alternatives equally loaded: nobody moves
+    drain = np.zeros(4, bool)
+    drain[d] = True
+    sh_eq, sp_eq = r.route(keys, load, drain=drain)
+    np.testing.assert_array_equal(sh_eq, base_sh)
+    assert not sp_eq.any()
+    # drained and strictly busier than the alternatives: every key homed on
+    # the draining rank moves to its second choice, everyone else stays put
+    load_hot = np.full(4, 0.5)
+    load_hot[d] = 0.9
+    sh_mv, sp_mv = r.route(keys, load_hot, drain=drain)
+    on_d = hm_r == d
+    assert sp_mv[on_d].all() and not sp_mv[~on_d].any()
+    np.testing.assert_array_equal(sh_mv[~on_d], base_sh[~on_d])
+    assert np.all(r.rank(sh_mv[on_d]) != d)
+
+
+# ----------------------------------------------------------- simulator runs --
+@pytest.fixture(scope="module")
+def service():
+    cfg = TasqConfig(n_train=120, n_eval=30, nn=NNConfig(epochs=4))
+    p = TasqPipeline(cfg).build()
+    p.train("nn", loss="lf2")
+    return AllocationService(p.models["nn:lf2"],
+                             AllocationPolicy(max_slowdown=0.05))
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return TraceGenerator(seed=33, n_unique=40, rate_qps=1.0).generate(500)
+
+
+def test_preemption_off_is_decision_inert(service, trace):
+    """A drf fabric with preemption enabled but never pressured (huge
+    capacity) must land on exactly the metrics of the preemption=False
+    twin — the new plumbing changes nothing until a preemption fires."""
+    base = dict(capacity=65536, n_shards=4, admission="drf",
+                elastic=True, pricing="elastic")
+    off = ClusterSimulator(service, ClusterConfig(**base)).run(trace)
+    on = ClusterSimulator(
+        service, ClusterConfig(**base, preemption=True)).run(trace)
+    assert "preemptions" not in on.metrics          # none ever fired
+    assert dict(off.metrics) == dict(on.metrics)
+    np.testing.assert_array_equal(off.alloc_errors, on.alloc_errors)
+    np.testing.assert_array_equal(off.cache_hits, on.cache_hits)
+
+
+def test_preemptive_drf_end_to_end(service, trace):
+    """Under real pressure the preemptive drf fabric fires, reclaims
+    tokens, completes the whole trace with exact cost accounting, and the
+    observability plane sees every preemption."""
+    obs = Obs.enabled()
+    rep = ClusterSimulator(service, ClusterConfig(
+        capacity=4096, n_shards=4, admission="drf", elastic=True,
+        pricing="elastic", preemption=True), obs=obs).run(trace)
+    m = rep.metrics
+    assert m["n_completed"] + m["n_rejected"] == len(trace)
+    assert m["preemptions"] > 0
+    assert m["preempted_tokens_reclaimed"] > 0
+    assert m["cost_token_s"] > 0
+    assert "p99_wait_s_class2" in m
+    snap = obs.metrics.snapshot()
+    assert snap["preemptions_total"] == m["preemptions"]
+    assert snap["preempted_tokens_reclaimed"] == \
+        m["preempted_tokens_reclaimed"]
+    # re-queued remainders were re-admitted, and their wait was measured
+    assert snap["requeue_wait_sim_s"]["count"] > 0
+
+
+def test_preemptive_replay_deterministic(service):
+    trace = TraceGenerator(seed=55, n_unique=16, rate_qps=1.0).generate(300)
+    cfg = ClusterConfig(capacity=2048, n_shards=2, admission="drf",
+                        elastic=True, pricing="elastic", preemption=True)
+    r1 = ClusterSimulator(service, cfg).run(trace)
+    r2 = ClusterSimulator(service, cfg).run(trace)
+    assert dict(r1.metrics) == dict(r2.metrics)
+    np.testing.assert_array_equal(r1.alloc_errors, r2.alloc_errors)
+
+
+def test_fused_preemption_falls_back_decision_identical(service):
+    """fused=True + preemption warns (the epoch kernel has no preempt
+    phase), keeps elastic resizes fused, and still lands on the unfused
+    run's exact decisions."""
+    trace = TraceGenerator(seed=55, n_unique=16, rate_qps=1.0).generate(300)
+    base = dict(capacity=2048, n_shards=2, admission="drf", elastic=True,
+                pricing="elastic", preemption=True)
+    with pytest.warns(RuntimeWarning, match="preempt phase"):
+        sim_f = ClusterSimulator(service,
+                                 ClusterConfig(**base, fused=True))
+    assert sim_f._fused_admission is False
+    rf = sim_f.run(trace)
+    ru = ClusterSimulator(service, ClusterConfig(**base)).run(trace)
+    assert dict(rf.metrics) == dict(ru.metrics)
+    np.testing.assert_array_equal(rf.alloc_errors, ru.alloc_errors)

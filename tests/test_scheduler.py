@@ -10,8 +10,11 @@ import pytest
 
 from repro.cluster import TokenPool
 from repro.cluster.scheduler import (
+    DrfPolicy,
+    EdfAgingPolicy,
     EdfPolicy,
     FifoPolicy,
+    LeaseView,
     PriceSignal,
     PriorityPolicy,
     QueueView,
@@ -38,10 +41,58 @@ def test_policy_registry_and_exact_orders():
     assert list(v.ids[FifoPolicy().order(v)]) == [1, 2, 3, 0]
     assert list(v.ids[PriorityPolicy().order(v)]) == [3, 0, 2, 1]
     assert list(v.ids[EdfPolicy().order(v)]) == [1, 2, 3, 0]
-    for name in ("fifo", "priority", "edf"):
+    for name in ("fifo", "priority", "edf", "edf_aging", "drf"):
         assert make_policy(name).name == name
     with pytest.raises(AssertionError):
         make_policy("lifo")
+
+
+def test_edf_aging_lifts_long_waiters():
+    """Starvation aging: at now=10 a query that has waited 10 s with 6 s of
+    slack outranks fresher queries with nominally smaller slack — plain EDF
+    would order them the other way."""
+    v = QueueView(ids=np.array([0, 1, 2, 3]),
+                  arrival_s=np.array([0.0, 8.0, 8.0, 2.0]),
+                  priority=np.zeros(4, np.int64),
+                  slack_s=np.array([6.0, 5.0, 5.0, 20.0]),
+                  now=10.0)
+    # aged slack = slack - 0.5 * wait: [1, 4, 4, 16]
+    assert list(v.ids[EdfAgingPolicy().order(v)]) == [0, 1, 2, 3]
+    assert list(v.ids[EdfPolicy().order(v)]) == [1, 2, 0, 3]
+    # zero wait == plain EDF (the aging term vanishes)
+    v0 = QueueView(ids=v.ids, arrival_s=np.zeros(4),
+                   priority=v.priority, slack_s=v.slack_s, now=0.0)
+    np.testing.assert_array_equal(EdfAgingPolicy().order(v0),
+                                  EdfPolicy().order(v0))
+
+
+def test_drf_orders_least_served_tenant_first():
+    """DRF admission: the tenant with the smallest dominant share goes
+    first; within a tenant, aged-EDF order."""
+    v = QueueView(ids=np.array([0, 1, 2]),
+                  arrival_s=np.zeros(3),
+                  priority=np.zeros(3, np.int64),
+                  slack_s=np.array([5.0, 1.0, 9.0]),
+                  now=0.0,
+                  tenant=np.array([0, 0, 1]),
+                  tenant_share=np.array([0.6, 0.1]))
+    assert list(v.ids[DrfPolicy().order(v)]) == [2, 1, 0]
+    # the tenant columns are mandatory for drf
+    with pytest.raises(AssertionError):
+        DrfPolicy().order(QueueView(ids=v.ids, arrival_s=v.arrival_s,
+                                    priority=v.priority, slack_s=v.slack_s))
+
+
+def test_drf_victims_most_over_share_youngest_first():
+    """Preemption order: descending tenant dominant share, youngest lease
+    (latest start) first within a tenant — the least-sunk work of the most
+    over-share tenant is reclaimed first."""
+    leases = LeaseView(ids=np.array([0, 1, 2, 3]),
+                       tokens=np.array([10, 20, 30, 40]),
+                       start_s=np.array([1.0, 5.0, 9.0, 2.0]),
+                       tenant=np.array([0, 0, 1, 1]),
+                       share=np.array([0.6, 0.6, 0.2, 0.2]))
+    assert list(leases.ids[DrfPolicy().victims(leases)]) == [1, 0, 2, 3]
 
 
 def test_edf_never_admits_ahead_of_smaller_slack():
@@ -89,12 +140,28 @@ def test_deadline_floor_guards_predicted_miss():
     b = np.array([100.0, 100.0, 60.0])
     cap = np.array([50, 50, 40], np.int64)
     # rt(A) = b * A^a <= slack  requires  A >= (slack/b)^(1/a)
-    floor = deadline_floor(a, b, np.array([10.0, 1e9, 4.0]), cap)
+    floor, miss = deadline_floor(a, b, np.array([10.0, 1e9, 4.0]), cap)
+    assert not miss.any()          # positive slack: never a certain miss
     assert floor[0] == 10          # needs 10 tokens to finish in 10 s
     assert floor[1] == 1           # huge slack: no floor
     assert floor[2] == 40          # infeasible slack: capped at the perf ask
     rt = b * np.maximum(floor, 1.0) ** a
     assert rt[0] <= 10.0
+
+
+def test_deadline_floor_flags_certain_miss():
+    """Regression: non-positive slack used to be clamped to 1e-9, silently
+    flooring the allocation at the cap — max tokens spent on a deadline
+    already missed. It is now surfaced as a certain-miss mask and the floor
+    drops to the minimum (nothing bought helps)."""
+    a = np.full(4, -1.0)
+    b = np.full(4, 100.0)
+    cap = np.full(4, 50, np.int64)
+    slack = np.array([10.0, 0.0, -5.0, np.nan])
+    floor, miss = deadline_floor(a, b, slack, cap)
+    np.testing.assert_array_equal(miss, [False, True, True, True])
+    assert floor[0] == 10
+    np.testing.assert_array_equal(floor[1:], [1, 1, 1])
 
 
 # ------------------------------------------------------- pool conservation --
@@ -128,7 +195,7 @@ def test_pool_resize_shrink_grow_exact():
 
 def test_pool_conservation_under_random_resize_expiry():
     """The satellite invariant: sum of live leases + free tokens == capacity
-    across random acquire / resize / expire sequences."""
+    across random acquire / resize / preempt / expire sequences."""
     rng = np.random.default_rng(42)
     for trial in range(20):
         cap = int(rng.integers(50, 500))
@@ -137,7 +204,7 @@ def test_pool_conservation_under_random_resize_expiry():
         for _ in range(40):
             op = rng.random()
             live_ids = pool._query[pool._tokens > 0]
-            if op < 0.45 and pool.free > 0:
+            if op < 0.4 and pool.free > 0:
                 k = int(rng.integers(1, 4))
                 toks = rng.integers(1, max(pool.free // k, 1) + 1, k)
                 if int(toks.sum()) <= pool.free:
@@ -145,7 +212,7 @@ def test_pool_conservation_under_random_resize_expiry():
                     next_id += k
                     pool.acquire_batch(ids, toks,
                                        now + rng.integers(1, 50, k).astype(float))
-            elif op < 0.8 and live_ids.size:
+            elif op < 0.7 and live_ids.size:
                 k = int(rng.integers(1, live_ids.size + 1))
                 sel = rng.choice(live_ids, size=k, replace=False)
                 cur = pool._tokens[np.isin(pool._query, sel)
@@ -155,10 +222,48 @@ def test_pool_conservation_under_random_resize_expiry():
                 if int(new.sum()) - int(cur.sum()) <= pool.free:
                     pool.resize_batch(sel, new,
                                       now + rng.integers(1, 50, k).astype(float))
+            elif op < 0.85 and live_ids.size:
+                k = int(rng.integers(1, live_ids.size + 1))
+                sel = rng.choice(live_ids, size=k, replace=False)
+                free_before = pool.free
+                freed = pool.preempt_batch(sel)
+                assert pool.free == free_before + int(freed.sum())
+                assert np.all(freed > 0)
             else:
                 now += float(rng.integers(1, 30))
                 pool.expire(now)
             _pool_invariant(pool)
+
+
+def test_host_device_expiry_boundary_agreement_seeded():
+    """Satellite: the host mirror's expiry predicate and the jitted device
+    sweep must agree at the float64 boundary — ends exactly at ``now`` and
+    one ulp either side — so the two lease tables stay bitwise-equal.
+    Seeded twin of the hypothesis sweep in tests/test_scheduler_props.py."""
+    rng = np.random.default_rng(7)
+    for trial in range(25):
+        now = float(rng.uniform(1.0, 1e12))
+        n = int(rng.integers(1, 32))
+        kinds = rng.integers(0, 4, n)
+        ends = np.where(
+            kinds == 0, now,
+            np.where(kinds == 1, np.nextafter(now, np.inf),
+                     np.where(kinds == 2, np.nextafter(now, -np.inf),
+                              rng.uniform(0.5, 2e12, n))))
+        pool = TokenPool(n, max_leases=max(n, 2))
+        ids = np.arange(n)
+        pool.acquire_batch(ids, np.ones(n, np.int64), ends)
+        pool.expire(now)
+        sh = pool._shards
+        # bitwise host/device table agreement after the boundary sweep
+        np.testing.assert_array_equal(np.asarray(sh._d_tok), sh._tokens)
+        np.testing.assert_array_equal(np.asarray(sh._d_end), sh._end_s)
+        # exactly the strictly-later leases survive (end <= now expires,
+        # one ulp above now does not)
+        live_ids, _, live_end = pool.active()
+        np.testing.assert_array_equal(np.sort(live_ids),
+                                      np.sort(ids[ends > now]))
+        assert np.all(live_end > now)
 
 
 # -------------------------------------------------------------- trace SLAs --

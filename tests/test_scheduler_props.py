@@ -46,7 +46,8 @@ def test_edf_never_admits_ahead_of_smaller_slack(view):
 @st.composite
 def pool_ops(draw):
     cap = draw(st.integers(10, 400))
-    ops = draw(st.lists(st.tuples(st.sampled_from(["acq", "resize", "exp"]),
+    ops = draw(st.lists(st.tuples(st.sampled_from(["acq", "resize", "pre",
+                                                   "exp"]),
                                   st.integers(0, 2 ** 31 - 1)),
                         min_size=1, max_size=60))
     return cap, ops
@@ -80,9 +81,60 @@ def test_pool_conservation_invariant(case):
             if int(new.sum()) - cur_total <= pool.free:
                 pool.resize_batch(sel, new,
                                   now + rng.integers(1, 50, k).astype(float))
+        elif kind == "pre" and live_ids.size:
+            k = int(rng.integers(1, live_ids.size + 1))
+            sel = rng.choice(live_ids, size=k, replace=False)
+            free_before = pool.free
+            freed = pool.preempt_batch(sel)
+            assert np.all(freed > 0)
+            assert pool.free == free_before + int(freed.sum())
         else:
             now += float(rng.integers(1, 30))
             pool.expire(now)
         live = pool._tokens[pool._tokens > 0]
         assert pool.in_use == int(live.sum())
         assert pool.in_use + pool.free == pool.capacity
+
+
+@st.composite
+def expiry_cases(draw):
+    now = draw(st.floats(min_value=1.0, max_value=1e12,
+                         allow_nan=False, allow_infinity=False))
+    kinds = draw(st.lists(st.sampled_from(["exact", "up", "down", "rand"]),
+                          min_size=1, max_size=32))
+    ends = []
+    for kind in kinds:
+        if kind == "exact":
+            ends.append(now)
+        elif kind == "up":
+            ends.append(float(np.nextafter(now, np.inf)))
+        elif kind == "down":
+            ends.append(float(np.nextafter(now, -np.inf)))
+        else:
+            ends.append(draw(st.floats(min_value=0.5, max_value=2e12,
+                                       allow_nan=False,
+                                       allow_infinity=False)))
+    return now, np.array(ends, np.float64)
+
+
+@settings(deadline=None, max_examples=60)
+@given(expiry_cases())
+def test_host_device_expiry_boundary_agreement(case):
+    """Satellite property: the host mirror's numpy expiry predicate
+    ``(tokens > 0) & (end <= now)`` and the jitted float64 device sweep
+    agree for every end time — including ends exactly at ``now`` and one
+    ulp either side — so the two lease tables stay bitwise-equal and a
+    lease is never released on one side of the boundary only."""
+    now, ends = case
+    n = ends.size
+    pool = TokenPool(n, max_leases=max(n, 2))
+    ids = np.arange(n)
+    pool.acquire_batch(ids, np.ones(n, np.int64), ends)
+    pool.expire(now)
+    sh = pool._shards
+    np.testing.assert_array_equal(np.asarray(sh._d_tok), sh._tokens)
+    np.testing.assert_array_equal(np.asarray(sh._d_end), sh._end_s)
+    live_ids, _, live_end = pool.active()
+    np.testing.assert_array_equal(np.sort(live_ids),
+                                  np.sort(ids[ends > now]))
+    assert np.all(live_end > now)
