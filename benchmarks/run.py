@@ -23,6 +23,11 @@
                through one cluster_epoch_step launch per epoch — events/sec
                gate (>=1M or >=10x cluster_sim) + roofline row per fused
                kernel, written to results/fused_roofline.json
+  aot_serving  cold lazy-jit vs warm AOT-compiled serving plane: per-request
+               latency with inline first-touch compiles vs the pre-pinned
+               executable grid (warm p99 < 50ms gate, first request within
+               2x steady-state p99), a backpressure burst through the
+               bounded backlog, warmup cost -> results/aot_warmup.json
 
 Prints human-readable tables + "name,metric,value" CSV lines, and writes
 results/benchmarks.json for EXPERIMENTS.md. ``--json out.json`` additionally
@@ -64,6 +69,10 @@ RESULTS: Dict[str, Dict] = {}
 JSON_ROWS: List[Dict] = []          # one machine-readable row per benchmark
 _CURRENT_ITEMS = [0]                # work items of the bench being timed
 _LATENCY_COLS: Dict[str, float] = {}  # decision-latency columns of that bench
+# AOT-warmup columns of the bench being timed (cold_start_s /
+# n_precompiled); every JSON row carries them (None when the bench has no
+# warmup phase) so the perf trajectory tracks warmup cost as the grid grows
+_WARMUP_COLS: Dict[str, object] = {}
 # observability sink: --trace-out / --metrics-out paths plus the merged
 # registry every obs-enabled bench folds its shard-view into
 _OBS_SINK: Dict[str, object] = {"trace_out": None, "metrics_out": None,
@@ -97,6 +106,7 @@ def _run_bench(name: str, fn, *args) -> None:
     before = set(RESULTS)
     _CURRENT_ITEMS[0] = 0
     _LATENCY_COLS.clear()
+    _WARMUP_COLS.clear()
     t0 = time.time()
     fn(*args)
     wall = time.time() - t0
@@ -107,6 +117,8 @@ def _run_bench(name: str, fn, *args) -> None:
         "wall_time_s": round(wall, 3),
         "throughput": round(items / wall, 2) if items and wall > 0 else None,
         "items": items or None,
+        "cold_start_s": _WARMUP_COLS.get("cold_start_s"),
+        "n_precompiled": _WARMUP_COLS.get("n_precompiled"),
         **_LATENCY_COLS,
         "metrics": metrics,
     })
@@ -854,10 +866,123 @@ def bench_obs_overhead(scale: float) -> None:
     _emit("obs_overhead", out, items=2 * n_events)
 
 
+# -------------------------------------------------------------- aot_serving --
+def bench_aot_serving(scale: float, pipeline: TasqPipeline) -> None:
+    """Cold-start vs. warm-start on the streaming serving plane.
+
+    Two single-request latency series over the same model and traffic:
+
+      * cold — a fresh lazy-jit service, so the first request on every new
+        (bucket, observed) shape traces + compiles inline, landing its
+        multi-hundred-ms stall on that request's latency;
+      * warm — a ``ServingPlane`` whose ``start()`` AOT-compiled and pinned
+        the executable grid before the first request.
+
+    Gates: warm p99 < 50ms, and the warm plane's *first* request within
+    2x its steady-state p99 (i.e. warm-start really removed the cold
+    start). A burst phase (arrivals >> backlog capacity) exercises
+    backpressure and reports the saturation count; the warmup cost report
+    is written to results/aot_warmup.json and the row carries the
+    ``cold_start_s`` / ``n_precompiled`` columns.
+    """
+    del scale                        # latency gates: fixed request counts
+    from repro.serve import ServingPlane, WarmupConfig
+    from repro.serve.aot import model_pool_inputs
+    if "nn:lf2" not in pipeline.models:
+        pipeline.train("nn", loss="lf2")
+    model = pipeline.models["nn:lf2"]
+    trace = TraceGenerator(seed=19, n_unique=64, rate_qps=8.0).generate(2000)
+    pool = model_pool_inputs(model, trace.jobs)
+    n_pool = next(iter(pool.values())).shape[0]
+
+    def row(i: int) -> Dict[str, np.ndarray]:
+        return {k: v[i % n_pool] for k, v in pool.items()}
+
+    # cold: lazy service, sequential single-request decides — request 0
+    # pays the fused bucket-8 trace+compile inline
+    n_cold = 100
+    cold_svc = AllocationService(model, AllocationPolicy())
+    cold_lat = []
+    for i in range(n_cold):
+        req = AllocationRequest(model_in={k: v[None] for k, v in
+                                          row(i).items()},
+                                observed_tokens=np.array([50 + i]))
+        t0 = time.perf_counter()
+        cold_svc.decide(req)
+        cold_lat.append(time.perf_counter() - t0)
+    cold_lat = np.asarray(cold_lat)
+
+    # warm: AOT-compiled plane — every executable pinned before traffic
+    obs = Obs.enabled()
+    warm_svc = AllocationService(model, AllocationPolicy(), obs=obs)
+    plane = ServingPlane(warm_svc, n_workers=2, max_batch=32, backlog=64,
+                         obs=obs)
+    plane.start(warm_jobs=trace.jobs,
+                warmup=WarmupConfig(max_bucket=32, observed=(True, False)))
+    rep = plane.warmup_report
+    n_warm = 500
+    warm_lat = []
+    for i in range(n_warm):
+        t0 = time.perf_counter()
+        plane.decide(row(i), observed_tokens=50 + i, timeout=30)
+        warm_lat.append(time.perf_counter() - t0)
+    warm_lat = np.asarray(warm_lat)
+
+    # burst: arrivals far beyond backlog capacity -> producer backpressure
+    t0 = time.perf_counter()
+    futs = [plane.submit(row(i), observed_tokens=50 + i)
+            for i in range(2000)]
+    for f in futs:
+        f.result(timeout=60)
+    burst_wall = time.perf_counter() - t0
+    saturations = plane.backlog.saturations
+    plane.stop()
+
+    warm_p99 = float(np.percentile(warm_lat, 99))
+    steady_p99 = float(np.percentile(warm_lat[1:], 99))
+    first_s = float(warm_lat[0])
+    out = {
+        "n_precompiled": rep.n_precompiled,
+        "cold_start_s": round(rep.cold_start_s, 3),
+        "cold_first_ms": round(cold_lat[0] * 1e3, 2),
+        "cold_p99_ms": round(float(np.percentile(cold_lat, 99)) * 1e3, 2),
+        "warm_first_ms": round(first_s * 1e3, 2),
+        "warm_p50_ms": round(float(np.percentile(warm_lat, 50)) * 1e3, 2),
+        "warm_p99_ms": round(warm_p99 * 1e3, 2),
+        "burst_events_per_s": round(2000 / burst_wall, 1),
+        "backlog_saturations": saturations,
+        "hot_path_compiles": warm_svc.stats["compiles"],
+        "warm_p99_ok": bool(warm_p99 < 0.05),
+        "first_request_ok": bool(first_s <= max(2 * steady_p99, 0.025)),
+    }
+    os.makedirs("results", exist_ok=True)
+    with open("results/aot_warmup.json", "w") as f:
+        json.dump(rep.to_json(), f, indent=1)
+    _WARMUP_COLS.update(cold_start_s=out["cold_start_s"],
+                        n_precompiled=rep.n_precompiled)
+    lat = _decision_latency_cols(obs.metrics)
+    out.update(lat)
+    _LATENCY_COLS.update(lat)
+    _OBS_SINK["metrics"].merge(obs.metrics)
+    print(f"[aot_serving] cold first {out['cold_first_ms']:.0f}ms / p99 "
+          f"{out['cold_p99_ms']:.1f}ms vs warm first "
+          f"{out['warm_first_ms']:.1f}ms / p99 {out['warm_p99_ms']:.1f}ms "
+          f"({rep.n_precompiled} executables in {out['cold_start_s']:.1f}s "
+          f"warmup, {saturations} backlog saturations)")
+    assert out["hot_path_compiles"] == 0, \
+        "warm plane traced on the hot path"
+    assert out["warm_p99_ok"], (
+        f"warm decision p99 {warm_p99*1e3:.1f}ms >= 50ms")
+    assert out["first_request_ok"], (
+        f"warm first request {first_s*1e3:.1f}ms > "
+        f"2x steady-state p99 {steady_p99*1e3:.1f}ms")
+    _emit("aot_serving", out, items=n_cold + n_warm + 2000)
+
+
 ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8",
        "serve_alloc", "api_overhead", "cluster_sim", "edf_cluster",
        "preempt_cluster", "sharded_cluster", "fused_cluster",
-       "obs_overhead")
+       "obs_overhead", "aot_serving")
 
 
 def main() -> None:
@@ -884,7 +1009,7 @@ def main() -> None:
     pipeline = None
     if only & {"tables456", "table7", "table8", "serve_alloc", "api_overhead",
                "cluster_sim", "edf_cluster", "preempt_cluster",
-               "sharded_cluster"}:
+               "sharded_cluster", "aot_serving"}:
         cfg = TasqConfig(n_train=int(1200 * args.scale),
                          n_eval=int(600 * args.scale),
                          nn=NNConfig(epochs=60),
@@ -894,7 +1019,8 @@ def main() -> None:
         pipeline = TasqPipeline(cfg).build()
         pipeline.train("gbdt")
         if only & {"serve_alloc", "api_overhead", "cluster_sim",
-                   "edf_cluster", "preempt_cluster", "sharded_cluster"}:
+                   "edf_cluster", "preempt_cluster", "sharded_cluster",
+                   "aot_serving"}:
             # train outside the timed windows: their wall/throughput rows
             # must measure serving/replay, not model training
             pipeline.train("nn", loss="lf2")
@@ -932,6 +1058,8 @@ def main() -> None:
                    pipeline)
     if "obs_overhead" in only:
         _run_bench("obs_overhead", bench_obs_overhead, args.scale)
+    if "aot_serving" in only:
+        _run_bench("aot_serving", bench_aot_serving, args.scale, pipeline)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

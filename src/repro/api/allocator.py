@@ -55,6 +55,12 @@ class AllocatorConfig:
     router_vnodes: int = 64
     router_seed: int = 0
     pipeline: TasqConfig = TasqConfig()
+    # AOT serving plane: pre-compile the whole (bucket, priced, observed)
+    # executable grid at build time so the hot path never traces (see
+    # repro.serve.aot). A warmup trace (from_config(..., warmup_trace=...))
+    # additionally pins the fused model executables for that trace's
+    # featurized shapes.
+    aot_warmup: bool = False
 
 
 class Allocator:
@@ -88,26 +94,38 @@ class Allocator:
                              obs=self.obs)
         self.pipeline = pipeline
         self.config = config
+        self.warmup_report = None        # set by warmup()
 
     @classmethod
     def from_config(cls, config: AllocatorConfig = AllocatorConfig(),
-                    obs=None) -> "Allocator":
+                    obs=None, warmup_trace=None,
+                    warmup_config=None) -> "Allocator":
         """Build the whole stack from one declarative config: pipeline ->
         model (registry) -> policy (registry) -> service -> mesh + fabric +
         router. ``obs`` (a ``repro.obs.Obs`` bundle) attaches the
         observability plane — span tracer, metrics registry, decision
-        flight recorder — to every layer of the stack."""
+        flight recorder — to every layer of the stack.
+
+        With ``config.aot_warmup`` (or an explicit ``warmup_trace`` /
+        ``warmup_config``), the executable grid is AOT-compiled before the
+        allocator is returned — first-request latency is steady-state
+        latency, and a replay of ``warmup_trace`` runs with zero JIT
+        traces (``stats["compiles"] == 0``)."""
         from repro.serve.service import AllocationService
         pipeline = TasqPipeline(config.pipeline).build()
         model = pipeline.train(config.family, loss=config.loss)
         policy = build_policy(config.policy, **config.policy_overrides)
         service = AllocationService(model, policy)
-        return cls(service, n_shards=config.n_shards,
-                   max_batch=config.max_batch,
-                   load_factor=config.load_factor,
-                   router_vnodes=config.router_vnodes,
-                   router_seed=config.router_seed,
-                   pipeline=pipeline, config=config, obs=obs)
+        alloc = cls(service, n_shards=config.n_shards,
+                    max_batch=config.max_batch,
+                    load_factor=config.load_factor,
+                    router_vnodes=config.router_vnodes,
+                    router_seed=config.router_seed,
+                    pipeline=pipeline, config=config, obs=obs)
+        if config.aot_warmup or warmup_trace is not None \
+                or warmup_config is not None:
+            alloc.warmup(trace=warmup_trace, config=warmup_config)
+        return alloc
 
     # ------------------------------------------------------------- surface --
     @property
@@ -147,3 +165,25 @@ class Allocator:
         """Replay a trace through the cluster simulator over this
         allocator's fabric (see ``AllocationFrontend.run_cluster``)."""
         return self.frontend.run_cluster(trace, cluster_cfg, **overrides)
+
+    def run_streaming(self, trace, cluster_cfg=None, **overrides):
+        """Event-driven replay through a bounded arrival backlog —
+        decision-identical to ``run_cluster`` (see
+        ``AllocationFrontend.run_streaming``)."""
+        return self.frontend.run_streaming(trace, cluster_cfg, **overrides)
+
+    # ----------------------------------------------------------- AOT warmup --
+    def warmup(self, trace=None, jobs=None, config=None):
+        """AOT-compile and pin the serving stack's executable grid (see
+        ``repro.serve.aot``): the policy + priced grids of the service and
+        the K-shard fabric at every batch bucket, plus — given a ``trace``
+        (or raw ``jobs``) — the fused model executables at that workload's
+        featurized shapes. Returns (and stores as ``warmup_report``) a
+        ``WarmupReport`` with the per-stage compile cost."""
+        from repro.serve.aot import WarmupConfig, warm_allocation_stack
+        if jobs is None and trace is not None:
+            jobs = trace.jobs
+        cfg = WarmupConfig() if config is None else config
+        self.warmup_report = warm_allocation_stack(
+            self.service, self.fabric, jobs=jobs, cfg=cfg, obs=self.obs)
+        return self.warmup_report

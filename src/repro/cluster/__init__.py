@@ -45,7 +45,8 @@ from repro.cluster.scheduler import (
     SchedulerPolicy,
     make_policy,
 )
-from repro.cluster.simulator import ClusterConfig, ClusterReport, ClusterSimulator
+from repro.cluster.simulator import (ClusterConfig, ClusterReport,
+                                     ClusterSimulator, StreamingArrivals)
 
 __all__ = [
     "ClusterConfig",
@@ -68,6 +69,7 @@ __all__ = [
     "Router",
     "SchedulerPolicy",
     "ShardedPCCCache",
+    "StreamingArrivals",
     "TokenPool",
     "make_policy",
 ]

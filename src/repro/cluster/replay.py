@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -190,26 +190,45 @@ class FusedReplay:
         self._dec_cache = (stream, dec)
         return dec
 
-    # -------------------------------------------------------------- run --
-    def run(self, stream) -> ReplayReport:
+    # ------------------------------------------------------------- warmup --
+    def warm(self) -> Tuple[jnp.ndarray, jnp.ndarray, float]:
+        """AOT-style warm-start: trace and compile the fused epoch kernel
+        on empty (K, L) lease tables — the same shapes as every real
+        launch, so one trace serves the whole replay — *before* the timed
+        window opens. Returns the warmed device tables and the cold-start
+        seconds paid, which land in the ``decision_cold_start_s``
+        histogram and an ``aot.warmup`` span (the serving plane's warmup
+        instruments), so replay cold-start shows up next to the decision
+        executables' in one place."""
         cfg = self.cfg
         K = cfg.n_shards
         L = node_bucket(cfg.max_leases)
         Q = node_bucket(min(cfg.queue_block, cfg.capacity // K))
-        dec = self._decide_pool(stream)
-        tok_u, rt_u = dec["tokens"], dec["runtime_s"]
-
-        with enable_x64():
+        t0 = time.perf_counter()
+        with self.obs.tracer.span("aot.warmup", scope="replay", K=K), \
+                enable_x64():
             d_end = jnp.full((K, L), jnp.inf, jnp.float64)
             d_tok = jnp.zeros((K, L), jnp.int64)
-            # warm-up launch on the empty tables: jit tracing/compilation
-            # happens here, outside the timed window (same shapes as every
-            # real launch — one trace serves the whole replay)
             warm = cluster_epoch_step(
                 d_end, d_tok, jnp.zeros(K, jnp.int64),
                 jnp.zeros((K, Q), jnp.int64), jnp.zeros((K, Q), jnp.float64),
                 0.0, impl=cfg.impl)
             jnp.asarray(warm[3]).block_until_ready()
+        cold_start_s = time.perf_counter() - t0
+        self.obs.metrics.histogram("decision_cold_start_s").record(
+            cold_start_s)
+        return d_end, d_tok, cold_start_s
+
+    # -------------------------------------------------------------- run --
+    def run(self, stream) -> ReplayReport:
+        cfg = self.cfg
+        K = cfg.n_shards
+        Q = node_bucket(min(cfg.queue_block, cfg.capacity // K))
+        dec = self._decide_pool(stream)
+        tok_u, rt_u = dec["tokens"], dec["runtime_s"]
+
+        d_end, d_tok, _ = self.warm()
+        L = node_bucket(cfg.max_leases)
         t_wall = time.time()
         free = np.full(K, cfg.capacity // K, np.int64)
         queues = [_ShardQueue() for _ in range(K)]

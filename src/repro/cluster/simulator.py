@@ -48,6 +48,7 @@ rate, and imbalance land in ``ClusterMetrics``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import warnings
 from typing import Dict, List, Optional, Tuple
@@ -72,7 +73,111 @@ from repro.serve.batching import batch_bucket, node_bucket, pad_to
 from repro.serve.service import ShardedAllocationService
 from repro.workloads.generator import Trace
 
-__all__ = ["ClusterConfig", "ClusterReport", "ClusterSimulator"]
+__all__ = ["ClusterConfig", "ClusterReport", "ClusterSimulator",
+           "StreamingArrivals"]
+
+
+# ------------------------------------------------------------ arrival sources --
+# The epoch loop consumes arrivals through a three-method source protocol:
+#   next_arrival() -> earliest undelivered arrival time (None if none left),
+#   take_until(now) -> event ids with arrival <= now, arrival order,
+#   exhausted()    -> no further events will ever be delivered.
+# ``_TraceArrivals`` reads the whole arrival column directly (the classic
+# epoch-batched replay); ``StreamingArrivals`` delivers the same events
+# through a producer thread and a bounded backlog (the serving-plane shape).
+# Both sources hand the driver identical (ids, arrival) prefixes at every
+# epoch boundary, so the decision stream is bitwise-identical by
+# construction — threading changes *when* events become visible, never
+# *which* events an epoch sees.
+
+class _TraceArrivals:
+    """Arrival source over a fully materialized (sorted) arrival column."""
+
+    def __init__(self, arrival: np.ndarray):
+        self.arrival = arrival
+        self.n = int(arrival.size)
+        self.next_ev = 0
+
+    def next_arrival(self) -> Optional[float]:
+        return (float(self.arrival[self.next_ev])
+                if self.next_ev < self.n else None)
+
+    def take_until(self, now: float) -> np.ndarray:
+        hi = int(np.searchsorted(self.arrival, now, side="right"))
+        ids = np.arange(self.next_ev, hi)
+        self.next_ev = hi
+        return ids
+
+    def exhausted(self) -> bool:
+        return self.next_ev >= self.n
+
+
+class StreamingArrivals:
+    """Event-driven arrival source: a producer thread feeds arrival chunks
+    through a bounded ``repro.serve.plane.Backlog``.
+
+    The driver drains by *watermark*: arrivals are monotone, so events with
+    arrival <= now are provably all delivered once an event beyond ``now``
+    (or exhaustion) has been seen — ``take_until`` pulls chunks exactly
+    until then and holds the overshoot for the next epoch. A full backlog
+    blocks the producer (backpressure), never drops events; the depth gauge
+    and saturation counter come with the Backlog.
+    """
+
+    def __init__(self, arrival: np.ndarray, backlog: int = 1024,
+                 chunk: int = 64, obs: Optional[Obs] = None):
+        from repro.serve.plane import Backlog
+        self.n = int(arrival.size)
+        self.chunk = max(int(chunk), 1)
+        self.backlog = Backlog(max(1, int(backlog) // self.chunk), obs=obs)
+        self._held_ids = np.zeros(0, np.int64)
+        self._held_arr = np.zeros(0, np.float64)
+        self._done = False
+        self._thread = threading.Thread(
+            target=self._produce, args=(np.asarray(arrival, np.float64),),
+            name="streaming-arrivals", daemon=True)
+        self._thread.start()
+
+    def _produce(self, arrival: np.ndarray) -> None:
+        for lo in range(0, self.n, self.chunk):
+            hi = min(lo + self.chunk, self.n)
+            self.backlog.put((np.arange(lo, hi), arrival[lo:hi]))
+        self.backlog.put(None)           # exhaustion sentinel
+
+    def _pull(self) -> None:
+        """Blocking-consume one chunk (or the sentinel) into the held
+        buffer."""
+        item = self.backlog.get()
+        if item is None:
+            self._done = True
+            return
+        ids, arr = item
+        self._held_ids = np.concatenate([self._held_ids, ids])
+        self._held_arr = np.concatenate([self._held_arr, arr])
+
+    def _fill(self) -> None:
+        while not self._held_ids.size and not self._done:
+            self._pull()
+
+    def next_arrival(self) -> Optional[float]:
+        self._fill()
+        return float(self._held_arr[0]) if self._held_ids.size else None
+
+    def exhausted(self) -> bool:
+        self._fill()
+        return self._done and not self._held_ids.size
+
+    def take_until(self, now: float) -> np.ndarray:
+        while not self._done and (not self._held_arr.size
+                                  or self._held_arr[-1] <= now):
+            self._pull()
+        k = int(np.searchsorted(self._held_arr, now, side="right"))
+        ids, self._held_ids = self._held_ids[:k], self._held_ids[k:]
+        self._held_arr = self._held_arr[k:]
+        return ids
+
+    def join(self) -> None:
+        self._thread.join()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +325,22 @@ class ClusterSimulator:
 
     # ----------------------------------------------------------------- run --
     def run(self, trace: Trace) -> ClusterReport:
+        """Epoch-batched replay: the whole arrival column drives the loop."""
+        return self._run(trace, _TraceArrivals)
+
+    def run_streaming(self, trace: Trace, *, backlog: int = 1024,
+                      chunk: int = 64) -> ClusterReport:
+        """Event-driven replay: arrivals are fed one chunk at a time by a
+        producer thread through a bounded backlog (the serving-plane
+        admission shape), and each epoch drains every event at or before
+        its boundary by watermark. Decision-identical to ``run`` on the
+        same trace — the two differ only in how events become visible, so
+        a passing identity test pins the streaming plane to the validated
+        epoch semantics."""
+        return self._run(trace, lambda arrival: StreamingArrivals(
+            arrival, backlog=backlog, chunk=chunk, obs=self.obs))
+
+    def _run(self, trace: Trace, make_source) -> ClusterReport:
         cfg = self.cfg
         K = cfg.n_shards
         cap_shard = cfg.capacity // K
@@ -304,7 +425,7 @@ class ClusterSimulator:
                                  capacity_per_shard=cap_shard)
         # per-shard pending queues (columnar): query ids in arrival order
         queues: List[np.ndarray] = [np.zeros(0, np.int64) for _ in range(K)]
-        next_ev = 0
+        source = make_source(arrival)
         now = 0.0
         n_epochs = 0
 
@@ -318,11 +439,16 @@ class ClusterSimulator:
                 metrics.record_certain_miss(nm)
                 o.metrics.counter("certain_deadline_miss").inc(nm)
 
-        while next_ev < n or any(q.size for q in queues) or pool.n_active:
+        # local work is checked before the source so a streaming source's
+        # (blocking) exhausted() is only consulted when the fabric would
+        # otherwise go idle — exactly when waiting on the producer is right
+        while any(q.size for q in queues) or pool.n_active \
+                or not source.exhausted():
             # advance: one epoch, or jump an idle gap to the next event
             targets = []
-            if next_ev < n:
-                targets.append(arrival[next_ev])
+            na = source.next_arrival()
+            if na is not None:
+                targets.append(na)
             if pool.n_active:
                 targets.append(pool.next_expiry())
             now = max(now + cfg.epoch_s, min(targets) if targets else now)
@@ -376,9 +502,7 @@ class ClusterSimulator:
 
             # 3. arrivals in this epoch -> routing -> one fabric-wide batch
             #    of allocation decisions
-            hi = int(np.searchsorted(arrival, now, side="right"))
-            ids = np.arange(next_ev, hi)
-            next_ev = hi
+            ids = source.take_until(now)
             total_queued = int(sum(q.size for q in queues))
             if ids.size and total_queued + ids.size > cfg.max_queue:
                 keep = max(cfg.max_queue - total_queued, 0)
@@ -833,6 +957,8 @@ class ClusterSimulator:
             g.set(max(g.value, qd))
 
         wall = time.time() - t_wall
+        if hasattr(source, "join"):      # streaming: producer has sent all
+            source.join()
         self.service.obs = prev_obs
         o.metrics.counter("epochs").inc(n_epochs)
         o.metrics.counter("rejected").inc(int(metrics.n_rejected))

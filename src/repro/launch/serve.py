@@ -190,6 +190,32 @@ class AllocationFrontend:
         is authoritative (its ``n_shards`` is honored as written); only
         when no config is passed does ``n_shards`` default to the
         frontend's own shard count."""
+        sim = self._make_simulator(cluster_cfg, admission, elastic, pricing,
+                                   n_shards, load_factor)
+        return sim.run(trace)
+
+    def run_streaming(self, trace, cluster_cfg=None, *,
+                      admission: Optional[str] = None,
+                      elastic: Optional[bool] = None,
+                      pricing: Optional[str] = None,
+                      n_shards: Optional[int] = None,
+                      load_factor: Optional[float] = None,
+                      backlog: int = 1024, chunk: int = 64
+                      ) -> "ClusterReport":
+        """``run_cluster`` with the event-driven arrival path: a producer
+        thread streams the trace through a bounded backlog (backpressure
+        when decisions fall behind) and each epoch boundary drains every
+        arrival at or before it by watermark. Decision-identical to
+        ``run_cluster`` on the same trace; pair with
+        ``repro.serve.aot.warm_allocation_stack`` (or
+        ``Allocator.from_config(aot_warmup=True)``) for a hot path that
+        never traces."""
+        sim = self._make_simulator(cluster_cfg, admission, elastic, pricing,
+                                   n_shards, load_factor)
+        return sim.run_streaming(trace, backlog=backlog, chunk=chunk)
+
+    def _make_simulator(self, cluster_cfg, admission, elastic, pricing,
+                        n_shards, load_factor) -> "ClusterSimulator":
         from repro.cluster import ClusterConfig, ClusterSimulator
         cfg = cluster_cfg or ClusterConfig()
         if n_shards is None and cluster_cfg is None:
@@ -203,6 +229,5 @@ class AllocationFrontend:
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
         mesh = self.mesh if cfg.n_shards == self.n_shards else None
-        sim = ClusterSimulator(self.service, cfg, mesh=mesh,
-                               fabric=self.fabric, obs=self.obs)
-        return sim.run(trace)
+        return ClusterSimulator(self.service, cfg, mesh=mesh,
+                                fabric=self.fabric, obs=self.obs)

@@ -18,6 +18,21 @@ call to a shared no-op — the disabled path is gated at ~0% overhead and a
 traced replay is decision-identical to an untraced one (the
 ``obs_overhead`` benchmark and tests/test_obs.py).
 
+The streaming AOT serving plane adds its own instrument family (all
+created dynamically — instruments exist the first time a layer touches
+them):
+
+  * ``aot.warmup`` spans (scope=service/fabric/replay) wrap each warmup
+    pass, with one ``aot.compile`` point per pinned executable;
+  * ``decision_cold_start_s`` histogram — per-executable lower+compile+warm
+    cost, plus ``aot_precompiled`` / ``aot_cold_start_s`` stack totals;
+  * ``backlog_depth`` gauge and ``backlog_saturations`` counter on the
+    bounded admission queue (``repro.serve.plane.Backlog``) — a saturated
+    plane is visible in metrics, not just in producer latency;
+  * ``decision_compile_s`` vs ``decision_latency_s`` split is per-thread
+    under the plane's workers (``ReplicaState`` compile-stall tracking), so
+    the SLO-gated latency series never mixes in another thread's compile.
+
     from repro.obs import Obs, Tracer, MetricsRegistry, FlightRecorder
     obs = Obs(tracer=Tracer(), metrics=MetricsRegistry(),
               recorder=FlightRecorder("decisions.jsonl", sample_rate=0.1))

@@ -21,6 +21,7 @@ the same dataclass the columnar ``decide`` batches use.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,9 +45,29 @@ def batch_bucket(n: int, floor: int = 8, cap: int = 4096) -> int:
     return min(_next_pow2(max(n, 1), floor), max(cap, floor))
 
 
-def node_bucket(n: int, floor: int = 8) -> int:
-    """Compiled node-dimension size for an ``n``-operator plan graph."""
-    return _next_pow2(max(n, 1), floor)
+def node_bucket(n: int, floor: int = 8, cap: Optional[int] = None) -> int:
+    """Compiled node-dimension size for an ``n``-operator plan graph.
+
+    ``batch_bucket`` has always had a cap (bigger batches are chunked), but
+    the node dimension cannot be chunked — a graph is one query — so a
+    ``cap`` here bounds the *bucketed* executable grid instead: a plan with
+    more than ``cap`` operators is served at its exact node count (no
+    padding, a one-off executable) with a loud ``RuntimeWarning``, rather
+    than silently doubling the bucket grid past the cap for a single
+    pathological 100k-operator plan. ``cap=None`` (the default for
+    non-serving callers: lease tables, queue blocks) keeps the historical
+    uncapped power-of-two behavior.
+    """
+    n = max(n, 1)
+    p = _next_pow2(n, floor)
+    if cap is not None and p > max(cap, floor):
+        warnings.warn(
+            f"node_bucket: a {n}-operator plan exceeds the {cap}-node "
+            f"bucket cap; serving it with a one-off exact-size executable "
+            f"(this compiles fresh and is never AOT-warmed — check the "
+            f"plan, or raise the cap)", RuntimeWarning, stacklevel=2)
+        return n
+    return p
 
 
 def pad_to(x: np.ndarray, size: int, axis: int = 0) -> np.ndarray:
@@ -113,13 +134,20 @@ class MicroBatcher:
     signature across both full-batch and timeout flushes.
     """
 
+    # largest bucketed node dimension: plans beyond this are served at
+    # exact size with a RuntimeWarning (see node_bucket) instead of
+    # growing the compiled-executable grid unboundedly
+    NODE_CAP = 4096
+
     def __init__(self, service, max_batch: int = 256,
                  max_wait_s: Optional[float] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 obs: Optional[Obs] = None):
+                 obs: Optional[Obs] = None,
+                 node_cap: Optional[int] = None):
         self.service = service
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.node_cap = self.NODE_CAP if node_cap is None else node_cap
         self.obs = NULL_OBS if obs is None else obs
         # explicit clock wins; otherwise share the tracer's timebase
         self._clock = self.obs.tracer.clock if clock is None else clock
@@ -153,7 +181,7 @@ class MicroBatcher:
         # graphs in the same node bucket share a compiled function
         feats = req.model_in.get("features")
         if feats is not None and feats.ndim >= 2:   # (N, P) graph input
-            return ("graph", node_bucket(feats.shape[0]))
+            return ("graph", node_bucket(feats.shape[0], cap=self.node_cap))
         return ("flat",)
 
     def flush(self) -> Dict[int, int]:

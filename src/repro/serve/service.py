@@ -45,6 +45,7 @@ partitions (tests/test_alloc_parity.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -63,7 +64,9 @@ from repro.obs import NULL_OBS, Obs
 from repro.serve.batching import batch_bucket, pad_to, shard_positions
 
 __all__ = ["AllocationResult", "AllocationService", "ReplicaState",
-           "ShardedAllocationService"]
+           "ShardedAllocationService", "make_fused_decide",
+           "make_policy_decide", "make_priced_decide",
+           "make_sharded_fused_per_shard", "make_sharded_policy_per_shard"]
 
 
 @dataclasses.dataclass
@@ -132,21 +135,30 @@ def _observed_dispatch(engine, span_name: str, request: AllocationRequest,
                        ctx: DecisionContext, decide_params, decide_fused,
                        **span_attrs) -> AllocationDecision:
     """``_protocol_dispatch`` under the observability plane: one span per
-    decide (with the compile-vs-cached-hit attribute read off the
-    ``stats["compiles"]`` delta), decision latency into the cached-call or
-    compile histogram, and a sampled provenance row to the flight recorder.
-    With ``NULL_OBS`` installed every hook is a shared no-op."""
+    decide (with a compile-vs-cached-hit attribute), decision latency into
+    the cached-call or compile histogram, and a sampled provenance row to
+    the flight recorder. With ``NULL_OBS`` installed every hook is a shared
+    no-op.
+
+    Compile detection is per-thread (``ReplicaState.begin_dispatch`` /
+    ``compile_stalled``): only a call whose own builder inserted — or waited
+    out a concurrent insert of — a compiled executable lands in
+    ``decision_compile_s``. The old ``stats["compiles"] > c0`` delta was
+    racy under the serving plane's worker threads: two concurrent
+    first-calls both read ``c0`` stale, and an unrelated compile on another
+    thread tagged a fast cached call as a compile."""
     o = engine.obs
     tr = o.tracer
+    rep = engine.compile_state
     with tr.span(span_name, B=request.batch_size(),
                  path="history" if request.a is not None else "model",
                  priced=ctx.price is not None, **span_attrs) as sp:
-        c0 = engine.stats["compiles"]
+        rep.begin_dispatch()
         t0 = tr.clock()
         d = _protocol_dispatch(engine, request, ctx,
                                decide_params, decide_fused)
         dt = tr.clock() - t0
-        compiled = engine.stats["compiles"] > c0
+        compiled = rep.compile_stalled()
         if sp is not None:
             sp.attrs["compiled"] = compiled
     # compiles land in their own histogram so decision_latency_s percentiles
@@ -160,6 +172,80 @@ def _observed_dispatch(engine, span_name: str, request: AllocationRequest,
     return d
 
 
+# --------------------------------------------------------------- kernels --
+# Module-level factories for the pure decide functions. The lazy builders
+# below wrap them in ``jax.jit`` on first request; the AOT warmup
+# (``repro.serve.aot``) lowers and compiles the *same* functions at startup
+# — one definition, so the two paths are bitwise-identical by construction.
+
+def make_policy_decide(policy: AllocationPolicy, with_observed: bool):
+    def decide(a, b, observed):
+        toks = choose_tokens_jnp(a, b, policy,
+                                 observed if with_observed else None)
+        return toks, b * toks.astype(a.dtype) ** a
+
+    return decide
+
+
+def make_priced_decide(policy: AllocationPolicy, with_observed: bool):
+    def decide(a, b, price, observed):
+        toks = choose_tokens_priced_jnp(
+            a, b, policy, price, observed if with_observed else None)
+        return toks, b * toks.astype(a.dtype) ** a
+
+    return decide
+
+
+def make_fused_decide(model, policy: AllocationPolicy, with_observed: bool):
+    scaler = model.scaler
+
+    def fused(params, model_in, observed):
+        z = model.serve_apply(params, model_in)
+        a, b = scaler.decode(z)
+        a64 = a.astype(jnp.float64)
+        b64 = b.astype(jnp.float64)
+        toks = choose_tokens_jnp(a64, b64, policy,
+                                 observed if with_observed else None)
+        rt = b64 * toks.astype(jnp.float64) ** a64
+        return toks, a, b, rt
+
+    return fused
+
+
+def make_sharded_policy_per_shard(policy: AllocationPolicy,
+                                  with_observed: bool, priced: bool):
+    def per_shard(a, b, price, obs):
+        # exactly the single-shard policy stage on a (Bp,) block
+        if priced:
+            toks = choose_tokens_priced_jnp(
+                a, b, policy, price, obs if with_observed else None)
+        else:
+            toks = choose_tokens_jnp(
+                a, b, policy, obs if with_observed else None)
+        return toks, b * toks.astype(a.dtype) ** a
+
+    return per_shard
+
+
+def make_sharded_fused_per_shard(model, policy: AllocationPolicy,
+                                 with_observed: bool):
+    scaler = model.scaler
+
+    def per_shard(params, model_in, obs):
+        # the single-shard fused stage on one replica's (Bp, ...)
+        # block: identical shapes, identical math
+        z = model.serve_apply(params, model_in)
+        a, b = scaler.decode(z)
+        a64 = a.astype(jnp.float64)
+        b64 = b.astype(jnp.float64)
+        toks = choose_tokens_jnp(a64, b64, policy,
+                                 obs if with_observed else None)
+        rt = b64 * toks.astype(jnp.float64) ** a64
+        return toks, a, b, rt
+
+    return per_shard
+
+
 class ReplicaState:
     """Mutable serving state of one model replica.
 
@@ -167,14 +253,67 @@ class ReplicaState:
     cache and decision counters); a ``ShardedAllocationService`` owns one
     per shard, so per-replica traffic and compile behavior stay observable
     after the fabric batches decisions across shards.
+
+    The streaming serving plane decides from worker threads, so the cache
+    and counters are guarded by ``lock`` (``get_or_build`` is the one
+    double-checked insert path), and compile classification is per-thread:
+    a dispatch is a compile iff *its own* builder inserted an executable or
+    waited out a concurrent insert — not iff the global ``compiles``
+    counter moved while it ran. AOT warmup (``repro.serve.aot``) pins
+    pre-built executables via ``install`` without touching ``compiles``,
+    so a fully warmed replica serves with ``stats["compiles"] == 0``.
     """
 
-    __slots__ = ("shard", "stats", "compiled")
+    __slots__ = ("shard", "stats", "compiled", "lock", "_tls")
 
     def __init__(self, shard: int = 0):
         self.shard = int(shard)
         self.stats: Dict[str, int] = {"compiles": 0, "calls": 0, "queries": 0}
         self.compiled: Dict[Tuple, callable] = {}
+        self.lock = threading.RLock()
+        self._tls = threading.local()
+
+    # ----------------------------------------- per-thread compile tracking --
+    def begin_dispatch(self) -> None:
+        self._tls.compile_stall = False
+
+    def note_compile_stall(self) -> None:
+        self._tls.compile_stall = True
+
+    def compile_stalled(self) -> bool:
+        return getattr(self._tls, "compile_stall", False)
+
+    # --------------------------------------------------------- cache paths --
+    def get_or_build(self, key: Tuple, build):
+        """Return the cached executable for ``key``, building it exactly
+        once across threads. Every thread that raced the build — winner or
+        loser — is flagged compile-stalled: its decide latency covered
+        executable construction either way."""
+        fn = self.compiled.get(key)
+        if fn is not None:
+            return fn
+        with self.lock:
+            fn = self.compiled.get(key)
+            if fn is None:
+                self.stats["compiles"] += 1
+                fn = self.compiled[key] = build()
+            self.note_compile_stall()
+        return fn
+
+    def install(self, key: Tuple, fn) -> bool:
+        """Pin a pre-compiled executable (AOT warmup) without counting a
+        compile. First install wins; returns whether ``fn`` was pinned."""
+        with self.lock:
+            if key in self.compiled:
+                return False
+            self.compiled[key] = fn
+            return True
+
+    def count(self, calls: int = 0, queries: int = 0) -> None:
+        """Thread-safe counter bump for the dispatch paths."""
+        with self.lock:
+            self.stats["calls"] += calls
+            self.stats["queries"] += queries
 
 
 class AllocationService:
@@ -201,6 +340,10 @@ class AllocationService:
     def stats(self) -> Dict[str, int]:
         return self.replica.stats
 
+    @property
+    def compile_state(self) -> ReplicaState:
+        return self.replica
+
     # ------------------------------------------------------------ jit cache --
     def _shape_sig(self, model_in: Dict[str, np.ndarray]) -> Tuple:
         # full padded shapes (batch dim included): one cache entry == one
@@ -209,51 +352,18 @@ class AllocationService:
 
     def _fused_fn(self, sig: Tuple, with_observed: bool):
         key = ("fused", self.model.cache_key, sig, with_observed, self.policy)
-        if key not in self._cache:
-            self.stats["compiles"] += 1
-            model, policy, scaler = self.model, self.policy, self.model.scaler
-
-            def fused(params, model_in, observed):
-                z = model.serve_apply(params, model_in)
-                a, b = scaler.decode(z)
-                a64 = a.astype(jnp.float64)
-                b64 = b.astype(jnp.float64)
-                toks = choose_tokens_jnp(a64, b64, policy,
-                                         observed if with_observed else None)
-                rt = b64 * toks.astype(jnp.float64) ** a64
-                return toks, a, b, rt
-
-            self._cache[key] = jax.jit(fused)
-        return self._cache[key]
+        return self.replica.get_or_build(key, lambda: jax.jit(
+            make_fused_decide(self.model, self.policy, with_observed)))
 
     def _policy_fn(self, n_padded: int, with_observed: bool):
         key = ("policy", n_padded, with_observed, self.policy)
-        if key not in self._cache:
-            self.stats["compiles"] += 1
-            policy = self.policy
-
-            def decide(a, b, observed):
-                toks = choose_tokens_jnp(a, b, policy,
-                                         observed if with_observed else None)
-                return toks, b * toks.astype(a.dtype) ** a
-
-            self._cache[key] = jax.jit(decide)
-        return self._cache[key]
+        return self.replica.get_or_build(key, lambda: jax.jit(
+            make_policy_decide(self.policy, with_observed)))
 
     def _priced_fn(self, n_padded: int, with_observed: bool):
         key = ("priced", n_padded, with_observed, self.policy)
-        if key not in self._cache:
-            self.stats["compiles"] += 1
-            policy = self.policy
-
-            def decide(a, b, price, observed):
-                toks = choose_tokens_priced_jnp(
-                    a, b, policy, price,
-                    observed if with_observed else None)
-                return toks, b * toks.astype(a.dtype) ** a
-
-            self._cache[key] = jax.jit(decide)
-        return self._cache[key]
+        return self.replica.get_or_build(key, lambda: jax.jit(
+            make_priced_decide(self.policy, with_observed)))
 
     def _chunks(self, B: int) -> List[slice]:
         return [slice(i, min(i + self.MAX_BATCH, B))
@@ -300,8 +410,7 @@ class AllocationService:
                        obs: Optional[np.ndarray]) -> AllocationDecision:
         a = np.asarray(a)
         B = a.shape[0]
-        self.stats["calls"] += 1
-        self.stats["queries"] += B
+        self.replica.count(calls=1, queries=B)
         Bp = batch_bucket(B, self.batch_floor)
         a64 = pad_to(np.asarray(a, np.float64), Bp)
         b64 = pad_to(np.asarray(b, np.float64), Bp)
@@ -332,8 +441,7 @@ class AllocationService:
     def _decide_fused(self, model_in: Dict[str, np.ndarray],
                       obs: Optional[np.ndarray]) -> AllocationDecision:
         B = next(iter(model_in.values())).shape[0]
-        self.stats["calls"] += 1
-        self.stats["queries"] += B
+        self.replica.count(calls=1, queries=B)
         Bp = batch_bucket(B, self.batch_floor)
         padded = {k: pad_to(np.asarray(v), Bp) for k, v in model_in.items()}
         # zero-padded observed rows are harmless: the bisection degenerates
@@ -432,6 +540,11 @@ class ShardedAllocationService:
         return self.service.stats
 
     @property
+    def compile_state(self) -> ReplicaState:
+        # one executable cache (and one lock) for fabric + wrapped service
+        return self.service.replica
+
+    @property
     def obs(self) -> Obs:
         # one Obs bundle per service; the fabric shares its wrapped
         # service's so single-shard and fabric traffic land in one place
@@ -473,46 +586,18 @@ class ShardedAllocationService:
     def _sharded_policy_fn(self, Bp: int, with_observed: bool, priced: bool):
         key = ("sharded_policy", self.n_shards, Bp, with_observed, priced,
                self.policy, self.mesh is not None)
-        cache = self.service._cache
-        if key not in cache:
-            self.stats["compiles"] += 1
-            policy = self.policy
-
-            def per_shard(a, b, price, obs):
-                # exactly the single-shard policy stage on a (Bp,) block
-                if priced:
-                    toks = choose_tokens_priced_jnp(
-                        a, b, policy, price, obs if with_observed else None)
-                else:
-                    toks = choose_tokens_jnp(
-                        a, b, policy, obs if with_observed else None)
-                return toks, b * toks.astype(a.dtype) ** a
-
-            cache[key] = jax.jit(self._map_over_shards(per_shard, 4, False))
-        return cache[key]
+        return self.service.replica.get_or_build(key, lambda: jax.jit(
+            self._map_over_shards(
+                make_sharded_policy_per_shard(self.policy, with_observed,
+                                              priced), 4, False)))
 
     def _sharded_fused_fn(self, sig: Tuple, with_observed: bool):
         key = ("sharded_fused", self.n_shards, self.model.cache_key, sig,
                with_observed, self.policy, self.mesh is not None)
-        cache = self.service._cache
-        if key not in cache:
-            self.stats["compiles"] += 1
-            model, policy, scaler = self.model, self.policy, self.model.scaler
-
-            def per_shard(params, model_in, obs):
-                # the single-shard fused stage on one replica's (Bp, ...)
-                # block: identical shapes, identical math
-                z = model.serve_apply(params, model_in)
-                a, b = scaler.decode(z)
-                a64 = a.astype(jnp.float64)
-                b64 = b.astype(jnp.float64)
-                toks = choose_tokens_jnp(a64, b64, policy,
-                                         obs if with_observed else None)
-                rt = b64 * toks.astype(jnp.float64) ** a64
-                return toks, a, b, rt
-
-            cache[key] = jax.jit(self._map_over_shards(per_shard, 2, True))
-        return cache[key]
+        return self.service.replica.get_or_build(key, lambda: jax.jit(
+            self._map_over_shards(
+                make_sharded_fused_per_shard(self.model, self.policy,
+                                             with_observed), 2, True)))
 
     # ------------------------------------------------------------ stacking --
     def _place(self, shard_of: np.ndarray):
@@ -523,10 +608,8 @@ class ShardedAllocationService:
                                           self.service.batch_floor)
         for k, r in enumerate(self.replicas):
             if counts[k]:
-                r.stats["calls"] += 1
-                r.stats["queries"] += int(counts[k])
-        self.stats["calls"] += 1
-        self.stats["queries"] += int(shard_of.size)
+                r.count(calls=1, queries=int(counts[k]))
+        self.service.replica.count(calls=1, queries=int(shard_of.size))
         return shard_of, pos, Bp
 
     def _stack(self, shard_of, pos, Bp, x, dtype, fill=0) -> np.ndarray:

@@ -1,0 +1,323 @@
+"""Streaming AOT serving plane (repro.serve.aot / repro.serve.plane):
+warmup completeness — a warmed stack replays a seeded trace with zero JIT
+traces (``stats["compiles"] == 0``) — AOT/lazy bitwise identity,
+``ReplicaState`` thread-safety under racing workers, the bounded-backlog
+``ServingPlane``, and ``Allocator.from_config(aot_warmup=True)``.
+"""
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Allocator, AllocatorConfig, AllocationRequest
+from repro.cluster import ClusterConfig
+from repro.core.allocator import AllocationPolicy
+from repro.core.models import NNConfig
+from repro.core.pipeline import TasqConfig, TasqPipeline
+from repro.serve import (AllocationService, Backlog, ServingPlane,
+                         WarmupConfig, warm_allocation_stack)
+from repro.serve.aot import (batch_buckets, model_input_template,
+                             model_pool_inputs)
+from repro.serve.service import ReplicaState
+from repro.workloads import TraceGenerator
+
+FAMILIES = ("gbdt", "nn", "gnn")
+MODEL_KEYS = {"gbdt": "gbdt", "nn": "nn:lf2", "gnn": "gnn:lf2"}
+
+
+# ------------------------------------------------------------------ fixtures --
+@pytest.fixture(scope="module")
+def pipeline():
+    """Tiny but fully trained pipeline shared by every AOT test: each
+    model family is trained exactly once for the whole module."""
+    cfg = TasqConfig(n_train=160, n_eval=60, nn=NNConfig(epochs=8),
+                     gnn_epochs=3)
+    p = TasqPipeline(cfg).build()
+    p.train("gbdt")
+    p.train("nn", loss="lf2")
+    p.train("gnn", loss="lf2")
+    return p
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return TraceGenerator(seed=7, n_unique=30, rate_qps=4.0).generate(600)
+
+
+@pytest.fixture(scope="module")
+def warmed(pipeline, trace):
+    """family -> (service, {n_shards: warmed Allocator}).
+
+    One service per family, warmed once for the single-replica grid and
+    once per fabric width — the executable cache is shared (one
+    ``ReplicaState``), so the replay tests below only assert zero
+    *additional* compiles via the report's per-run delta stats.
+    """
+    # up to 1024: the elastic resize path re-decides over the whole active
+    # lease set, so its batch bucket can far exceed the per-epoch arrivals
+    cfg = WarmupConfig(max_bucket=1024, observed=(True,))
+    out = {}
+    for fam in FAMILIES:
+        svc = AllocationService(pipeline.models[MODEL_KEYS[fam]],
+                                AllocationPolicy())
+        allocs = {}
+        for K in (1, 4):
+            a = Allocator(svc, n_shards=K)
+            a.warmup(trace=trace, config=cfg)
+            allocs[K] = a
+        out[fam] = (svc, allocs)
+    return out
+
+
+# ------------------------------------------------------------------ the grid --
+def test_batch_buckets_enumerate_the_closed_pow2_grid():
+    assert batch_buckets(8, 64) == (8, 16, 32, 64)
+    assert batch_buckets(8, 4096)[-1] == 4096
+    assert batch_buckets(8, 7) == ()          # cap below floor: empty grid
+    assert WarmupConfig(max_bucket=32).bucket_set(8) == (8, 16, 32)
+    assert WarmupConfig(buckets=(8, 128)).bucket_set(8) == (8, 128)
+
+
+def test_model_input_template_matches_pool_featurization(pipeline, trace):
+    for fam in ("nn", "gnn"):
+        model = pipeline.models[MODEL_KEYS[fam]]
+        pool = model_pool_inputs(model, trace.jobs)
+        tpl = model_input_template(model, trace.jobs)
+        assert set(tpl) == set(pool)
+        for k, (shape, dtype) in tpl.items():
+            assert pool[k].shape[1:] == shape
+            assert pool[k].dtype == dtype
+
+
+# -------------------------------------------------- ReplicaState concurrency --
+def test_get_or_build_builds_once_across_racing_threads():
+    rs = ReplicaState()
+    release = threading.Event()
+    n_builds = [0]
+
+    def build():
+        n_builds[0] += 1
+        release.wait(5.0)
+        return lambda: "built"
+
+    stalled = []
+
+    def racer():
+        rs.begin_dispatch()
+        fn = rs.get_or_build(("k",), build)
+        stalled.append((fn(), rs.compile_stalled()))
+
+    threads = [threading.Thread(target=racer) for _ in range(6)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)                          # let every racer reach the lock
+    release.set()
+    for t in threads:
+        t.join(10.0)
+    assert n_builds[0] == 1 and rs.stats["compiles"] == 1
+    # winner and losers alike: their dispatch latency covered the build
+    assert stalled == [("built", True)] * 6
+
+
+def test_cached_dispatch_not_misclassified_during_concurrent_build():
+    """Regression: compile classification is per-thread. A hot dispatch on
+    an already-cached key must NOT be flagged compile-stalled just because
+    another thread's build moved the global ``compiles`` counter while it
+    ran (the old global-counter heuristic did exactly that)."""
+    rs = ReplicaState()
+    assert rs.install(("warm",), lambda: 1)
+    entered, release = threading.Event(), threading.Event()
+
+    def slow_build():
+        entered.set()
+        release.wait(5.0)
+        return lambda: 2
+
+    def builder():
+        rs.begin_dispatch()
+        rs.get_or_build(("cold",), slow_build)
+
+    t = threading.Thread(target=builder)
+    t.start()
+    assert entered.wait(5.0)
+    # build mid-flight on another thread; this thread serves a cached key
+    rs.begin_dispatch()
+    fn = rs.get_or_build(("warm",), lambda: pytest.fail("must not rebuild"))
+    assert fn() == 1
+    assert not rs.compile_stalled()
+    release.set()
+    t.join(10.0)
+    assert rs.stats["compiles"] == 1
+
+
+def test_install_pins_without_counting_a_compile():
+    rs = ReplicaState()
+    assert rs.install(("k",), "first") is True
+    assert rs.install(("k",), "second") is False      # first install wins
+    assert rs.compiled[("k",)] == "first"
+    assert rs.stats["compiles"] == 0
+    rs.begin_dispatch()
+    assert rs.get_or_build(("k",), lambda: "built") == "first"
+    assert rs.stats["compiles"] == 0 and not rs.compile_stalled()
+
+
+# ------------------------------------------------------ AOT == lazy, no trace --
+@pytest.mark.parametrize("family", FAMILIES)
+def test_warm_service_is_bitwise_lazy_and_never_compiles(pipeline, trace,
+                                                         family):
+    model = pipeline.models[MODEL_KEYS[family]]
+    policy = AllocationPolicy()
+    warm = AllocationService(model, policy)
+    lazy = AllocationService(model, policy)
+    rep = warm_allocation_stack(
+        warm, jobs=trace.jobs,
+        cfg=WarmupConfig(buckets=(8, 16, 32, 64), observed=(True, False)))
+    assert rep.n_precompiled > 0 and rep.cold_start_s > 0
+    pool = model_pool_inputs(model, trace.jobs)
+    for B in (5, 16, 27):                     # buckets 8 / 16 / 32
+        sub = {k: v[:B] for k, v in pool.items()}
+        for observed in (None, np.arange(B) * 7 + 50):
+            req = AllocationRequest(model_in=sub, observed_tokens=observed)
+            dw = warm.decide(req)
+            dl = lazy.decide(req)
+            np.testing.assert_array_equal(dw.tokens, dl.tokens)
+            np.testing.assert_array_equal(dw.runtime, dl.runtime)
+            np.testing.assert_array_equal(dw.a, dl.a)
+            np.testing.assert_array_equal(dw.b, dl.b)
+    assert warm.stats["compiles"] == 0        # every key was pre-pinned
+    assert lazy.stats["compiles"] > 0         # same traffic traced lazily
+    assert warm.stats["queries"] == lazy.stats["queries"] > 0
+
+
+def test_warmup_report_json_round_trip(pipeline, trace):
+    svc = AllocationService(pipeline.models["nn:lf2"], AllocationPolicy())
+    rep = warm_allocation_stack(
+        svc, jobs=trace.jobs,
+        cfg=WarmupConfig(buckets=(8,), observed=(True,)))
+    j = rep.to_json()
+    assert j["n_precompiled"] == rep.n_precompiled == len(rep.records)
+    assert set(j["by_kind"]) == {"policy", "priced", "fused"}
+    assert sum(k["n"] for k in j["by_kind"].values()) == rep.n_precompiled
+    # a second pass finds every key pinned: nothing compiles again
+    rep2 = warm_allocation_stack(
+        svc, jobs=trace.jobs,
+        cfg=WarmupConfig(buckets=(8,), observed=(True,)))
+    assert rep2.n_precompiled == 0
+    assert rep2.n_already_cached == rep.n_precompiled
+
+
+# --------------------------------------------- warmup completeness on replay --
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("n_shards", (1, 4))
+@pytest.mark.parametrize("pricing", ("fixed", "elastic"))
+def test_streaming_replay_zero_compiles_after_warmup(warmed, trace, family,
+                                                     n_shards, pricing):
+    """Acceptance grid: every (family, fabric width, pricing) combination
+    replays the seeded trace through the streaming arrival path with zero
+    JIT traces after AOT warmup (``service_stats`` is a per-run delta, so
+    this asserts no *hot-path* compiles regardless of fixture sharing)."""
+    _, allocs = warmed[family]
+    rep = allocs[n_shards].run_streaming(
+        trace, ClusterConfig(capacity=8192, epoch_s=8.0, n_shards=n_shards,
+                             elastic=(pricing == "elastic"), pricing=pricing))
+    assert rep.n_epochs > 0
+    assert rep.metrics["n_completed"] > 0
+    assert rep.service_stats["compiles"] == 0
+
+
+def test_streaming_10k_replay_zero_compiles(pipeline):
+    """Tentpole acceptance: a seeded 10k-event streaming replay over the
+    K=4 elastic-priced fabric runs entirely on pre-pinned executables."""
+    trace = TraceGenerator(seed=11, n_unique=50,
+                           rate_qps=40.0).generate(10_000)
+    svc = AllocationService(pipeline.models["nn:lf2"], AllocationPolicy())
+    alloc = Allocator(svc, n_shards=4)
+    # full default grid (up to MAX_BATCH=4096): under elastic pricing the
+    # resize path decides over every active lease, so with 10k events the
+    # grid must be closed — beyond 4096 the service chunks, never traces
+    rep = alloc.warmup(trace=trace,
+                       config=WarmupConfig(observed=(True,)))
+    assert rep is alloc.warmup_report and rep.n_precompiled > 0
+    out = alloc.run_streaming(
+        trace, ClusterConfig(capacity=16384, epoch_s=8.0, n_shards=4,
+                             elastic=True, pricing="elastic"))
+    assert out.metrics["n_completed"] + out.metrics["n_rejected"] == 10_000
+    assert out.service_stats["compiles"] == 0
+
+
+def test_from_config_aot_warmup_pins_the_grid():
+    cfg = AllocatorConfig(
+        family="nn", aot_warmup=True,
+        pipeline=TasqConfig(n_train=120, n_eval=40, nn=NNConfig(epochs=4)))
+    alloc = Allocator.from_config(
+        cfg, warmup_config=WarmupConfig(buckets=(8, 16), fused=False))
+    rep = alloc.warmup_report
+    assert rep is not None and rep.n_precompiled > 0
+    pol = alloc.service.policy
+    for Bp in (8, 16):
+        for kind in ("policy", "priced"):
+            assert (kind, Bp, True, pol) in alloc.service.replica.compiled
+    assert alloc.service.stats["compiles"] == 0
+
+
+# ------------------------------------------------------------ Backlog + plane --
+def test_backlog_counts_saturations_and_backpressures():
+    b = Backlog(capacity=2)
+    b.put(1)
+    b.put(2)
+    with pytest.raises(queue.Full):
+        b.put(3, block=False)                 # shed-load mode re-raises
+    assert b.saturations == 1 and len(b) == 2
+
+    unblocked = []
+
+    def producer():
+        b.put(3)                              # blocks until a slot frees
+        unblocked.append(True)
+
+    t = threading.Thread(target=producer)
+    t.start()
+    time.sleep(0.05)
+    assert not unblocked                      # producer is backpressured
+    assert b.get() == 1
+    t.join(10.0)
+    assert unblocked and b.saturations == 2
+    assert b.get() == 2 and b.get() == 3 and len(b) == 0
+
+
+def test_serving_plane_resolves_all_futures_with_zero_compiles(pipeline,
+                                                               trace):
+    model = pipeline.models["nn:lf2"]
+    svc = AllocationService(model, AllocationPolicy())
+    pool = model_pool_inputs(model, trace.jobs)
+    plane = ServingPlane(svc, n_workers=2, max_batch=16, backlog=64)
+    plane.start(warm_jobs=trace.jobs,
+                warmup=WarmupConfig(buckets=(8, 16), observed=(True, False)))
+    assert plane.warmup_report.n_precompiled > 0
+    futs = []
+    for i in range(60):
+        row = {k: v[i % v.shape[0]] for k, v in pool.items()}
+        hint = None if i % 3 == 0 else 40 + i     # mixed observed / hint-free
+        futs.append(plane.submit(row, observed_tokens=hint))
+    toks = [f.result(timeout=60) for f in futs]
+    plane.stop()
+    assert len(toks) == 60 and all(t >= 1 for t in toks)
+    assert svc.stats["queries"] == 60
+    assert svc.stats["compiles"] == 0         # the hot path never traced
+
+
+def test_serving_plane_lifecycle_guards(pipeline, trace):
+    svc = AllocationService(pipeline.models["gbdt"], AllocationPolicy())
+    plane = ServingPlane(svc, n_workers=1, max_batch=8, backlog=8)
+    with pytest.raises(RuntimeError, match="not started"):
+        plane.submit({"features": np.zeros(4)})
+    plane.start(warmup=WarmupConfig(buckets=(8,), observed=(True, False),
+                                    fused=False))
+    with pytest.raises(RuntimeError, match="already started"):
+        plane.start()
+    # context-manager exit drains and stops; a second with-block restarts
+    with plane:
+        pass
+    assert plane._threads == []

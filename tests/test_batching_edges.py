@@ -5,12 +5,15 @@ A stub service keeps these tests pure MicroBatcher-logic tests — no model
 training; the stub echoes a per-row fingerprint so routing and ordering are
 verifiable exactly.
 """
+import warnings
+
 import numpy as np
+import pytest
 
 from repro.api import AllocationDecision
 from repro.core.allocator import AllocationPolicy
 from repro.serve import AllocationRequest, MicroBatcher
-from repro.serve.batching import node_bucket, pad_to
+from repro.serve.batching import batch_bucket, node_bucket, pad_to
 
 
 class StubService:
@@ -82,6 +85,55 @@ def test_graph_request_larger_than_any_previous_bucket():
     assert out[0] == 3 * 2              # features zero-padded 3 -> 8 nodes
     assert out[1] == 35 * 2             # padded 35 -> 64 nodes
     assert node_bucket(35) == 64
+
+
+# -------------------------------------------------- bucket floor/cap edges --
+def test_batch_bucket_floor_and_cap_boundaries():
+    assert batch_bucket(0) == 8 and batch_bucket(1) == 8   # floor clamps
+    assert batch_bucket(8) == 8 and batch_bucket(9) == 16  # pow2 boundary
+    assert batch_bucket(4096) == 4096
+    assert batch_bucket(4097) == 4096   # capped: bigger batches are chunked
+    assert batch_bucket(5, floor=16) == 16
+    assert batch_bucket(100, cap=64) == 64
+    assert batch_bucket(3, floor=32, cap=8) == 32          # floor beats cap
+
+
+def test_node_bucket_floor_and_uncapped_default():
+    assert node_bucket(1) == 8 and node_bucket(8) == 8
+    assert node_bucket(9) == 16
+    # cap=None (non-serving callers): historical unbounded power-of-two
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert node_bucket(100_000) == 131072
+
+
+def test_node_bucket_cap_falls_back_to_exact_size_with_warning():
+    with pytest.warns(RuntimeWarning, match="exceeds the 4096-node"):
+        assert node_bucket(5000, cap=4096) == 5000    # exact, not padded
+    with warnings.catch_warnings():                   # boundary: no warning
+        warnings.simplefilter("error")
+        assert node_bucket(4096, cap=4096) == 4096
+        assert node_bucket(4095, cap=4096) == 4096
+        assert node_bucket(3, cap=4) == 8             # floor beats a low cap
+
+
+def test_microbatcher_node_cap_serves_oversized_plan_exactly():
+    svc = StubService()
+    mb = MicroBatcher(svc, node_cap=16)
+    big = AllocationRequest(
+        request_id=0, model_in={"features": np.ones((20, 3)),
+                                "adj": np.eye(20), "mask": np.ones(20)})
+    small = AllocationRequest(
+        request_id=1, model_in={"features": np.ones((10, 3)),
+                                "adj": np.eye(10), "mask": np.ones(10)})
+    mb.submit(big)
+    mb.submit(small)
+    with pytest.warns(RuntimeWarning, match="exceeds the 16-node"):
+        out = mb.flush()
+    # the oversized plan rides its own exact-size one-off call; the small
+    # one is padded to its (capped) bucket as usual
+    assert out[0] == 20 * 3 and out[1] == 10 * 3
+    assert svc.batch_sizes == [1, 1]
 
 
 def test_pad_to_noop_and_refuses_shrink():

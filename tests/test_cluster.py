@@ -538,6 +538,34 @@ def test_fused_epoch_path_matches_unfused(service):
         assert np.array_equal(eb, ef, equal_nan=True), kw
 
 
+# ------------------------------------------------------- streaming arrivals --
+def test_streaming_replay_matches_epoch_loop(service):
+    """Serving-plane acceptance: the event-driven arrival path (producer
+    thread streaming the trace through a bounded backlog, epoch boundaries
+    draining by watermark) is decision-identical to the synchronous epoch
+    loop for the fixed, edf-elastic, and K=4 configs — every metric,
+    per-decision series, and epoch sample."""
+    trace = TraceGenerator(seed=33, n_unique=24, rate_qps=1.0).generate(500)
+    for kw in (dict(capacity=2048, epoch_s=8.0),
+               dict(capacity=1024, epoch_s=4.0, admission="edf",
+                    elastic=True, pricing="elastic"),
+               dict(capacity=2048, epoch_s=8.0, n_shards=4)):
+        base = ClusterSimulator(service, ClusterConfig(**kw)).run(trace)
+        stream = ClusterSimulator(
+            service, ClusterConfig(**kw)).run_streaming(trace, backlog=256,
+                                                        chunk=32)
+        assert dict(base.metrics) == dict(stream.metrics), kw
+        assert base.n_epochs == stream.n_epochs, kw
+        np.testing.assert_array_equal(base.alloc_errors, stream.alloc_errors)
+        np.testing.assert_array_equal(base.cache_hits, stream.cache_hits)
+        np.testing.assert_array_equal(base.repeats, stream.repeats)
+        assert base.cache_stats == stream.cache_stats
+        tb, eb = base.error_series
+        ts, es = stream.error_series
+        np.testing.assert_array_equal(tb, ts)
+        assert np.array_equal(eb, es, equal_nan=True), kw
+
+
 def test_fused_loop_keeps_pool_state_device_resident(service, monkeypatch):
     """Satellite regression: the fused epoch loop must never re-upload the
     host lease-table mirrors — the whole point of the fusion is that pool
