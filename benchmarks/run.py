@@ -979,10 +979,129 @@ def bench_aot_serving(scale: float, pipeline: TasqPipeline) -> None:
     _emit("aot_serving", out, items=n_cold + n_warm + 2000)
 
 
+# ------------------------------------------------------------ drift_cluster --
+def bench_drift_cluster(scale: float, pipeline: TasqPipeline) -> None:
+    """The closed MLOps loop under workload drift: one drifted trace
+    (unseen templates rotating in with growing volume) replayed under
+    three retraining policies — ``off`` (the PR 9 stack: model fitted
+    once, decays), ``cadence`` (refit every N completions) and ``signal``
+    (refit when the online drift detectors fire).
+
+    Gates:
+      * signal-triggered retraining beats no-retraining on BOTH the
+        rolling model error (last-512 |log(actual/pred)| on model-path
+        completions) and the SLA violation rate;
+      * every hot-swap serves warm — the warmed arms replay with zero
+        hot-path compiles across all swapped-in services;
+      * the signal arm actually swapped at least once.
+
+    Per-swap train/warm cost is published to results/retrain_report.json;
+    the row carries the initial warm cold_start_s / n_precompiled plus
+    the mean per-swap cold_start_s column.
+    """
+    from repro.mlops import DriftMonitor, MLOpsLoop, RetrainController
+    from repro.workloads import DriftSpec
+    assert "nn:lf2" in pipeline.models, \
+        "main() must pre-train nn:lf2 outside the timed window"
+    model = pipeline.models["nn:lf2"]
+    n_events = max(1500, int(10_000 * scale))
+    n_unique = max(48, int(128 * scale))
+    drift = DriftSpec(n_new=n_unique, onset=0.15, rotation=0.7,
+                      volume_growth=6.0)
+    # rate 0.2/s stretches arrivals to ~20x the median job runtime
+    # (~250s): completions — which drive the drift detectors and the
+    # retrain triggers — then overlap arrivals, so swaps land while
+    # decisions are still being made and the policy comparison can bite
+    gen = TraceGenerator(seed=71, n_unique=n_unique, rate_qps=0.2,
+                         drift=drift)
+    trace = gen.generate(n_events)
+    span_s = trace.events[-1].arrival_s
+    # capacity generous enough that completions track arrivals: swaps
+    # (triggered on completion counts) then land while arrivals are still
+    # flowing, so post-swap decisions exist for the comparison to bite
+    ccfg = ClusterConfig(capacity=32768, n_shards=2)
+    refit_cfg = TasqConfig(n_train=400, n_eval=100, nn=NNConfig(epochs=30))
+
+    arms = (
+        ("off", {}, False),
+        ("cadence", {"every": max(250, n_events // 5)}, True),
+        ("signal", {"min_signals": 3, "cooldown_s": span_s / 5}, True),
+    )
+    out: Dict[str, object] = {"n_events": n_events}
+    report_doc: Dict[str, object] = {"n_events": n_events,
+                                     "arrival_span_s": round(span_s, 1),
+                                     "arms": {}, "swaps": []}
+    loops: Dict[str, MLOpsLoop] = {}
+    for policy, overrides, warmed in arms:
+        service = AllocationService(model,
+                                    AllocationPolicy(max_slowdown=0.05))
+        alloc = Allocator(service, n_shards=ccfg.n_shards)
+        if warmed:
+            alloc.warmup(trace=trace)
+        loop = MLOpsLoop(
+            alloc,
+            RetrainController(family="nn", policy=policy,
+                              policy_overrides=overrides,
+                              pipeline_cfg=refit_cfg, max_train=400,
+                              seed=7),
+            DriftMonitor())
+        rep = alloc.run_cluster(trace, ccfg, mlops=loop)
+        loops[policy] = loop
+        m = rep.metrics
+        arm_out = {
+            "n_swaps": len(loop.swaps),
+            "n_drift_signals": len(loop.monitor.signals),
+            "rolling_model_error": round(loop.rolling_model_error(), 4),
+            "sla_violation_rate": m.get("sla_violation_rate"),
+            "alloc_error_model": m.get("alloc_error_model"),
+            "hot_path_compiles": rep.service_stats["compiles"],
+            "cache_version_stale": rep.cache_stats.get("version_stale", 0),
+        }
+        for k, v in arm_out.items():
+            out[f"{policy}_{k}"] = v
+        report_doc["arms"][policy] = {**arm_out, **loop.report()}
+        report_doc["swaps"] += [{"policy": policy, **s}
+                                for s in loop.swaps]
+        print(f"[drift_cluster:{policy}] swaps={arm_out['n_swaps']} "
+              f"signals={arm_out['n_drift_signals']} roll_err="
+              f"{arm_out['rolling_model_error']} sla_viol="
+              f"{arm_out['sla_violation_rate']} "
+              f"compiles={arm_out['hot_path_compiles']}")
+        if warmed:
+            assert rep.service_stats["compiles"] == 0, (
+                f"{policy}: a swapped-in or warmed service traced on the "
+                f"hot path ({rep.service_stats['compiles']} compiles)")
+
+    swaps = report_doc["swaps"]
+    sig_swaps = [s for s in swaps if s["policy"] == "signal"]
+    out["swap_cold_start_s_mean"] = round(
+        float(np.mean([s["cold_start_s"] for s in swaps])), 3) \
+        if swaps else None
+    wr = loops["signal"].allocator.warmup_report
+    _WARMUP_COLS.update(cold_start_s=round(wr.cold_start_s, 3),
+                        n_precompiled=wr.n_precompiled)
+    os.makedirs("results", exist_ok=True)
+    with open("results/retrain_report.json", "w") as f:
+        json.dump(report_doc, f, indent=1)
+
+    assert len(sig_swaps) >= 1, "signal policy never retrained"
+    assert out["signal_rolling_model_error"] < \
+        out["off_rolling_model_error"], (
+        "signal-triggered retraining did not beat no-retraining on "
+        f"rolling model error: {out['signal_rolling_model_error']} vs "
+        f"{out['off_rolling_model_error']}")
+    assert out["signal_sla_violation_rate"] <= \
+        out["off_sla_violation_rate"], (
+        "signal-triggered retraining did not beat no-retraining on SLA "
+        f"violations: {out['signal_sla_violation_rate']} vs "
+        f"{out['off_sla_violation_rate']}")
+    _emit("drift_cluster", out, items=3 * n_events)
+
+
 ALL = ("fig2", "fig10", "fig11", "table3", "tables456", "table7", "table8",
        "serve_alloc", "api_overhead", "cluster_sim", "edf_cluster",
        "preempt_cluster", "sharded_cluster", "fused_cluster",
-       "obs_overhead", "aot_serving")
+       "obs_overhead", "aot_serving", "drift_cluster")
 
 
 def main() -> None:
@@ -1009,7 +1128,7 @@ def main() -> None:
     pipeline = None
     if only & {"tables456", "table7", "table8", "serve_alloc", "api_overhead",
                "cluster_sim", "edf_cluster", "preempt_cluster",
-               "sharded_cluster", "aot_serving"}:
+               "sharded_cluster", "aot_serving", "drift_cluster"}:
         cfg = TasqConfig(n_train=int(1200 * args.scale),
                          n_eval=int(600 * args.scale),
                          nn=NNConfig(epochs=60),
@@ -1020,7 +1139,7 @@ def main() -> None:
         pipeline.train("gbdt")
         if only & {"serve_alloc", "api_overhead", "cluster_sim",
                    "edf_cluster", "preempt_cluster", "sharded_cluster",
-                   "aot_serving"}:
+                   "aot_serving", "drift_cluster"}:
             # train outside the timed windows: their wall/throughput rows
             # must measure serving/replay, not model training
             pipeline.train("nn", loss="lf2")
@@ -1060,6 +1179,9 @@ def main() -> None:
         _run_bench("obs_overhead", bench_obs_overhead, args.scale)
     if "aot_serving" in only:
         _run_bench("aot_serving", bench_aot_serving, args.scale, pipeline)
+    if "drift_cluster" in only:
+        _run_bench("drift_cluster", bench_drift_cluster, args.scale,
+                   pipeline)
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:

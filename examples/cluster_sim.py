@@ -31,7 +31,16 @@ serving stack, end to end.
      --trace-out writes a Perfetto/Chrome trace_event timeline of the
      replay (open at https://ui.perfetto.dev), --metrics-out writes the
      metrics snapshot (counters + decision-latency histograms), and either
-     flag prints the decision-latency percentiles.
+     flag prints the decision-latency percentiles,
+  9. optionally drift the workload and close the retraining loop:
+     --drift makes the generator rotate in previously-unseen templates
+     with growing resource volume mid-trace (repro.workloads.DriftSpec),
+     and --retrain-every N attaches the mlops loop (repro.mlops): a
+     DriftMonitor watches features and prediction residuals online while
+     a cadence-policy RetrainController refits the PCC model every N
+     completions and hot-swaps it in with zero decision downtime (the
+     incoming service is AOT-warmed off the hot path before the atomic
+     repoint).
 
 Run:  PYTHONPATH=src python examples/cluster_sim.py [--events 3000]
       PYTHONPATH=src python examples/cluster_sim.py --admission edf \
@@ -39,6 +48,8 @@ Run:  PYTHONPATH=src python examples/cluster_sim.py [--events 3000]
       PYTHONPATH=src python examples/cluster_sim.py --shards 4 --fused
       PYTHONPATH=src python examples/cluster_sim.py \
           --trace-out trace.json --metrics-out metrics.json
+      PYTHONPATH=src python examples/cluster_sim.py --drift \
+          --retrain-every 800
 """
 import argparse
 
@@ -48,8 +59,9 @@ from repro.api import Allocator, AllocatorConfig
 from repro.cluster import ClusterConfig
 from repro.core.models import NNConfig
 from repro.core.pipeline import TasqConfig
+from repro.mlops import DriftMonitor, MLOpsLoop, RetrainController
 from repro.obs import Obs, write_trace
-from repro.workloads import TraceGenerator
+from repro.workloads import DriftSpec, TraceGenerator
 
 
 def main() -> None:
@@ -80,6 +92,13 @@ def main() -> None:
     ap.add_argument("--metrics-out", default="", metavar="METRICS.json",
                     help="write the obs metrics snapshot (counters, "
                          "gauges, latency histograms)")
+    ap.add_argument("--drift", action="store_true",
+                    help="rotate unseen, higher-volume templates into the "
+                         "mix mid-trace (workload drift)")
+    ap.add_argument("--retrain-every", type=int, default=0, metavar="N",
+                    help="refit the PCC model every N completions and "
+                         "hot-swap it in with zero decision downtime "
+                         "(0 = retraining off)")
     args = ap.parse_args()
     if args.shards < 1:
         ap.error("--shards must be >= 1")
@@ -92,19 +111,34 @@ def main() -> None:
         pipeline=TasqConfig(n_train=args.n_train, n_eval=60,
                             nn=NNConfig(epochs=15))), obs=obs)
 
+    drift = DriftSpec(n_new=args.n_unique // 2, onset=0.25, rotation=0.6,
+                      volume_growth=4.0) if args.drift else None
     gen = TraceGenerator(seed=23, n_unique=args.n_unique, n_tenants=6,
-                         rate_qps=0.5)
+                         rate_qps=0.5, drift=drift)
     trace = gen.generate(args.events)
     print(f"trace: {len(trace)} queries over {len(trace.jobs)} unique "
           f"scripts, {trace.events[-1].arrival_s/60:.0f} min of arrivals, "
           f"{np.mean(trace.repeat_mask()):.0%} repeats")
+
+    mlops = None
+    if args.retrain_every > 0:
+        mlops = MLOpsLoop(
+            allocator,
+            RetrainController(
+                family="nn", policy="cadence",
+                policy_overrides={"every": args.retrain_every},
+                pipeline_cfg=TasqConfig(n_train=args.n_train, n_eval=60,
+                                        nn=NNConfig(epochs=15)),
+                max_train=args.n_train, obs=obs),
+            DriftMonitor(obs=obs))
 
     capacity = 8192 // args.shards * args.shards   # equal per-shard slices
     report = allocator.run_cluster(
         trace, ClusterConfig(capacity=capacity, n_shards=args.shards,
                              load_factor=args.load_factor, fused=args.fused,
                              preemption=args.preempt),
-        admission=args.admission, elastic=args.elastic, pricing=args.pricing)
+        admission=args.admission, elastic=args.elastic, pricing=args.pricing,
+        mlops=mlops)
 
     print(f"\n{report.summary()}")
     m = report.metrics
@@ -146,6 +180,17 @@ def main() -> None:
         print("  mean decision error by trace quarter:",
               "  ".join(f"{np.nanmean(err[i]):.2f}" for i in q))
     print(f"  cache: {report.cache_stats}")
+    if mlops is not None:
+        print(f"  mlops: {len(mlops.monitor.signals)} drift signals, "
+              f"{len(mlops.swaps)} hot-swaps, model v"
+              f"{mlops.allocator.model_version}, rolling model error "
+              f"{mlops.rolling_model_error():.3f}")
+        for s in mlops.swaps:
+            print(f"    swap v{s['version']} @ t={s['t_s']:.0f}s "
+                  f"({s['trigger']}): {s['n_train']} jobs, train "
+                  f"{s['train_s']:.1f}s, warm {s['cold_start_s']:.1f}s "
+                  f"({s['n_precompiled']} executables) — all off the "
+                  "decision hot path")
 
     if obs is not None:
         h = obs.metrics.histogram("decision_latency_s")

@@ -22,6 +22,7 @@ tests/test_api.py).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Optional, Sequence
 
 import numpy as np
@@ -95,6 +96,12 @@ class Allocator:
         self.pipeline = pipeline
         self.config = config
         self.warmup_report = None        # set by warmup()
+        # model hot-swap state: the serving model's version (0 = the
+        # from_config model; each swap_model bumps it) and the lock that
+        # makes the repoint atomic against concurrent decide()/swap calls
+        self.model_version = 0
+        self.swap_reports: list = []
+        self._swap_lock = threading.Lock()
 
     @classmethod
     def from_config(cls, config: AllocatorConfig = AllocatorConfig(),
@@ -171,6 +178,49 @@ class Allocator:
         decision-identical to ``run_cluster`` (see
         ``AllocationFrontend.run_streaming``)."""
         return self.frontend.run_streaming(trace, cluster_cfg, **overrides)
+
+    # ------------------------------------------------------------- hot swap --
+    def swap_model(self, bundle, *, jobs=None, warmup_config=None):
+        """Zero-downtime model hot-swap (the deploy half of the MLOps
+        loop). ``bundle`` is a ``repro.mlops.ModelBundle`` (or a bare
+        trained ``PCCModel``). Off the hot path, a brand-new service +
+        K-shard fabric are built around the new model and the *entire*
+        executable grid is AOT-warmed via ``warm_allocation_stack`` (pass
+        ``jobs`` to also pin the fused model executables at the
+        workload's featurized shapes); only then is the frontend
+        atomically repointed, so the streaming plane never serves a cold
+        or half-built model — post-swap decisions run with
+        ``stats["compiles"] == 0``. In-flight micro-batches complete
+        against the old service; the old replica's pinned executables are
+        retired (``invalidate()``, counted as ``executables_retired``).
+        Returns the warmup report (``cold_start_s`` is the swap's
+        off-path warm cost)."""
+        from repro.serve.aot import WarmupConfig, warm_allocation_stack
+        from repro.serve.service import (AllocationService,
+                                         ShardedAllocationService)
+        model = getattr(bundle, "model", bundle)
+        new_service = AllocationService(model, self.policy, obs=self.obs)
+        new_fabric = ShardedAllocationService(new_service, self.n_shards,
+                                              self.mesh)
+        cfg = WarmupConfig() if warmup_config is None else warmup_config
+        report = warm_allocation_stack(new_service, new_fabric, jobs=jobs,
+                                       cfg=cfg, obs=self.obs)
+        with self._swap_lock:
+            old_service = self.service
+            self.service = new_service
+            self.frontend.service = new_service
+            self.frontend.fabric = new_fabric
+            self.frontend._batcher.service = new_service
+            self.fabric = new_fabric
+            self.model_version = int(getattr(bundle, "version",
+                                             self.model_version + 1))
+        retired = old_service.replica.invalidate()
+        self.obs.metrics.counter("executables_retired").inc(retired)
+        self.obs.metrics.counter("model_swaps").inc()
+        if self.obs.recorder is not None:
+            self.obs.recorder.model_version = self.model_version
+        self.swap_reports.append(report)
+        return report
 
     # ----------------------------------------------------------- AOT warmup --
     def warmup(self, trace=None, jobs=None, config=None):

@@ -52,13 +52,19 @@ class PCCCache:
         assert max_entries is None or max_entries >= 1
         self.max_entries = max_entries
         self.drift_tol = drift_tol
-        # one dict so (a, b, area) can never desynchronize across keys
-        self._entries: Dict[int, Tuple[float, float, float]] = {}
+        # the serving model's version at refine time; a hot-swap bumps it
+        # (``bump_model_version``) and lookups demote older entries — a
+        # post-swap cache hit can never serve a curve refined under the
+        # retired model
+        self.model_version = 0
+        # one dict so (a, b, area, version) can never desynchronize
+        self._entries: Dict[int, Tuple[float, float, float, float]] = {}
         self._used: Dict[int, int] = {}       # LRU tick per key
         self._tick = 0
-        self._dense = None                    # (keys, a, b, area) sorted view
+        self._dense = None         # (keys, a, b, area, version) sorted view
         self.stats = {"hits": 0, "misses": 0, "refined": 0, "refine_calls": 0,
-                      "stale": 0, "evicted": 0, "dense_rebuilds": 0}
+                      "stale": 0, "evicted": 0, "dense_rebuilds": 0,
+                      "version_stale": 0}
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -78,10 +84,10 @@ class PCCCache:
             n = len(self._entries)
             keys = np.fromiter(self._entries.keys(), np.int64, n)
             vals = np.array(list(self._entries.values()),
-                            np.float64).reshape(n, 3)
+                            np.float64).reshape(n, 4)
             order = np.argsort(keys)
             self._dense = (keys[order], vals[order, 0], vals[order, 1],
-                           vals[order, 2])
+                           vals[order, 2], vals[order, 3])
         return self._dense
 
     def _find(self, keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -102,6 +108,14 @@ class PCCCache:
         self._dense = None
         self.stats["evicted"] += 1
 
+    def bump_model_version(self, version: Optional[int] = None) -> int:
+        """A model hot-swap happened: entries refined under the old model
+        become stale (next lookup demotes them to misses and evicts, so
+        the completion path refits them under the new regime)."""
+        self.model_version = int(version) if version is not None \
+            else self.model_version + 1
+        return self.model_version
+
     # -------------------------------------------------------------- lookup --
     def lookup(self, keys: np.ndarray, areas: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -114,6 +128,15 @@ class PCCCache:
         """
         keys = np.asarray(keys, np.int64)
         hit, idx = self._find(keys)
+        if self.model_version and np.any(hit):
+            ver = np.where(hit, self._dense_view()[4][idx],
+                           self.model_version)
+            vstale = hit & (ver < self.model_version)
+            if np.any(vstale):
+                self.stats["version_stale"] += int(vstale.sum())
+                for k in np.unique(keys[vstale]):
+                    self._evict(int(k))
+                hit, idx = self._find(keys)
         if areas is not None and np.any(hit):
             cached = np.where(hit, self._dense_view()[3][idx], 0.0)
             cur = np.asarray(areas, np.float64)
@@ -127,7 +150,7 @@ class PCCCache:
                 # *every* row that references it (a duplicate key with a
                 # fresh area must not resolve to a neighboring entry)
                 hit, idx = self._find(keys)
-        _, da, db, _ = self._dense_view()
+        _, da, db, _, _ = self._dense_view()
         a = np.where(hit, da[idx] if da.size else 0.0, 0.0)
         b = np.where(hit, db[idx] if db.size else 0.0, 0.0)
         self._tick += 1
@@ -183,7 +206,8 @@ class PCCCache:
         for i, (k, ai, bi) in enumerate(zip(keys, a, b)):
             if int(k) not in self._entries:
                 self.stats["refined"] += 1
-            self._entries[int(k)] = (float(ai), float(bi), float(row_area[i]))
+            self._entries[int(k)] = (float(ai), float(bi), float(row_area[i]),
+                                     float(self.model_version))
             self._used[int(k)] = self._tick
         self._dense = None
         if self.max_entries is not None and len(self._entries) > self.max_entries:
@@ -210,6 +234,10 @@ class ShardedPCCCache:
 
     def __len__(self) -> int:
         return sum(len(s) for s in self.shards)
+
+    def bump_model_version(self, version: Optional[int] = None) -> int:
+        """Propagate a model hot-swap to every shard's cache."""
+        return max(s.bump_model_version(version) for s in self.shards)
 
     @property
     def stats(self) -> Dict[str, int]:

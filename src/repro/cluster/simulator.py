@@ -324,23 +324,31 @@ class ClusterSimulator:
         return np.maximum(rt.astype(np.int64), 1)
 
     # ----------------------------------------------------------------- run --
-    def run(self, trace: Trace) -> ClusterReport:
-        """Epoch-batched replay: the whole arrival column drives the loop."""
-        return self._run(trace, _TraceArrivals)
+    def run(self, trace: Trace, *, mlops=None) -> ClusterReport:
+        """Epoch-batched replay: the whole arrival column drives the loop.
+
+        ``mlops`` (a ``repro.mlops.MLOpsLoop``) closes the drift-retraining
+        loop: every completion batch feeds its detectors and training
+        buffer, and when the trigger policy fires the loop refits, AOT-warms
+        and hot-swaps a new model — the replay then continues against the
+        swapped-in service/fabric with zero hot-path compiles."""
+        return self._run(trace, _TraceArrivals, mlops=mlops)
 
     def run_streaming(self, trace: Trace, *, backlog: int = 1024,
-                      chunk: int = 64) -> ClusterReport:
+                      chunk: int = 64, mlops=None) -> ClusterReport:
         """Event-driven replay: arrivals are fed one chunk at a time by a
         producer thread through a bounded backlog (the serving-plane
         admission shape), and each epoch drains every event at or before
         its boundary by watermark. Decision-identical to ``run`` on the
         same trace — the two differ only in how events become visible, so
         a passing identity test pins the streaming plane to the validated
-        epoch semantics."""
+        epoch semantics. ``mlops`` attaches the drift-retraining loop (see
+        ``run``)."""
         return self._run(trace, lambda arrival: StreamingArrivals(
-            arrival, backlog=backlog, chunk=chunk, obs=self.obs))
+            arrival, backlog=backlog, chunk=chunk, obs=self.obs),
+            mlops=mlops)
 
-    def _run(self, trace: Trace, make_source) -> ClusterReport:
+    def _run(self, trace: Trace, make_source, mlops=None) -> ClusterReport:
         cfg = self.cfg
         K = cfg.n_shards
         cap_shard = cfg.capacity // K
@@ -355,6 +363,17 @@ class ClusterSimulator:
         # install this run's bundle on the (possibly shared) service so
         # fabric.decide spans/latency land with the simulator's records
         prev_obs, self.service.obs = self.service.obs, o
+        # hot-swap stats accounting: counters of services retired mid-run
+        # fold into these accumulators so the report still covers the whole
+        # replay, not just the last model's share of it
+        acc_service: Dict[str, int] = {}
+        acc_replica: List[Dict[str, int]] = [dict() for _ in range(K)]
+        if mlops is not None:
+            assert mlops.allocator.service is self.service, \
+                "mlops loop must wrap the allocator driving this simulator"
+            assert mlops.allocator.n_shards == K, \
+                "mlops allocator fabric must match ClusterConfig.n_shards"
+            mlops.begin_run(trace)
         t_wall = time.time()
         n = len(trace)
         cols = trace.arrays()
@@ -484,6 +503,44 @@ class ClusterSimulator:
                         self.cache.refine_batch(
                             home_u[fresh], fresh, sky[fresh], lens[fresh],
                             defaults[fresh], peaks[fresh])
+                if mlops is not None:
+                    # feed the drift-retraining loop this completion batch:
+                    # decision-time predicted runtime vs realized runtime,
+                    # plus the completed queries' feature view
+                    pred = b_q[done_ids] * np.maximum(
+                        tok_q[done_ids], 1).astype(np.float64) \
+                        ** a_q[done_ids]
+                    feats = np.stack(
+                        [np.log1p(areas[jb]),
+                         np.log1p(peaks[jb].astype(np.float64)),
+                         np.log1p(defaults[jb].astype(np.float64)),
+                         np.log1p(lens[jb].astype(np.float64))], axis=1)
+                    swapped = mlops.on_completions(
+                        now=now, job_index=jb, features=feats,
+                        predicted_s=pred, actual_s=fin - start_q[done_ids],
+                        model_mask=~hit_q[done_ids])
+                    if swapped:
+                        # the allocator swapped in a freshly-warmed stack:
+                        # fold the retired service's counters into the
+                        # accumulators, re-point, re-baseline, and demote
+                        # cache curves refined under the old model
+                        for k2, v in self.service.stats.items():
+                            acc_service[k2] = (acc_service.get(k2, 0) + v
+                                               - service_stats0.get(k2, 0))
+                        for acc, r, r0 in zip(acc_replica,
+                                              self.fabric.replica_stats(),
+                                              replica_stats0):
+                            for k2 in r:
+                                acc[k2] = (acc.get(k2, 0) + r[k2]
+                                           - r0.get(k2, 0))
+                        self.service.obs = prev_obs     # retire cleanly
+                        self.service = mlops.allocator.service
+                        self.fabric = mlops.allocator.fabric
+                        prev_obs, self.service.obs = self.service.obs, o
+                        service_stats0 = dict(self.service.stats)
+                        replica_stats0 = self.fabric.replica_stats()
+                        self.cache.bump_model_version(
+                            mlops.allocator.model_version)
 
             # 2. per-(shard, SLA-class) price signal from leased + queued
             #    demand — one vectorized call over the whole fabric (the
@@ -965,19 +1022,26 @@ class ClusterSimulator:
         report = metrics.report()
         # replay rate: queries fully processed (completed or rejected) / wall
         n_processed = report.get("n_completed", 0) + report.get("n_rejected", 0)
+        service_delta = {k: v - service_stats0.get(k, 0)
+                         for k, v in self.service.stats.items()}
+        for k2, v in acc_service.items():
+            service_delta[k2] = service_delta.get(k2, 0) + v
+        replica_delta = []
+        for acc, r, r0 in zip(acc_replica, self.fabric.replica_stats(),
+                              replica_stats0):
+            d = {k: r[k] - r0.get(k, 0) for k in r}
+            for k2, v in acc.items():
+                d[k2] = d.get(k2, 0) + v
+            replica_delta.append(d)
         return ClusterReport(
             metrics=report, n_events=n, n_epochs=n_epochs,
             wall_s=round(wall, 3),
             events_per_s=round(n_processed / max(wall, 1e-9), 1),
             cache_stats=dict(self.cache.stats),
-            service_stats={k: v - service_stats0[k]
-                           for k, v in self.service.stats.items()},
+            service_stats=service_delta,
             error_series=metrics.error_series(),
             alloc_errors=err_q, cache_hits=hit_q, repeats=repeat_all,
-            replica_stats=[
-                {k: r[k] - r0[k] for k in r}
-                for r, r0 in zip(self.fabric.replica_stats(),
-                                 replica_stats0)])
+            replica_stats=replica_delta)
 
     # -------------------------------------------------------------- resize --
     @staticmethod

@@ -174,7 +174,8 @@ class AllocationFrontend:
                     elastic: Optional[bool] = None,
                     pricing: Optional[str] = None,
                     n_shards: Optional[int] = None,
-                    load_factor: Optional[float] = None) -> "ClusterReport":
+                    load_factor: Optional[float] = None,
+                    mlops=None) -> "ClusterReport":
         """Replay a ``repro.workloads.Trace`` through this frontend's service
         inside the trace-driven cluster simulator (``repro.cluster``): K
         token-pool shards behind consistent-hash routing, per-shard
@@ -189,10 +190,11 @@ class AllocationFrontend:
         without the caller building a config. An explicit ``cluster_cfg``
         is authoritative (its ``n_shards`` is honored as written); only
         when no config is passed does ``n_shards`` default to the
-        frontend's own shard count."""
+        frontend's own shard count. ``mlops`` (a ``repro.mlops.MLOpsLoop``)
+        attaches the drift-retraining loop to the replay."""
         sim = self._make_simulator(cluster_cfg, admission, elastic, pricing,
                                    n_shards, load_factor)
-        return sim.run(trace)
+        return sim.run(trace, mlops=mlops)
 
     def run_streaming(self, trace, cluster_cfg=None, *,
                       admission: Optional[str] = None,
@@ -200,8 +202,8 @@ class AllocationFrontend:
                       pricing: Optional[str] = None,
                       n_shards: Optional[int] = None,
                       load_factor: Optional[float] = None,
-                      backlog: int = 1024, chunk: int = 64
-                      ) -> "ClusterReport":
+                      backlog: int = 1024, chunk: int = 64,
+                      mlops=None) -> "ClusterReport":
         """``run_cluster`` with the event-driven arrival path: a producer
         thread streams the trace through a bounded backlog (backpressure
         when decisions fall behind) and each epoch boundary drains every
@@ -212,7 +214,8 @@ class AllocationFrontend:
         never traces."""
         sim = self._make_simulator(cluster_cfg, admission, elastic, pricing,
                                    n_shards, load_factor)
-        return sim.run_streaming(trace, backlog=backlog, chunk=chunk)
+        return sim.run_streaming(trace, backlog=backlog, chunk=chunk,
+                                 mlops=mlops)
 
     def _make_simulator(self, cluster_cfg, admission, elastic, pricing,
                         n_shards, load_factor) -> "ClusterSimulator":

@@ -43,6 +43,11 @@ class FlightRecorder:
         self.max_rows = int(max_rows)
         self.n_seen = 0                    # queries offered
         self.n_recorded = 0                # queries sampled in
+        # MLOps provenance: which model version decided each row and the
+        # drift score at decision time. ``Allocator.swap_model`` bumps the
+        # version; ``DriftMonitor`` stamps the score.
+        self.model_version = 0
+        self.drift_score = 0.0
         self._rows: List[Dict] = []
         self._fh = None
         # hash(counter ^ seed) < threshold <=> sampled; uint64 threshold
@@ -97,6 +102,8 @@ class FlightRecorder:
                                                     int(prov[j])),
                 "a": float(a[j]),
                 "b": float(b[j]),
+                "model_version": int(self.model_version),
+                "drift_score": float(self.drift_score),
             }
             if now is not None:
                 row["t_s"] = float(now)

@@ -153,6 +153,13 @@ class ServingPlane:
             self._threads.append(t)
         return self
 
+    def swap_service(self, service) -> None:
+        """Atomically repoint the plane at an already-warmed service (model
+        hot-swap). Worker micro-batchers pick the new service up before
+        their next batch; batches already flushing complete against the
+        old one, so in-flight futures are never dropped."""
+        self.service = service
+
     def stop(self) -> None:
         """Drain-and-stop: workers finish everything already admitted (the
         backlog empties) before exiting."""
@@ -218,6 +225,10 @@ class ServingPlane:
                 if self._stopping.is_set():
                     return
                 continue
+            # hot-swap pickup: a new batch decides on the plane's current
+            # service; the batch already flushing finished on the old one
+            if batcher.service is not self.service:
+                batcher.service = self.service
             req, fut = item
             batcher.submit(req)
             futures[req.request_id] = fut

@@ -268,7 +268,8 @@ class ReplicaState:
 
     def __init__(self, shard: int = 0):
         self.shard = int(shard)
-        self.stats: Dict[str, int] = {"compiles": 0, "calls": 0, "queries": 0}
+        self.stats: Dict[str, int] = {"compiles": 0, "calls": 0,
+                                      "queries": 0, "executables_retired": 0}
         self.compiled: Dict[Tuple, callable] = {}
         self.lock = threading.RLock()
         self._tls = threading.local()
@@ -308,6 +309,18 @@ class ReplicaState:
                 return False
             self.compiled[key] = fn
             return True
+
+    def invalidate(self) -> int:
+        """Retire every pinned/compiled executable (model hot-swap: the
+        replaced replica must never dispatch a stale compiled fn again).
+        Dispatches already holding an executable reference finish on it;
+        the next ``get_or_build`` rebuilds. Returns the number retired
+        (also accumulated in ``stats["executables_retired"]``)."""
+        with self.lock:
+            n = len(self.compiled)
+            self.compiled.clear()
+            self.stats["executables_retired"] += n
+            return n
 
     def count(self, calls: int = 0, queries: int = 0) -> None:
         """Thread-safe counter bump for the dispatch paths."""

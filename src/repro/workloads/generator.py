@@ -28,6 +28,12 @@ NUM_OP_TYPES = 35       # paper Table 2: 35 physical operator types
 NUM_PARTITION_TYPES = 4  # paper Table 2: 4 partition types
 MAX_TOKENS = 6287        # paper §5: peak tokens observed in the population
 
+# operator band drifted templates draw from under ``DriftSpec.new_op_frac``:
+# a fixed tail of the type space, so "new operators" shift both the one-hot
+# feature mix (covariate drift the PSI/KS detectors see) and the engine cost
+# coefficients behind it (concept drift the residual CUSUM sees)
+DRIFT_OP_POOL = tuple(range(NUM_OP_TYPES - 7, NUM_OP_TYPES))
+
 _ENGINE_SEED = 20210415
 
 
@@ -115,19 +121,25 @@ class Job:
 # ----------------------------------------------------------------- sampling --
 def _sample_stage_chain(trng: np.random.RandomState,
                         irng: np.random.RandomState, n_ops: int,
-                        input_card: float, nparts: int
+                        input_card: float, nparts: int,
+                        op_pool: Optional[Sequence[int]] = None
                         ) -> Tuple[List[Operator], float]:
     """Chain of operators inside one stage; returns (ops, output cardinality).
 
     Structural draws (operator types, row lengths, partitioning) come from
     the *template* rng; optimizer-estimate noise from the *instance* rng.
+    ``op_pool`` restricts the operator-type draw to a subset (drifted
+    "new-operator" templates); ``None`` keeps the full-space draw bitwise.
     """
     ops: List[Operator] = []
     card = input_card
     child_card = input_card
     total_cost_acc = 0.0
     for _ in range(n_ops):
-        ot = int(trng.randint(NUM_OP_TYPES))
+        if op_pool is None:
+            ot = int(trng.randint(NUM_OP_TYPES))
+        else:
+            ot = int(op_pool[trng.randint(len(op_pool))])
         out_card = max(1.0, card * OP_SELECTIVITY[ot])
         row_len = float(np.clip(trng.lognormal(4.2, 0.7), 8, 4096))
         true_cost = card * OP_COST_COEFF[ot] * row_len * 1e-6
@@ -154,7 +166,9 @@ def _sample_stage_chain(trng: np.random.RandomState,
 
 
 def sample_job(job_id: int, rng: np.random.RandomState,
-               template_seed: Optional[int] = None) -> Job:
+               template_seed: Optional[int] = None, *,
+               volume_scale: float = 1.0,
+               op_pool: Optional[Sequence[int]] = None) -> Job:
     """One SCOPE-like job. Widths/durations give the §5 population shape.
 
     Recurrence: production SCOPE workloads are dominated by *recurring*
@@ -163,6 +177,11 @@ def sample_job(job_id: int, rng: np.random.RandomState,
     types, row lengths, partition jitter) while the instance ``rng`` still
     varies the data volume, estimate noise, execution noise, and the user's
     token request. Ad-hoc jobs simply use a fresh template per job.
+
+    ``volume_scale`` multiplies the template's base data volume and
+    ``op_pool`` restricts its operator-type draws — the ``DriftSpec``
+    levers. At the defaults (1.0, None) the draw sequence is bitwise the
+    pre-drift one.
     """
     trng = np.random.RandomState(template_seed if template_seed is not None
                                  else rng.randint(2**31 - 1))
@@ -174,6 +193,7 @@ def sample_job(job_id: int, rng: np.random.RandomState,
     stage_last_op: List[int] = []
     # instance-level data volume scale (the "fresh day of data")
     base_card = float(np.clip(trng.lognormal(15.2, 1.2), 1e3, 3e10))
+    base_card = float(np.clip(base_card * volume_scale, 1e3, 3e10))
     inst_scale = float(rng.lognormal(0.0, 0.5))
 
     for sid in range(n_stages):
@@ -195,7 +215,8 @@ def sample_job(job_id: int, rng: np.random.RandomState,
                      + trng.uniform(-1.0, 1.0)), 0, 13))
         n_ops = 1 + int(trng.geometric(0.45))
         ops, out_card = _sample_stage_chain(trng, rng, min(n_ops, 6),
-                                            input_card, nparts)
+                                            input_card, nparts,
+                                            op_pool=op_pool)
         base = len(operators)
         operators.extend(ops)
         # chain ops within the stage
@@ -251,6 +272,63 @@ def build_corpus(n_jobs: int, seed: int = 0, *, recurring_frac: float = 0.8,
         else:
             jobs.append(sample_job(i, rng))
     return jobs
+
+
+# ------------------------------------------------------------------- drift --
+@dataclasses.dataclass(frozen=True)
+class DriftSpec:
+    """Workload drift over trace time (the MLOps-loop injector).
+
+    Threaded through the single ``TraceGenerator._event_chunks`` path, so
+    ``generate()`` and ``stream()`` see the *same* drifted trace bitwise.
+    Three levers, all parameterized by trace-time phase t = event index /
+    (n_events - 1):
+
+      * **template-mix rotation** — ``n_new`` drifted templates are
+        introduced one at a time, evenly spaced between ``onset`` and the
+        end of the trace; the probability that an arrival picks from the
+        introduced pool (instead of the stationary Zipf head) ramps
+        linearly from 0 at ``onset`` to ``rotation`` at the end;
+      * **data-volume growth curve** — the template introduced at phase f
+        is sampled with its base cardinality scaled by
+        ``volume_growth ** f``: effective data volume grows along the
+        introduction curve, exactly the "same script over ever more data"
+        recurrence story;
+      * **new-operator introduction** — the last ``new_op_frac`` fraction
+        of drifted templates draw operators from ``DRIFT_OP_POOL`` only,
+        shifting the one-hot feature mix (covariate drift) on top of the
+        cost shift (concept drift).
+
+    ``DriftSpec(n_new=0)`` / ``rotation=0.0`` (or ``drift=None`` on the
+    generator) is bitwise-inert: the stationary path performs exactly the
+    pre-drift RNG draws.
+    """
+    n_new: int = 64
+    onset: float = 0.25
+    rotation: float = 0.6
+    volume_growth: float = 4.0
+    new_op_frac: float = 0.5
+
+    def __post_init__(self):
+        assert self.n_new >= 0, self.n_new
+        assert 0.0 <= self.onset < 1.0, self.onset
+        assert 0.0 <= self.rotation <= 1.0, self.rotation
+        assert self.volume_growth > 0.0, self.volume_growth
+        assert 0.0 <= self.new_op_frac <= 1.0, self.new_op_frac
+
+    @property
+    def active(self) -> bool:
+        return self.n_new > 0 and self.rotation > 0.0
+
+    def intro_fracs(self) -> np.ndarray:
+        """Trace-time phase at which each drifted template becomes
+        pickable (ascending; the template-introduction schedule)."""
+        d = np.arange(self.n_new, dtype=np.float64)
+        return self.onset + (1.0 - self.onset) * (d + 1.0) / (self.n_new + 1)
+
+    def volume_scales(self) -> np.ndarray:
+        """Per-drift-template data-volume multiplier (the growth curve)."""
+        return np.asarray(self.volume_growth, np.float64) ** self.intro_fracs()
 
 
 # ----------------------------------------------------------------- tracing --
@@ -392,6 +470,12 @@ class TraceGenerator:
         scripts), so a small head of queries repeats heavily;
       * tenancy: each unique query belongs to one tenant; tenants are spread
         round-robin over the SLA classes.
+
+    ``drift`` (a ``DriftSpec``) injects non-stationarity: extra drifted
+    templates appended to the pool and a time-varying pick mixture inside
+    ``_event_chunks`` — the one path both ``generate`` and ``stream``
+    consume, so bulk and chunked replays stay bitwise-identical under
+    drift, and ``drift=None`` draws exactly the stationary streams.
     """
 
     def __init__(self, seed: int = 0, *, n_unique: int = 256,
@@ -399,7 +483,8 @@ class TraceGenerator:
                  rate_qps: float = 0.5, burst_factor: float = 4.0,
                  p_burst: float = 0.05, p_calm: float = 0.25,
                  sla_classes: Tuple[SLAClass, ...] = DEFAULT_SLA_CLASSES,
-                 max_skyline_s: int = 16384):
+                 max_skyline_s: int = 16384,
+                 drift: Optional[DriftSpec] = None):
         assert n_unique >= 1 and n_tenants >= 1 and rate_qps > 0
         self.seed = seed
         self.n_unique = n_unique
@@ -411,26 +496,43 @@ class TraceGenerator:
         self.p_calm = p_calm
         self.sla_classes = tuple(sla_classes)
         self.max_skyline_s = max_skyline_s
+        self.drift = drift if (drift is not None and drift.active) else None
         self._children = np.random.SeedSequence(seed).spawn(5)
 
     def _gen(self, i: int) -> np.random.Generator:
         return np.random.default_rng(self._children[i])
 
     def _build_pool(self) -> Tuple[List[Job], List[np.ndarray]]:
-        """Unique-query pool + canonical observed skylines (bounded length)."""
+        """Unique-query pool + canonical observed skylines (bounded length).
+
+        With drift, the ``n_new`` drifted templates are appended after the
+        stationary pool from the *same* continuing generator stream — the
+        stationary prefix stays bitwise the no-drift pool."""
         from repro.workloads.executor import observed_skyline  # no import cycle
         g = self._gen(0)
         jobs: List[Job] = []
         skylines: List[np.ndarray] = []
-        for u in range(self.n_unique):
+
+        def add(u: int, volume_scale: float = 1.0, op_pool=None) -> None:
             for _ in range(32):  # resample pathologically long-running jobs
                 rng = np.random.RandomState(int(g.integers(2**31 - 1)))
-                job = sample_job(u, rng)
+                job = sample_job(u, rng, volume_scale=volume_scale,
+                                 op_pool=op_pool)
                 sky = observed_skyline(job)
                 if len(sky) <= self.max_skyline_s:
                     break
             jobs.append(job)
             skylines.append(sky)
+
+        for u in range(self.n_unique):
+            add(u)
+        if self.drift is not None:
+            scales = self.drift.volume_scales()
+            n_new_op = int(round(self.drift.n_new * self.drift.new_op_frac))
+            for d in range(self.drift.n_new):
+                add(self.n_unique + d, volume_scale=float(scales[d]),
+                    op_pool=(DRIFT_OP_POOL
+                             if d >= self.drift.n_new - n_new_op else None))
         return jobs, skylines
 
     def _arrival_times(self, n: int) -> np.ndarray:
@@ -467,11 +569,16 @@ class TraceGenerator:
         g_arr = self._gen(1)
         pop = self._popularity()
         g_pick, g_tenant = self._gen(3), self._gen(4)
-        tenant_of_job = g_tenant.integers(self.n_tenants, size=self.n_unique)
+        drift = self.drift
+        n_pool = self.n_unique + (drift.n_new if drift is not None else 0)
+        tenant_of_job = g_tenant.integers(self.n_tenants, size=n_pool)
         sla_of_tenant = np.arange(self.n_tenants) % len(self.sla_classes)
         sla_of_job = sla_of_tenant[tenant_of_job]
         limits = np.array([c.slowdown_limit for c in self.sla_classes])
         ideal = np.array([len(s) for s in skylines], np.float64)
+        if drift is not None:
+            intro = drift.intro_fracs()
+            base_cdf = np.cumsum(pop)
         burst = False
         t_prev = 0.0
         start = 0
@@ -485,7 +592,31 @@ class TraceGenerator:
                          else g_arr.random() >= self.p_calm)
             arrivals = np.cumsum(np.concatenate([[t_prev], gaps]))[1:]
             t_prev = float(arrivals[-1])
-            picks = g_pick.choice(self.n_unique, size=m, p=pop)
+            if drift is None:
+                picks = g_pick.choice(self.n_unique, size=m, p=pop)
+            else:
+                # time-varying pick mixture: with probability w(t) (the
+                # rotation ramp, gated on at least one introduced template
+                # being available at phase t) the arrival picks uniformly
+                # from the introduced pool, else from the stationary Zipf
+                # head. Two uniforms per event in one (m, 2) block —
+                # elementwise stream consumption, so chunked draws
+                # concatenate exactly to the bulk draws and phase is a
+                # function of the absolute event index, never the chunking.
+                u = g_pick.random((m, 2))
+                phase = (np.arange(start, start + m, dtype=np.float64)
+                         / max(n_events - 1, 1))
+                ramp = np.clip((phase - drift.onset)
+                               / max(1.0 - drift.onset, 1e-9), 0.0, 1.0)
+                n_avail = np.searchsorted(intro, phase, side="right")
+                w = drift.rotation * ramp * (n_avail > 0)
+                base = np.minimum(
+                    np.searchsorted(base_cdf, u[:, 1], side="right"),
+                    self.n_unique - 1)
+                new = self.n_unique + np.minimum(
+                    (u[:, 1] * np.maximum(n_avail, 1)).astype(np.int64),
+                    np.maximum(n_avail - 1, 0))
+                picks = np.where(u[:, 0] < w, new, base)
             picks = picks.astype(np.int64)
             sla = sla_of_job[picks].astype(np.int64)
             yield TraceChunk(

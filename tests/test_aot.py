@@ -163,6 +163,62 @@ def test_install_pins_without_counting_a_compile():
     assert rs.stats["compiles"] == 0 and not rs.compile_stalled()
 
 
+def test_invalidate_retires_pinned_executables():
+    rs = ReplicaState()
+    rs.install(("a",), lambda: 1)
+    rs.install(("b",), lambda: 2)
+    assert rs.invalidate() == 2
+    assert len(rs.compiled) == 0
+    assert rs.stats["executables_retired"] == 2
+    assert rs.invalidate() == 0               # idempotent on an empty table
+    # a post-invalidate dispatch rebuilds instead of serving a retired fn
+    rs.begin_dispatch()
+    assert rs.get_or_build(("a",), lambda: (lambda: 3))() == 3
+    assert rs.stats["compiles"] == 1
+
+
+def test_invalidate_races_cleanly_with_dispatching_threads():
+    """Model hot-swap retires the old replica's executables while worker
+    threads may still be dispatching on it: every racing ``get_or_build``
+    must return a callable (rebuilt if its key was just retired), the
+    retired counter must equal exactly what the invalidations removed,
+    and nothing may deadlock or corrupt the table."""
+    rs = ReplicaState()
+    stop = threading.Event()
+    errors = []
+
+    def dispatcher(i):
+        try:
+            k = 0
+            while not stop.is_set():
+                rs.begin_dispatch()
+                fn = rs.get_or_build(("k", i, k % 4), lambda: (lambda: 1))
+                assert fn() == 1
+                k += 1
+        except Exception as e:                # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=dispatcher, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    retired = 0
+    for _ in range(50):
+        retired += rs.invalidate()
+        time.sleep(0.001)
+    stop.set()
+    for t in threads:
+        t.join(10.0)
+    assert not errors
+    assert not any(t.is_alive() for t in threads)
+    assert rs.stats["executables_retired"] == retired
+    rs.install(("tail",), lambda: 9)          # guarantee a non-empty table
+    retired += rs.invalidate()
+    assert retired > 0
+    assert len(rs.compiled) == 0
+    assert rs.stats["executables_retired"] == retired
+
+
 # ------------------------------------------------------ AOT == lazy, no trace --
 @pytest.mark.parametrize("family", FAMILIES)
 def test_warm_service_is_bitwise_lazy_and_never_compiles(pipeline, trace,

@@ -1,0 +1,399 @@
+"""repro.mlops — the drift-retraining closed loop: DriftSpec injection
+(bitwise generate/stream parity), PSI/KS/CUSUM detectors (no false
+triggers on stationary residuals), retrain trigger-policy registry,
+training buffer, PCC-cache model-version staleness, and the tentpole
+acceptance: a mid-replay hot-swap of an identical-weights bundle is
+bitwise decision-inert on a seeded 10k replay, and one refit on a drifted
+trace strictly reduces the rolling model error.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Allocator
+from repro.cluster import ClusterConfig
+from repro.cluster.pcc_cache import PCCCache, ShardedPCCCache
+from repro.core.allocator import AllocationPolicy
+from repro.core.dataset import build_dataset
+from repro.core.models import NNConfig
+from repro.core.pipeline import TasqConfig, TasqPipeline
+from repro.mlops import (CusumDetector, DriftMonitor, MLOpsLoop,
+                         ModelBundle, RetrainController, TrainingBuffer,
+                         build_retrain_policy, ks_statistic, psi,
+                         retrain_policies)
+from repro.mlops.retrain import RetrainState
+from repro.serve import AllocationService
+from repro.workloads import DriftSpec, TraceGenerator
+
+try:                                   # optional dep: gate, don't require
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------------ fixtures --
+@pytest.fixture(scope="module")
+def pipeline():
+    cfg = TasqConfig(n_train=160, n_eval=60, nn=NNConfig(epochs=8),
+                     gnn_epochs=3)
+    p = TasqPipeline(cfg).build()
+    p.train("gbdt")
+    p.train("nn", loss="lf2")
+    return p
+
+
+def _drifted_gen(seed=23, n_unique=32, **kw):
+    spec = DriftSpec(n_new=kw.pop("n_new", 48),
+                     onset=kw.pop("onset", 0.2),
+                     rotation=kw.pop("rotation", 0.7),
+                     volume_growth=kw.pop("volume_growth", 6.0))
+    return TraceGenerator(seed=seed, n_unique=n_unique, drift=spec, **kw)
+
+
+# ------------------------------------------------------------ drift injection --
+def test_driftspec_inactive_is_bitwise_the_stationary_trace():
+    """drift=None and an inactive spec are the exact pre-drift generator:
+    same pool, same events, bit for bit."""
+    base = TraceGenerator(seed=3, n_unique=24, rate_qps=6.0).generate(800)
+    off = TraceGenerator(seed=3, n_unique=24, rate_qps=6.0,
+                         drift=DriftSpec(n_new=0)).generate(800)
+    assert len(off.jobs) == len(base.jobs) == 24
+    for k, v in base.arrays().items():
+        np.testing.assert_array_equal(off.arrays()[k], v, err_msg=k)
+    for jb, jo in zip(base.jobs, off.jobs):
+        assert jb.default_tokens == jo.default_tokens
+
+
+@pytest.mark.parametrize("chunk", (7, 64, 500))
+def test_drifted_generate_and_stream_are_bitwise_identical(chunk):
+    """The tentpole parity bar: DriftSpec threads through generate() and
+    stream() identically — fused/streaming replays see the same drifted
+    trace bitwise, at any chunking."""
+    gen = _drifted_gen(rate_qps=6.0)
+    trace = gen.generate(1200)
+    stream = _drifted_gen(rate_qps=6.0).stream(1200, chunk_size=chunk)
+    cols = {k: [] for k in ("arrival_s", "job_index", "tenant", "sla",
+                            "deadline_s")}
+    for ch in stream.chunks():
+        for k in cols:
+            cols[k].append(getattr(ch, k))
+    bulk = trace.arrays()
+    for k, parts in cols.items():
+        np.testing.assert_array_equal(np.concatenate(parts), bulk[k],
+                                      err_msg=k)
+    assert [j.default_tokens for j in stream.jobs] == \
+        [j.default_tokens for j in trace.jobs]
+
+
+def test_driftspec_rotates_mix_and_grows_volume():
+    gen = _drifted_gen(rate_qps=6.0, volume_growth=8.0)
+    trace = gen.generate(4000)
+    jb = trace.arrays()["job_index"]
+    n_u = 32
+    early, late = jb[:400], jb[-400:]
+    # before onset nothing from the introduced pool; late in the trace the
+    # rotation weight routes a solid share of traffic to it
+    assert np.all(early < n_u)
+    late_frac = float(np.mean(late >= n_u))
+    assert 0.3 < late_frac <= 0.85
+    # volume growth: introduced templates are bigger in the typical case
+    # (medians in log space; the lognormal base-cardinality noise makes
+    # raw means a coin flip at these pool sizes)
+    areas = np.array([float(np.sum(s)) for s in trace.skylines])
+    assert np.median(np.log(areas[n_u:])) > np.median(np.log(areas[:n_u]))
+    # intro fractions are staggered across (onset, 1]
+    fr = gen.drift.intro_fracs()
+    assert fr.shape == (48,) and fr[0] > 0.2 and np.all(np.diff(fr) > 0)
+    assert np.all(gen.drift.volume_scales() >= 1.0)
+
+
+# ------------------------------------------------------------------ detectors --
+def test_psi_and_ks_separate_shifted_from_stationary():
+    rng = np.random.default_rng(5)
+    ref = rng.normal(size=4000)
+    same = rng.normal(size=4000)
+    shifted = rng.normal(loc=1.5, size=4000)
+    assert psi(ref, same) < 0.05 < 0.25 < psi(ref, shifted)
+    assert ks_statistic(ref, same) < 0.05
+    assert ks_statistic(ref, shifted) > 0.25
+    assert psi(ref[:5], same) == 0.0          # degenerate windows: no signal
+    assert ks_statistic(ref, same[:0]) == 0.0
+
+
+def _cusum_stationary_quiet(seed: int, mu: float, sigma: float,
+                            batch: int) -> None:
+    det = CusumDetector()        # property must hold at the defaults
+    rng = np.random.default_rng(seed)
+    x = rng.normal(loc=mu, scale=sigma, size=4096)
+    fired = False
+    for i in range(0, x.size, batch):
+        fired = det.update(x[i:i + batch]) or fired
+    assert not fired, (seed, mu, sigma, batch, det.score)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           mu=st.floats(-3.0, 3.0),
+           sigma=st.floats(0.05, 4.0),
+           batch=st.integers(1, 257))
+    def test_cusum_never_false_triggers_on_stationary_residuals(
+            seed, mu, sigma, batch):
+        _cusum_stationary_quiet(seed, mu, sigma, batch)
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_cusum_never_false_triggers_on_stationary_residuals(seed):
+        rng = np.random.default_rng(1000 + seed)
+        _cusum_stationary_quiet(seed, float(rng.uniform(-3, 3)),
+                                float(rng.uniform(0.05, 4.0)),
+                                int(rng.integers(1, 257)))
+
+
+def test_cusum_triggers_on_a_mean_shift_and_resets():
+    det = CusumDetector(k=0.5, h=8.0, n_reference=128)
+    rng = np.random.default_rng(7)
+    assert not det.update(rng.normal(size=256))      # calibrates, quiet
+    assert det.calibrated
+    assert det.update(rng.normal(loc=2.0, size=64))  # concept drift
+    s = det.score
+    det.reset()
+    assert det.score == 0.0 < s and not det.calibrated
+
+
+def test_drift_monitor_fires_typed_signals_and_rebases():
+    # windows of 128: large enough that sampling noise in 10-bin PSI
+    # (E[PSI] ~ (bins-1) * (1/n_ref + 1/n_cur)) sits well under the
+    # 0.25 threshold, so the stationary batch is deterministically quiet
+    mon = DriftMonitor(reference=128, window=128, min_current=64,
+                       cusum_reference=128, cusum_h=5.0)
+    rng = np.random.default_rng(11)
+
+    def batch(t, loc_f, loc_r, n=128):
+        feats = rng.normal(loc=loc_f, size=(n, 3))
+        pred = np.full(n, 10.0)
+        act = pred * np.exp(rng.normal(loc=loc_r, scale=0.1, size=n))
+        return mon.observe(t_s=t, features=feats, predicted_s=pred,
+                           actual_s=act)
+
+    assert batch(0.0, 0.0, 0.0) == []                # reference fill
+    assert batch(1.0, 0.0, 0.0) == []                # stationary: quiet
+    fired = batch(2.0, 3.0, 1.5) + batch(3.0, 3.0, 1.5)
+    kinds = {s.kind for s in fired}
+    assert {"feature_psi", "feature_ks", "residual_cusum"} <= kinds
+    assert mon.drift_score > 1.0
+    assert all(s.score > s.threshold for s in fired)
+    assert all(set(s.to_row()) >= {"kind", "t_s", "score", "threshold"}
+               for s in fired)
+    mon.rebase()                                     # post-swap: new normal
+    assert mon.drift_score == 0.0 and not mon.cusum.calibrated
+    assert batch(4.0, 3.0, 1.5) == []                # new regime = baseline
+
+
+# --------------------------------------------------- retrain policy registry --
+def test_retrain_registry_is_symmetric_to_the_other_registries():
+    assert {"off", "cadence", "signal"} <= set(retrain_policies())
+    with pytest.raises(KeyError, match="unknown retrain policy"):
+        build_retrain_policy("nope")
+    st_ = RetrainState(completed_since_swap=5000, signals_since_swap=0,
+                       buffer_size=200)
+    assert not build_retrain_policy("off").should_retrain(st_)
+    assert build_retrain_policy("cadence", every=2000).should_retrain(st_)
+    assert not build_retrain_policy("cadence", every=9000).should_retrain(st_)
+    sig = build_retrain_policy("signal", min_signals=2, cooldown_s=100.0)
+    st_.signals_since_swap = 2
+    st_.now_s = 50.0
+    assert sig.should_retrain(st_)                   # first swap: no cooldown
+    st_.n_swaps, st_.last_swap_s = 1, 0.0
+    assert not sig.should_retrain(st_)               # inside the cooldown
+    st_.now_s = 150.0
+    assert sig.should_retrain(st_)
+
+
+def test_training_buffer_keeps_recency_and_bounds(pipeline):
+    jobs = TraceGenerator(seed=9, n_unique=12).generate(1).jobs
+    buf = TrainingBuffer(max_entries=8)
+    buf.add(jobs[:8])
+    buf.add(jobs[8:], counts=np.full(4, 3))
+    assert len(buf) == 8                             # oldest 4 evicted
+    assert buf.n_completed == 8 + 12
+    newest = buf.snapshot(2)
+    assert [j.job_id for j in newest] == [11, 10]    # newest first
+    buf.add([jobs[5]])                               # refresh recency
+    assert buf.snapshot(1)[0].job_id == 5
+    assert {j.job_id for j in buf.snapshot()} == set(range(4, 12))
+
+
+# ------------------------------------------- PCC cache model-version staleness --
+def test_cache_version_bump_evicts_curves_of_the_retired_model():
+    """Satellite regression: after a hot-swap bumps the cache's model
+    version, a lookup can never return a curve refined under the old
+    model — the entry is demoted to a miss, refit, and only then hits."""
+    cache = PCCCache()
+    keys = np.arange(6)
+    sky_old = np.full((6, 5), 50.0, np.float32)
+    sky_new = np.full((6, 8), 400.0, np.float32)
+    a0, b0 = cache.refine_batch(keys, sky_old, np.full(6, 5, np.int32),
+                                np.full(6, 200), np.full(6, 50))
+    hit, a, b = cache.lookup(keys)
+    assert hit.all() and np.array_equal(a, a0) and np.array_equal(b, b0)
+    cache.bump_model_version(1)
+    hit2, a2, b2 = cache.lookup(keys)
+    assert not hit2.any()                            # never the old curve
+    assert np.all(a2 == 0.0) and np.all(b2 == 0.0)
+    assert cache.stats["version_stale"] == 6
+    assert len(cache) == 0
+    # the refit under the new regime serves the *new* curve
+    a1, b1 = cache.refine_batch(keys, sky_new, np.full(6, 8, np.int32),
+                                np.full(6, 800), np.full(6, 400))
+    hit3, a3, b3 = cache.lookup(keys)
+    assert hit3.all() and np.array_equal(b3, b1)
+    assert not np.allclose(b3, b0)
+    assert cache.stats["version_stale"] == 6         # no further demotion
+
+
+def test_sharded_cache_version_bump_propagates_to_every_shard():
+    cache = ShardedPCCCache(3)
+    keys = np.arange(9)
+    shard_of = keys % 3
+    cache.refine_batch(shard_of, keys, np.full((9, 4), 30.0, np.float32),
+                       np.full(9, 4, np.int32), np.full(9, 100),
+                       np.full(9, 30))
+    assert cache.lookup(shard_of, keys)[0].all()
+    assert cache.bump_model_version(2) == 2
+    hit, _, _ = cache.lookup(shard_of, keys)
+    assert not hit.any() and cache.stats["version_stale"] == 9
+
+
+# ----------------------------------------------------- refit improves the model --
+def test_one_refit_on_drifted_jobs_strictly_reduces_model_error(pipeline):
+    """A stationary-corpus model mispredicts the drifted regime (new
+    operators, 8x data volume); one RetrainController refit over those
+    jobs strictly reduces the runtime prediction error on them."""
+    gen = _drifted_gen(seed=13, rate_qps=8.0, onset=0.0, rotation=1.0,
+                       volume_growth=8.0)
+    trace = gen.generate(600)
+    drifted = trace.jobs[32:]                        # introduced templates
+    n_nodes = max(len(j.operators) for j in trace.jobs)
+    ds = build_dataset(drifted, seed=0, n_max_nodes=n_nodes)
+    toks = np.array([j.default_tokens for j in drifted], np.float64)
+
+    def runtime_err(model):
+        a, b = model.predict_params(ds)
+        pred = b * toks ** a
+        true = ds.target_b * toks ** ds.target_a
+        return float(np.mean(np.abs(np.log(pred / true))))
+
+    base_err = runtime_err(pipeline.models["nn:lf2"])
+    ctrl = RetrainController(
+        family="nn", policy="cadence",
+        pipeline_cfg=TasqConfig(nn=NNConfig(epochs=40)),
+        max_train=len(drifted), seed=7)
+    ctrl.observe(now_s=0.0, jobs=list(drifted))
+    bundle = ctrl.retrain(now_s=0.0, trigger="test")
+    assert bundle.version == 1 and bundle.n_train == len(drifted)
+    assert bundle.key == "nn:lf2@v1"
+    refit_err = runtime_err(bundle.model)
+    assert refit_err < base_err, (refit_err, base_err)
+
+
+# ---------------------------------------------------- hot-swap decision inertness --
+class _IdentityController:
+    """Trigger one swap of a bundle holding the *same* model object —
+    isolates the swap machinery from any weight change."""
+    policy_name = "identity"
+
+    def __init__(self, model, at: int):
+        self.model, self.at = model, int(at)
+        self.n, self.fired = 0, False
+
+    def observe(self, *, now_s, jobs, counts=None, n_completed=None,
+                n_signals=0):
+        self.n += int(counts.sum()) if counts is not None else len(jobs)
+
+    def should_retrain(self) -> bool:
+        return not self.fired and self.n >= self.at
+
+    def retrain(self, now_s=None, trigger=None) -> ModelBundle:
+        self.fired = True
+        return ModelBundle(version=1, family=self.model.family, loss="",
+                           model=self.model, n_train=0, trigger="identity",
+                           train_s=0.0, created_t_s=float(now_s or 0.0))
+
+
+def test_hot_swap_of_identical_weights_is_bitwise_decision_inert(pipeline):
+    """Tentpole acceptance: swapping in a bundle with identical weights
+    mid-replay yields bitwise-identical decisions on a seeded 10k replay
+    — the swap machinery itself (new service, new fabric, AOT re-warm,
+    atomic repoint) perturbs nothing."""
+    trace = TraceGenerator(seed=11, n_unique=50,
+                           rate_qps=40.0).generate(10_000)
+    model = pipeline.models["nn:lf2"]
+    cfg = ClusterConfig(capacity=8192, epoch_s=8.0, n_shards=2,
+                        use_cache=False)
+
+    def replay(with_swap: bool):
+        svc = AllocationService(model, AllocationPolicy(max_slowdown=0.05))
+        alloc = Allocator(svc, n_shards=2)
+        loop = None
+        if with_swap:
+            loop = MLOpsLoop(alloc, _IdentityController(model, at=2500))
+        rep = alloc.run_cluster(trace, cfg, mlops=loop)
+        return rep, loop
+
+    plain, _ = replay(False)
+    swapped, loop = replay(True)
+    assert len(loop.swaps) == 1                      # the swap really ran
+    assert loop.swaps[0]["n_precompiled"] > 0        # and really re-warmed
+    # the swapped-in service never compiled on the hot path: the warm grid
+    # covered every post-swap decision (install() pins count no compiles)
+    assert loop.allocator.service.stats["compiles"] == 0
+    assert loop.allocator.model_version == 1
+    np.testing.assert_array_equal(swapped.alloc_errors, plain.alloc_errors)
+    for key in ("n_completed", "n_rejected", "sla_violation_rate",
+                "cost_token_s", "p99_slowdown"):
+        assert swapped.metrics.get(key) == plain.metrics.get(key), key
+    assert swapped.n_epochs == plain.n_epochs
+
+
+# ------------------------------------------------------- the closed loop, live --
+def test_signal_triggered_loop_swaps_and_serves_warm(pipeline):
+    """Monitor -> trigger -> train -> warm -> swap end to end on a drifted
+    replay: the CUSUM fires, the controller refits, the allocator swaps,
+    and the swapped-in service serves with zero hot-path compiles while
+    the cache demotes curves of the retired model."""
+    gen = _drifted_gen(seed=29, n_unique=48, n_new=64, onset=0.1,
+                       rotation=0.8, volume_growth=6.0, rate_qps=8.0)
+    trace = gen.generate(2200)
+    svc = AllocationService(pipeline.models["nn:lf2"],
+                            AllocationPolicy(max_slowdown=0.05))
+    alloc = Allocator(svc, n_shards=2)
+    ctrl = RetrainController(
+        family="nn", policy="signal",
+        policy_overrides={"min_signals": 1, "cooldown_s": 1e12},
+        pipeline_cfg=TasqConfig(nn=NNConfig(epochs=8)),
+        max_train=120, seed=5)
+    mon = DriftMonitor(reference=64, window=64, min_current=32,
+                       cusum_reference=64, cusum_h=4.0)
+    loop = MLOpsLoop(alloc, ctrl, mon)
+    rep = alloc.run_cluster(
+        trace, ClusterConfig(capacity=16384, n_shards=2), mlops=loop)
+
+    assert len(loop.monitor.signals) >= 1
+    assert len(loop.swaps) == 1                      # cooldown caps at one
+    assert alloc.model_version == 1
+    assert alloc.service is not svc                  # really repointed
+    assert alloc.frontend.fabric.service is alloc.service
+    # the swapped-in stack never compiled on the hot path
+    assert alloc.service.stats["compiles"] == 0
+    assert loop.swaps[0]["cold_start_s"] > 0
+    # the retired replica's executables were retired, and the run's report
+    # still accounts for the pre-swap segment (fold, not reset)
+    assert svc.replica.stats["executables_retired"] > 0
+    assert rep.service_stats["queries"] > 0
+    assert rep.service_stats["executables_retired"] > 0
+    assert rep.metrics["n_completed"] > 0
+    out = loop.report()
+    assert out["n_swaps"] == 1 and out["model_version"] == 1
+    assert out["swaps"][0]["trigger"] == "signal"
+    assert out["rolling_model_error"] > 0

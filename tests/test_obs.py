@@ -295,10 +295,29 @@ def test_flight_recorder_deterministic_sampling_and_jsonl(tmp_path):
         assert row["provenance"] in ("MODEL", "HISTORY")
         assert {"seq", "tokens", "runtime_s", "cost_token_s", "price",
                 "shard", "a", "b", "observed_tokens", "template_id",
-                "sla", "deadline_s"} <= set(row)
+                "sla", "deadline_s", "model_version",
+                "drift_score"} <= set(row)
+        assert row["model_version"] == 0 and row["drift_score"] == 0.0
+
+
+def test_flight_recorder_stamps_mlops_provenance():
+    """Rows carry the model version + drift score current at record time:
+    a hot-swap (version bump) and a drift-monitor stamp are visible on
+    every row recorded after them."""
+    req, dec = _columnar_pair(40)
+    fr = FlightRecorder(sample_rate=1.0)
+    fr.record(req, dec)
+    fr.model_version = 2                  # what Allocator.swap_model sets
+    fr.drift_score = 1.75                 # what DriftMonitor stamps
+    fr.record(req, dec)
+    rows = fr.rows()
+    assert [r["model_version"] for r in rows[:40]] == [0] * 40
+    assert [r["model_version"] for r in rows[40:]] == [2] * 40
+    assert all(r["drift_score"] == 0.0 for r in rows[:40])
+    assert all(r["drift_score"] == 1.75 for r in rows[40:])
     # rate extremes
     all_of_it = FlightRecorder(sample_rate=1.0)
-    assert all_of_it.record(req, dec) == 400
+    assert all_of_it.record(req, dec) == 40
     none_of_it = FlightRecorder(sample_rate=0.0)
     assert none_of_it.record(req, dec) == 0
 
